@@ -1,0 +1,25 @@
+"""Fig. 2: effect of scale-up-domain size / TP cap on per-GPU throughput
+when scaling the 480B workload (analytic perf model)."""
+from repro.core.perf_model import Hardware, Workload, best_config
+
+
+def run():
+    wl = Workload()  # 480B, 16M tokens/minibatch
+    rows = []
+    base = None
+    for n_gpus in (8_192, 16_384, 32_768):
+        for tp_limit in (8, 16, 32):
+            hw = Hardware(domain_size=tp_limit)
+            r = best_config(hw, wl, n_gpus, tp_limit=tp_limit)
+            if r is None:
+                continue
+            if base is None:
+                base = r["per_gpu_tput"]
+            rows.append({
+                "name": f"fig2/gpus{n_gpus}/nvl{tp_limit}",
+                "value": round(r["per_gpu_tput"] / base, 3),
+                "derived": f"tp={r['tp']} pp={r['pp']} dp={r['dp']} "
+                           f"bubble={r['pp_bubble']/r['total']:.2f} "
+                           "(paper: NVL8 vs NVL32 gap grows with scale)",
+            })
+    return rows

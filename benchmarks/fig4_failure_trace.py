@@ -1,0 +1,31 @@
+"""Fig. 4: Llama3-calibrated failure traces — failed fraction over time."""
+import numpy as np
+
+from repro.core.failure_model import (
+    FailureTraceConfig, fraction_time_above, simulate_trace,
+    steady_state_failed_fraction,
+)
+
+
+def run():
+    rows = []
+    for mult in (1.0, 3.0):
+        cfg = FailureTraceConfig(rate_multiplier=mult, seed=3)
+        t, failed = simulate_trace(cfg)
+        frac = failed / cfg.n_gpus
+        rows.append({
+            "name": f"fig4/rate{mult:g}x/mean_failed_frac",
+            "value": round(float(frac.mean()), 5),
+            "derived": f"steady_state={steady_state_failed_fraction(cfg):.5f}",
+        })
+        rows.append({
+            "name": f"fig4/rate{mult:g}x/peak_failed_frac",
+            "value": round(float(frac.max()), 5),
+            "derived": "paper(3x): ~2x higher peak",
+        })
+        rows.append({
+            "name": f"fig4/rate{mult:g}x/time_above_0.1%",
+            "value": round(fraction_time_above(cfg, 1e-3), 3),
+            "derived": "paper(1x): 0.81 (cold-start trace)",
+        })
+    return rows

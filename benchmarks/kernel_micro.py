@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: wall time of the interpret-mode kernels is NOT
+TPU-meaningful — we report the oracle-vs-kernel agreement and the kernels'
+arithmetic intensity (useful for the roofline discussion) instead, plus
+CPU us/call for the jnp reference paths as a regression canary."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(f, *a, n=5):
+    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    b, h, kvh, s, d = 1, 8, 2, 1024, 128
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, kvh, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, kvh, s, d)), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(fa, q, k, v)
+    flops = 4 * b * h * s * s * d
+    ai = flops / (2 * (q.size + 2 * k.size) + 2 * q.size)
+    rows.append({
+        "name": "kernel/flash_attn_ref_cpu",
+        "value": round(us, 1),
+        "derived": f"us/call; arithmetic_intensity={ai:.0f} flop/B (MXU-bound on TPU)",
+    })
+
+    x = jnp.asarray(rng.normal(size=(4096, 4096)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(4096,)), jnp.bfloat16)
+    rn = jax.jit(lambda x, w: ref.rmsnorm_ref(x, w))
+    rows.append({
+        "name": "kernel/rmsnorm_ref_cpu",
+        "value": round(_time(rn, x, w), 1),
+        "derived": f"us/call; AI≈0.75 flop/B (HBM-bound ⇒ fusion win)",
+    })
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,value,derived`` CSV (and writes results/bench.csv)."""
+import csv
+import os
+import sys
+import time
+
+
+MODULES = [
+    "fig2_scaling",
+    "fig3_availability",
+    "fig4_failure_trace",
+    "fig6_throughput_loss",
+    "fig7_spares",
+    "fig8_reshard_overhead",
+    "fig9_ntp_overhead",
+    "fig10_blast_radius",
+    "table1_power",
+    "roofline",
+    "fig11_model_validation",
+    "kernel_micro",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    all_rows = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            rows = [{"name": f"{name}/ERROR", "value": 0,
+                     "derived": f"{type(e).__name__}: {e}"}]
+        dt = time.time() - t0
+        print(f"# {name} ({dt:.1f}s)", flush=True)
+        for r in rows:
+            print(f"{r['name']},{r['value']},{r['derived']}")
+        all_rows.extend(rows)
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["name", "value", "derived"])
+        w.writeheader()
+        w.writerows(all_rows)
+    print(f"# wrote results/bench.csv ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table 1 + §6.4 power sensitivity."""
+from repro.core.policies import table1_settings
+from repro.core.power import PowerModel
+
+
+def run():
+    rows = []
+    for r in table1_settings():
+        rows.append({
+            "name": f"table1/{r['config']}",
+            "value": r["rel_iter_time"],
+            "derived": f"local_bs={r['local_bs']} power={r['power']}x "
+                       "(paper: TP30 bs7 1.002, TP30-PW 1.15x .978, "
+                       "TP28 bs6 1.003, TP28-PW 1.3x .999)",
+        })
+    pm = PowerModel()
+    for p in (1.1, 1.2, 1.3):
+        rows.append({
+            "name": f"table1/perf_per_watt@{p}x",
+            "value": round(pm.perf_per_watt_penalty(p), 4),
+            "derived": "paper §6.4: -2.8% @1.1x, -6.5% @1.2x",
+        })
+    return rows

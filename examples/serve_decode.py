@@ -1,0 +1,67 @@
+"""Serving example: prefill a batch of prompts, then batched greedy decode
+against the KV cache — the serve path the decode_32k / long_500k dry-run
+shapes exercise at production scale.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma2-9b --new 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.new
+    cache = m.init_cache(args.batch, max_len, jnp.float32)
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = m._encode(
+            params,
+            jax.random.normal(jax.random.PRNGKey(2),
+                              (args.batch, cfg.encoder.enc_seq, cfg.d_model)) * 0.1,
+        )
+
+    t0 = time.time()
+    logits, cache = jax.jit(m.prefill)(params, prompts, cache) if enc_out is None \
+        else m.prefill(params, prompts, cache)
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1)[:, None]
+    print(f"prefill {args.batch}×{args.prompt_len}: {time.time()-t0:.2f}s")
+
+    decode = jax.jit(m.decode_step) if enc_out is None else m.decode_step
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.new - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, cache, tok, pos) if enc_out is None else \
+            decode(params, cache, tok, pos, enc_out=enc_out)
+        tok = jnp.argmax(logits[:, 0, : cfg.vocab_size], -1)[:, None]
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.new} tokens × {args.batch} seqs in {dt:.2f}s "
+          f"({args.new*args.batch/dt:.1f} tok/s on CPU)")
+    print("sample:", gen[0, :16].tolist())
+    assert bool(jnp.isfinite(logits).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Minimal sharding-aware checkpointing: gather to host, write one .npz
+atomically, restore with device_put back to the original shardings.
+
+(The paper's recovery story — §3.3 — restarts from a checkpoint with ranks
+re-packed; examples/train_ntp_failure.py uses exactly this path.)
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
+    def host(v):
+        a = np.asarray(jax.device_get(v))
+        # numpy can't round-trip ml_dtypes (bf16 etc.) through savez: store
+        # as float32; load_checkpoint casts back to the target leaf dtype.
+        if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+            a = a.astype(np.float32)
+        return a
+
+    flat = {k: host(v) for k, v in _flatten(tree).items()}
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_checkpoint(path: str, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; optionally device_put with
+    a matching pytree of shardings. Returns (tree, step|None)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+
+    paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
+    treedef = jax.tree_util.tree_structure(like_tree)
+    leaves = []
+    for path, like in paths:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = flat[key]
+        assert arr.shape == like.shape, (key, arr.shape, like.shape)
+        leaves.append(jax.numpy.asarray(arr).astype(like.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step

@@ -1,0 +1,26 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    EncoderSpec,
+    MoESpec,
+    RGLRUSpec,
+    SSMSpec,
+    all_archs,
+    get_arch,
+    reduced,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, get_shape  # noqa: F401
+
+# registration side effects (order = the assignment table)
+from repro.configs import llama4_scout  # noqa: F401,E402
+from repro.configs import qwen2_7b  # noqa: F401,E402
+from repro.configs import whisper_small  # noqa: F401,E402
+from repro.configs import mamba2_780m  # noqa: F401,E402
+from repro.configs import recurrentgemma_9b  # noqa: F401,E402
+from repro.configs import gemma2_9b  # noqa: F401,E402
+from repro.configs import arctic_480b  # noqa: F401,E402
+from repro.configs import granite_3_2b  # noqa: F401,E402
+from repro.configs import chameleon_34b  # noqa: F401,E402
+from repro.configs import minitron_4b  # noqa: F401,E402
+
+ARCH_IDS = tuple(all_archs().keys())

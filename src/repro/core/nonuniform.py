@@ -1,0 +1,168 @@
+"""Nonuniform TP layouts for a whole mesh: per-replica health -> per-weight
+stacked reshard tables, plus packing between canonical (global) weights and
+the padded per-rank unit buffers used inside shard_map.
+
+The JAX/GSPMD adaptation (DESIGN.md §3.1): every rank owns a uniform
+``(U, unit, ...)`` buffer; a replica degraded to n_r active ranks holds all k
+units on its first n_r ranks (its failed ranks hold zeros — algebraically
+inert for Megatron-TP matmuls). U = ceil-max over every replica's layouts, so
+one SPMD program serves the whole nonuniform job.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import shard_mapping as sm
+
+
+@dataclass(frozen=True)
+class FailurePlan:
+    """Static health of one training job on a (data=D, model=N1) mesh.
+
+    replica_tp[d] = number of still-functional ranks in replica d's scale-up
+    domain (the resource manager packs failures into low replica ids).
+    """
+
+    n1: int
+    replica_tp: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert all(1 <= t <= self.n1 for t in self.replica_tp)
+
+    @property
+    def d(self) -> int:
+        return len(self.replica_tp)
+
+    @property
+    def n_sync(self) -> int:
+        """Sync TP degree — the paper syncs at the minimum degree ("the
+        bandwidth is limited by the reduced number of shards anyway")."""
+        return min(self.replica_tp)
+
+    @property
+    def healthy(self) -> bool:
+        return all(t == self.n1 for t in self.replica_tp)
+
+    def local_batch_fraction(self, base_local_batch: int) -> np.ndarray:
+        """Paper §3.1: degraded replicas reduce local batch ∝ active ranks
+        (floor to whole samples — the quantization the paper notes)."""
+        return np.array(
+            [
+                max(1, int(np.floor(base_local_batch * t / self.n1)))
+                for t in self.replica_tp
+            ]
+        )
+
+
+@dataclass(frozen=True)
+class StackedTables:
+    """Per-replica reshard tables stacked over the data axis (jnp arrays),
+    indexed inside shard_map by (axis_index('data'), axis_index('model'))."""
+
+    send_idx: jnp.ndarray  # (D, n, n, s_max)
+    recv_idx: jnp.ndarray  # (D, n, n, s_max)
+    stay_idx: jnp.ndarray  # (D, n, U)
+    buf: int
+    s_max: int
+
+
+@dataclass(frozen=True)
+class WeightPlan:
+    """Everything needed to run one weight nonuniformly."""
+
+    k: int                 # partition units
+    buf: int               # units per rank buffer (U)
+    comp_slots: np.ndarray  # (D, n, U) unit id per comp slot, -1 pad
+    sync_slots: np.ndarray  # (D, n, U) unit id per sync slot, -1 pad
+    pre: StackedTables     # comp -> sync
+    post: StackedTables    # sync -> comp
+
+    @property
+    def comp_mask(self) -> np.ndarray:
+        return self.comp_slots >= 0
+
+
+def _stack(tabs, buf: int) -> StackedTables:
+    s_max = max(t.s_max for t in tabs)
+
+    def pad(a, t):
+        out = np.full(a.shape[:-1] + (s_max,), buf, dtype=np.int32)
+        out[..., : a.shape[-1]] = a
+        return out
+
+    return StackedTables(
+        send_idx=jnp.asarray(np.stack([pad(t.send_idx, t) for t in tabs])),
+        recv_idx=jnp.asarray(np.stack([pad(t.recv_idx, t) for t in tabs])),
+        stay_idx=jnp.asarray(np.stack([t.stay_idx for t in tabs])),
+        buf=buf,
+        s_max=s_max,
+    )
+
+
+@lru_cache(maxsize=None)
+def _weight_plan_cached(k: int, n1: int, replica_tp: Tuple[int, ...]) -> WeightPlan:
+    n_sync = min(replica_tp)
+    comps = [sm.comp_layout(k, nr, n_sync) for nr in replica_tp]
+    # degraded replicas live on the full n1-wide axis: re-express on n1 ranks
+    comps = [sm.make_layout(c.assignment, n1) for c in comps]
+    sync = sm.sync_layout(k, n1, n_sync)
+    buf = max([sync.max_count] + [c.max_count for c in comps])
+
+    pre = [sm.reshard_tables(c, sync, buf) for c in comps]
+    post = [sm.reshard_tables(sync, c, buf) for c in comps]
+
+    def slots(layout):
+        out = np.full((n1, buf), -1, dtype=np.int64)
+        out[:, : layout.max_count] = layout.slots
+        return out
+
+    return WeightPlan(
+        k=k,
+        buf=buf,
+        comp_slots=np.stack([slots(c) for c in comps]),
+        sync_slots=np.stack([slots(sync)] * len(replica_tp)),
+        pre=_stack(pre, buf),
+        post=_stack(post, buf),
+    )
+
+
+def weight_plan(k: int, plan: FailurePlan) -> WeightPlan:
+    return _weight_plan_cached(k, plan.n1, tuple(plan.replica_tp))
+
+
+# ---------------------------------------------------------------------------
+# packing canonical <-> nonuniform global buffers
+
+def pack_global(w: np.ndarray, wp: WeightPlan, unit: int) -> np.ndarray:
+    """Canonical weight (k*unit, ...) -> global NTP buffer
+    (D, n1*buf, unit, ...) laid out so shard_map in_specs P('data','model')
+    hands each rank its (buf, unit, ...) comp-layout block."""
+    k, buf = wp.k, wp.buf
+    d, n1, _ = wp.comp_slots.shape
+    cols = w.shape[1:]
+    wu = np.asarray(w).reshape(k, unit, *cols)
+    out = np.zeros((d, n1, buf, unit) + cols, wu.dtype)
+    for dd in range(d):
+        sl = wp.comp_slots[dd]
+        valid = sl >= 0
+        out[dd][valid] = wu[sl[valid]]
+    return out.reshape(d, n1 * buf, unit, *cols)
+
+
+def unpack_global(buf_arr: np.ndarray, wp: WeightPlan, unit: int, replica: int = 0) -> np.ndarray:
+    """Inverse of pack_global for one replica (e.g. checkpointing)."""
+    k, buf = wp.k, wp.buf
+    d, n1, _ = wp.comp_slots.shape
+    arr = np.asarray(buf_arr).reshape(d, n1, buf, *buf_arr.shape[2:])[replica]
+    cols = arr.shape[3:]
+    out = np.zeros((k, unit) + cols, arr.dtype)
+    sl = wp.comp_slots[replica]
+    valid = sl >= 0
+    out[sl[valid]] = arr[valid]
+    return out.reshape(k * unit, *cols)

@@ -1,0 +1,362 @@
+"""NTP training: transformer layers computed under nonuniform tensor
+parallelism inside shard_map, with NTP gradient synchronization.
+
+This is the paper's prototype workload (§5.1: transformer layers, 2+ DP
+replicas, one at reduced TP) expressed JAX-natively:
+
+* every TP-sharded weight lives in a padded unit buffer (core/nonuniform.py);
+  a degraded replica holds all units on its first n_r ranks, failed ranks
+  hold zeros (algebraically inert — DESIGN.md §3.1);
+* forward/backward is Megatron-TP: per-unit partial sums + psum('model');
+* gradient sync is reshard → psum('data') → reshard (core/reshard.py), the
+  paper's pre/post-sync resharding with a 1:1 sync-rank mapping;
+* degraded replicas process a reduced local batch (sample masking — the
+  paper's local-batch reduction; NTP-PW instead keeps full batch and
+  power-boosts, which is modeled analytically in core/power.py).
+
+Also provides the DP-DROP baseline (drop every replica containing a failure)
+and a dense single-logical-copy reference for equivalence tests.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.core import nonuniform as nu
+from repro.core import reshard as rs
+
+
+@dataclass(frozen=True)
+class NTPModelConfig:
+    """The prototype transformer (paper §5.1 profiles hidden 6144/12288; we
+    default smaller for CPU tests but the structure is identical)."""
+
+    d_model: int = 256
+    n_kv_groups: int = 8          # attention partition units
+    q_per_kv: int = 2
+    head_dim: int = 32
+    d_ff: int = 1024
+    unit_rows: int = 128          # MLP partition unit (TPU lane-aligned)
+    n_layers: int = 2
+    vocab: int = 512
+    # MoE mode (DESIGN.md §4: the expert is the natural NTP unit — a lost
+    # rank's experts are re-placed by Algorithm 1 like head/row units)
+    n_experts: int = 0            # 0 = dense MLP
+    top_k: int = 2
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def k_ff(self) -> int:
+        if self.is_moe:
+            return self.n_experts  # partition unit = whole expert
+        assert self.d_ff % self.unit_rows == 0
+        return self.d_ff // self.unit_rows
+
+
+# ---------------------------------------------------------------------------
+# canonical (dense) params + packing
+
+def init_canonical(cfg: NTPModelConfig, key) -> Dict:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    d, g, q, h = cfg.d_model, cfg.n_kv_groups, cfg.q_per_kv, cfg.head_dim
+
+    def layer(k):
+        kk = jax.random.split(k, 7)
+        s = d ** -0.5
+        ffu = cfg.d_ff if cfg.is_moe else cfg.unit_rows  # rows per ffn unit
+        p = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            # unit-major layouts: (k_units, ...)
+            "wq": jax.random.normal(kk[0], (g, d, q * h)) * s,
+            "wk": jax.random.normal(kk[1], (g, d, h)) * s,
+            "wv": jax.random.normal(kk[2], (g, d, h)) * s,
+            "wo": jax.random.normal(kk[3], (g, q * h, d)) * (q * h) ** -0.5,
+            "A": jax.random.normal(kk[4], (cfg.k_ff, d, ffu)) * s,
+            "B": jax.random.normal(kk[5], (cfg.k_ff, ffu, d)) * cfg.d_ff ** -0.5,
+        }
+        if cfg.is_moe:
+            p["router"] = jax.random.normal(kk[6], (d, cfg.n_experts)) * s
+        return p
+
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02,
+        "head": jax.random.normal(ks[0], (d, cfg.vocab)) * d ** -0.5,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [layer(ks[i + 1]) for i in range(cfg.n_layers)],
+    }
+
+
+def _plans(cfg: NTPModelConfig, fplan: nu.FailurePlan):
+    return {
+        "attn": nu.weight_plan(cfg.n_kv_groups, fplan),
+        "mlp": nu.weight_plan(cfg.k_ff, fplan),
+    }
+
+
+def _pack_unit(w, wp: nu.WeightPlan):
+    """Canonical unit-major weight (k, *unit_shape) -> (D, n1*buf, *unit)."""
+    k = w.shape[0]
+    flat = np.asarray(w).reshape(k, 1, *w.shape[1:])  # unit dim = 1 group
+    return jnp.asarray(nu.pack_global(flat.reshape(k, -1), wp, 1).reshape(
+        wp.comp_slots.shape[0], -1, *w.shape[1:]
+    ))
+
+
+def pack_params(cfg: NTPModelConfig, canonical: Dict, fplan: nu.FailurePlan) -> Dict:
+    plans = _plans(cfg, fplan)
+    out = {
+        "embed": canonical["embed"],
+        "head": canonical["head"],
+        "final_norm": canonical["final_norm"],
+        "layers": [],
+    }
+    for lp in canonical["layers"]:
+        out["layers"].append(
+            {
+                "ln1": lp["ln1"],
+                "ln2": lp["ln2"],
+                "wq": _pack_unit(lp["wq"], plans["attn"]),
+                "wk": _pack_unit(lp["wk"], plans["attn"]),
+                "wv": _pack_unit(lp["wv"], plans["attn"]),
+                "wo": _pack_unit(lp["wo"], plans["attn"]),
+                "A": _pack_unit(lp["A"], plans["mlp"]),
+                "B": _pack_unit(lp["B"], plans["mlp"]),
+                **({"router": lp["router"]} if "router" in lp else {}),
+            }
+        )
+    return out
+
+
+def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan: nu.FailurePlan,
+                  replica: int = 0) -> Dict:
+    plans = _plans(cfg, fplan)
+
+    def unp(w, wp):
+        arr = np.asarray(w)
+        flat = arr.reshape(arr.shape[0], arr.shape[1], 1, -1)  # explicit unit dim
+        out = nu.unpack_global(flat, wp, 1, replica).reshape(wp.k, *arr.shape[2:])
+        return jnp.asarray(out)
+
+    out = {
+        "embed": packed["embed"],
+        "head": packed["head"],
+        "final_norm": packed["final_norm"],
+        "layers": [],
+    }
+    for lp in packed["layers"]:
+        out["layers"].append(
+            {
+                "ln1": lp["ln1"],
+                "ln2": lp["ln2"],
+                "wq": unp(lp["wq"], plans["attn"]),
+                "wk": unp(lp["wk"], plans["attn"]),
+                "wv": unp(lp["wv"], plans["attn"]),
+                "wo": unp(lp["wo"], plans["attn"]),
+                "A": unp(lp["A"], plans["mlp"]),
+                "B": unp(lp["B"], plans["mlp"]),
+                **({"router": lp["router"]} if "router" in lp else {}),
+            }
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward (local math inside shard_map)
+
+def _rms(x, w):
+    v = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(v + 1e-6) * w
+
+
+def _attn_local(lp, h, cfg: NTPModelConfig):
+    """h: (B,S,d) replicated; unit-buffered weights (U, d, ...)."""
+    b, s, d = h.shape
+    q = jnp.einsum("bsd,udr->bsur", h, lp["wq"])
+    k = jnp.einsum("bsd,udh->bsuh", h, lp["wk"])
+    v = jnp.einsum("bsd,udh->bsuh", h, lp["wv"])
+    u = q.shape[2]
+    q = q.reshape(b, s, u, cfg.q_per_kv, cfg.head_dim)
+    scores = jnp.einsum("bsugh,btuh->bugst", q, k) * cfg.head_dim ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bugst,btuh->bsugh", probs.astype(h.dtype), v)
+    out = out.reshape(b, s, u, cfg.q_per_kv * cfg.head_dim)
+    y = jnp.einsum("bsur,urd->bsd", out, lp["wo"])
+    return jax.lax.psum(y, "model")
+
+
+def _mlp_local(lp, h):
+    a = jax.nn.gelu(jnp.einsum("bsd,udf->bsuf", h, lp["A"]))
+    z = jnp.einsum("bsuf,ufd->bsd", a, lp["B"])
+    return jax.lax.psum(z, "model")
+
+
+def _moe_local(lp, h, unit_ids, cfg: NTPModelConfig):
+    """NTP-MoE ffn: partition unit = whole expert (DESIGN.md §4). Each rank
+    computes its local expert units on all tokens (dense-masked prototype
+    formulation), gated by the replicated router; zero-padded units are
+    inert (gelu(0)·0) and their gates are masked.
+
+    h: (B,S,d); unit_ids: (U,) global expert id per buffer slot, -1 = pad.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", h, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    gates = (jax.nn.one_hot(idx, e, dtype=jnp.float32) * w[..., None]).sum(-2)
+
+    a = jax.nn.gelu(jnp.einsum("bsd,udf->bsuf", h, lp["A"]))
+    y = jnp.einsum("bsuf,ufd->bsud", a, lp["B"])
+    gate_u = gates[..., jnp.clip(unit_ids, 0)] * (unit_ids >= 0)
+    z = jnp.einsum("bsud,bsu->bsd", y, gate_u.astype(y.dtype))
+    return jax.lax.psum(z, "model")
+
+
+def _forward_local(cfg: NTPModelConfig, params, tokens, sample_mask,
+                   moe_unit_ids=None):
+    """tokens: (B, S+1) local; sample_mask: (B,) bool. Returns global loss.
+    moe_unit_ids: (U,) this rank's global expert id per slot (MoE mode)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = params["embed"][inp]
+    for lp in params["layers"]:
+        x = x + _attn_local(lp, _rms(x, lp["ln1"]), cfg)
+        if cfg.is_moe:
+            x = x + _moe_local(lp, _rms(x, lp["ln2"]), moe_unit_ids, cfg)
+        else:
+            x = x + _mlp_local(lp, _rms(x, lp["ln2"]))
+    logits = jnp.einsum("bsd,dv->bsv", _rms(x, params["final_norm"]), params["head"])
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    tok_loss = (lse - ll) * sample_mask[:, None]
+    total = jax.lax.psum(tok_loss.sum(), "data")
+    count = jax.lax.psum((sample_mask[:, None] * jnp.ones_like(tok_loss)).sum(), "data")
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# train step builder
+
+UNIT_KEYS = ("wq", "wk", "wv", "wo", "A", "B")
+
+
+def make_ntp_train_step(
+    cfg: NTPModelConfig,
+    fplan: nu.FailurePlan,
+    mesh,
+    *,
+    mode: str = "ntp",           # 'ntp' | 'dpdrop' | 'uniform'
+    local_batch: int = 4,
+    lr: float = 1e-2,
+):
+    """Returns (step, param_in_specs). step(params, batch) -> (params, loss).
+    SGD update (the sync math, not the optimizer, is what NTP changes)."""
+    plans = _plans(cfg, fplan)
+    d_axis = fplan.d
+
+    # per-replica usable local batch
+    if mode == "ntp":
+        lb = fplan.local_batch_fraction(local_batch)
+    elif mode == "dpdrop":
+        lb = np.array([
+            local_batch if t == fplan.n1 else 0 for t in fplan.replica_tp
+        ])
+    else:
+        lb = np.array([local_batch] * d_axis)
+    lb_table = jnp.asarray(lb, jnp.int32)
+
+    unit_spec = P("data", "model")
+    rep_spec = P()
+
+    def pspec(path_key):
+        return unit_spec if path_key in UNIT_KEYS else rep_spec
+
+    def tree_specs(params):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: pspec(path[-1].key if hasattr(path[-1], "key") else None),
+            params,
+        )
+
+    def _key(path):
+        return path[-1].key if hasattr(path[-1], "key") else None
+
+    def _squeeze(path, x):
+        return x.reshape(x.shape[1:]) if _key(path) in UNIT_KEYS else x
+
+    def global_loss(params, batch):
+        """Scalar loss via shard_map; AD happens OUTSIDE the shard_map so
+        jax seeds exactly one cotangent (grad-inside would seed one per rank
+        and over-count every replicated path)."""
+        specs = tree_specs(params)
+
+        moe_slots = (
+            jnp.asarray(plans["mlp"].comp_slots, jnp.int32)
+            if cfg.is_moe else None
+        )
+
+        def body(p_local, tokens_local):
+            dd = jax.lax.axis_index("data")
+            rr = jax.lax.axis_index("model")
+            sample_mask = (
+                jnp.arange(tokens_local.shape[0]) < lb_table[dd]
+            ).astype(jnp.float32)
+            p_sq = jax.tree_util.tree_map_with_path(_squeeze, p_local)
+            uids = moe_slots[dd, rr] if moe_slots is not None else None
+            return _forward_local(cfg, p_sq, tokens_local, sample_mask, uids)
+
+        return shard_map(
+            body, mesh=mesh, in_specs=(specs, P("data", None)),
+            out_specs=P(), check_vma=False,
+        )(params, batch)
+
+    def sync_grads(grads):
+        """NTP gradient synchronization (paper §3.1/§4.1) on the global
+        unit-buffered grads: reshard -> psum('data') -> reshard, per weight."""
+        specs = tree_specs(grads)
+
+        def body(g_local):
+            def sync(path, g):
+                key = _key(path)
+                if key not in UNIT_KEYS:
+                    # replicated params: AD through shard_map already summed
+                    # every rank's contribution — complete as-is.
+                    return g
+                wp = plans["attn"] if key in ("wq", "wk", "wv", "wo") else plans["mlp"]
+                g = g.reshape(g.shape[1:])  # drop replica dim
+                orig_shape = g.shape
+                if mode == "ntp" and not fplan.healthy:
+                    g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
+                    g = g.reshape(orig_shape)
+                else:
+                    g = jax.lax.psum(g, "data")
+                return g.reshape((1,) + g.shape)
+
+            return jax.tree_util.tree_map_with_path(sync, g_local)
+
+        return shard_map(
+            body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+            check_vma=False,
+        )(grads)
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(global_loss)(params, batch)
+        grads = sync_grads(grads)
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_params, loss
+
+    return step, None

@@ -1,0 +1,146 @@
+"""Analytic hybrid-parallel performance model (paper §4.2).
+
+The paper's results (Fig. 2, Table 1, Figs. 6/7) come from a calibrated
+simulator; this is our equivalent: a closed-form iteration-time model with
+compute / TP-collective / PP-bubble / DP-allreduce / NTP-reshard terms. The
+Fig.-11 analogue validates it against the XLA-derived roofline terms from the
+dry-run artifacts (benchmarks/fig11_model_validation.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Hardware:
+    chip_flops: float = 197e12        # bf16 peak / chip
+    hbm_bw: float = 819e9
+    scaleup_bw: float = 9e11          # per-GPU intra-domain (NVL/ICI) bytes/s
+    scaleout_bw: float = 1e11         # per-GPU inter-domain bytes/s
+    domain_size: int = 32
+    mfu_ceiling: float = 0.62         # achievable matmul efficiency
+
+
+@dataclass(frozen=True)
+class Workload:
+    n_params: float = 480e9
+    n_layers: int = 100
+    d_model: int = 20480
+    seq_len: int = 16384
+    minibatch_tokens: float = 16e6
+    act_bytes: int = 2
+
+
+@dataclass(frozen=True)
+class Parallel:
+    tp: int = 32
+    pp: int = 8
+    dp: int = 128
+    microbatch_seqs: int = 1
+
+    @property
+    def gpus(self) -> int:
+        return self.tp * self.pp * self.dp
+
+
+def iteration_time(
+    hw: Hardware,
+    wl: Workload,
+    par: Parallel,
+    *,
+    tp_reduced: Optional[int] = None,
+    local_batch_scale: float = 1.0,
+    power_speedup: float = 1.0,
+    dp_overlap: float = 0.7,
+    tp_overlap: float = 0.3,
+) -> Dict[str, float]:
+    """Per-iteration time breakdown for ONE DP replica (seconds).
+
+    tp_reduced: NTP — this replica's stages run at a reduced TP degree
+    (same work on fewer chips). local_batch_scale scales its sample count.
+    power_speedup: NTP-PW compute boost.
+    """
+    tp_eff = tp_reduced or par.tp
+    tokens_per_replica = wl.minibatch_tokens / par.dp * local_batch_scale
+    seqs = max(tokens_per_replica / wl.seq_len, 1e-9)
+    m = max(int(round(seqs / par.microbatch_seqs)), 1)
+
+    # ---- compute ----------------------------------------------------------
+    flops_replica = 6.0 * wl.n_params * tokens_per_replica
+    flops_gpu = flops_replica / (tp_eff * par.pp)
+    t_comp = flops_gpu / (hw.chip_flops * hw.mfu_ceiling) / power_speedup
+
+    # ---- TP collectives (Megatron: 4 allreduce/layer fwd+bwd) -------------
+    act_bytes_mb = par.microbatch_seqs * wl.seq_len * wl.d_model * wl.act_bytes
+    vol_per_layer = 4 * 2 * act_bytes_mb * (tp_eff - 1) / tp_eff
+    layers_local = wl.n_layers / par.pp
+    t_tp = layers_local * m * vol_per_layer / hw.scaleup_bw / power_speedup
+    t_tp_exposed = t_tp * (1.0 - tp_overlap)
+
+    # ---- PP bubble ---------------------------------------------------------
+    bubble = (par.pp - 1) / max(m, 1)
+    t_pp = (t_comp + t_tp_exposed) * bubble
+
+    # ---- DP gradient all-reduce -------------------------------------------
+    grad_bytes_gpu = 2.0 * wl.n_params / (tp_eff * par.pp)
+    # sync at the min TP degree: volume rises when any replica is reduced
+    t_dp = 2.0 * grad_bytes_gpu * (par.dp - 1) / par.dp / hw.scaleout_bw
+    t_dp_exposed = t_dp * (1.0 - dp_overlap)
+
+    # ---- NTP reshard (§3.1): within scale-up domain, overlapped ------------
+    t_reshard_exposed = 0.0
+    if tp_reduced is not None and tp_reduced != par.tp:
+        shard_bytes = 2.0 * wl.n_params / (par.tp * par.pp)
+        reshard_bytes = shard_bytes * (1.0 - tp_reduced / par.tp) * 2  # pre+post
+        t_reshard = reshard_bytes / hw.scaleup_bw
+        # Fig. 8: overlapped with the final backward; exposed part is linear
+        # in comm:comp with a small slope — model 10% exposed
+        t_reshard_exposed = 0.1 * t_reshard
+
+    total = t_comp + t_tp_exposed + t_pp + t_dp_exposed + t_reshard_exposed
+    return {
+        "total": total,
+        "compute": t_comp,
+        "tp_exposed": t_tp_exposed,
+        "pp_bubble": t_pp,
+        "dp_exposed": t_dp_exposed,
+        "reshard_exposed": t_reshard_exposed,
+        "microbatches": m,
+        "per_gpu_tput": tokens_per_replica / total / tp_eff / par.pp,
+    }
+
+
+def best_config(
+    hw: Hardware, wl: Workload, n_gpus: int, *, tp_limit: Optional[int] = None,
+    min_pp: int = 1,
+) -> Dict:
+    """Exhaustive hybrid-parallel search (paper Fig. 2b): best per-GPU
+    throughput subject to a TP-degree cap (TP ≤ scale-up domain)."""
+    best = None
+    tp_max = min(tp_limit or hw.domain_size, hw.domain_size)
+    tp = 1
+    while tp <= tp_max:
+        for pp in (1, 2, 4, 8, 16, 32):
+            if n_gpus % (tp * pp):
+                pp_ok = False
+            dp = n_gpus // (tp * pp)
+            if dp < 1 or n_gpus % (tp * pp):
+                continue
+            # memory feasibility: params+grads+opt (16 bytes/param ZeRO over
+            # dp) + activations must fit 180GB-class HBM per the paper's B200
+            bytes_model = wl.n_params * (2 + 2) / (tp * pp) + wl.n_params * 12 / (
+                tp * pp * dp
+            )
+            if bytes_model > 150e9:
+                continue
+            if wl.minibatch_tokens / dp < wl.seq_len:  # < 1 seq per replica
+                continue
+            r = iteration_time(hw, wl, Parallel(tp=tp, pp=pp, dp=dp))
+            cand = {"tp": tp, "pp": pp, "dp": dp, **r}
+            if best is None or cand["per_gpu_tput"] > best["per_gpu_tput"]:
+                best = cand
+        tp *= 2
+    return best

@@ -1,0 +1,199 @@
+"""Fault-tolerance policy throughput models: DP-DROP vs NTP vs NTP-PW
+(paper §6.1, Figs. 6/7/10).
+
+All policies share the cluster geometry of §5.3: 32K GPUs, 32-wide scale-up
+domains at TP32, 8 domains per DP replica (PP8), 128 DP replicas, 128
+attention heads, local batch 8.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.availability import ClusterSpec, sample_failed_domains
+from repro.core.power import PowerModel
+from repro.core.resource_manager import apply_spares, pack_replicas
+
+
+@dataclass(frozen=True)
+class WorkloadGeometry:
+    n_heads: int = 128
+    local_batch: int = 8
+    mlp_flops_share: float = 2 / 3   # d_ff = 4d ⇒ MLP ≈ 2/3 of layer FLOPs
+
+
+def stage_slowdown(tp_red: int, tp_full: int, geom: WorkloadGeometry) -> float:
+    """Iteration-time multiplier of a TP-reduced stage at equal batch.
+    MLP work redistributes evenly (128-row units, k ≫ tp — §3.1: "the
+    imbalance is typically very small"); attention is quantized at head
+    granularity ("Attention usually has O(10) heads creating potential for
+    substantially more imbalance"). Blend by FLOP share."""
+    if tp_red <= 0:
+        return np.inf
+    even = tp_full / tp_red
+    heads = np.ceil(geom.n_heads / tp_red) / (geom.n_heads / tp_full)
+    return float(geom.mlp_flops_share * even + (1 - geom.mlp_flops_share) * heads)
+
+
+def replica_throughput(
+    tp_red: int,
+    tp_full: int,
+    geom: WorkloadGeometry,
+    method: str,
+    power: PowerModel,
+) -> float:
+    """Relative samples/iteration of one DP replica whose weakest stage runs
+    at tp_red (1.0 = healthy). NTP: shrink local batch to not straggle.
+    NTP-PW: boost power to keep full batch; fall back to batch shrink past
+    the boost cap."""
+    if tp_red <= 0:
+        return 0.0
+    if tp_red == tp_full:
+        return 1.0
+    slow = stage_slowdown(tp_red, tp_full, geom)
+    if method == "ntp":
+        bs = int(np.floor(geom.local_batch / slow))
+        return bs / geom.local_batch
+    if method == "ntp_pw":
+        # the rack is provisioned for up to max_boost on every survivor
+        # (§3.2; Table 1 boosts TP30 to 1.15× > 32/30× of the failed share)
+        speed = power.speedup(power.max_boost)
+        eff_slow = slow / speed
+        if eff_slow <= 1.0 + 1e-9:
+            return 1.0
+        bs = int(np.floor(geom.local_batch / eff_slow))
+        return bs / geom.local_batch
+    raise ValueError(method)
+
+
+def table1_settings(
+    geom: WorkloadGeometry = WorkloadGeometry(), power: PowerModel = PowerModel()
+):
+    """Reproduce Table 1 analytically (TP32 domain, local bs 8): non-boosted
+    reduced-TP replicas shrink local batch to not straggle; boosted ones keep
+    bs=8 and raise power until iteration time matches."""
+    rows = []
+    base_tp, base_bs = 32, geom.local_batch
+    for tp in (32, 30, 28):
+        slow = stage_slowdown(tp, base_tp, geom)
+        bs = min(base_bs, int(np.floor(base_bs / slow)))
+        rows.append({
+            "config": f"TP{tp}", "local_bs": bs, "power": 1.0,
+            "rel_iter_time": round(slow * bs / base_bs, 3),
+        })
+        if tp != base_tp:
+            preq = min(power.required_power_for_speedup(slow), power.max_boost)
+            rel = slow / power.speedup(preq)
+            rows.append({
+                "config": f"TP{tp}-PW", "local_bs": base_bs,
+                "power": round(preq, 2), "rel_iter_time": round(rel, 3),
+            })
+    return rows
+
+
+def cluster_throughput(
+    spec: ClusterSpec,
+    failed_counts: np.ndarray,
+    method: str,
+    *,
+    geom: WorkloadGeometry = WorkloadGeometry(),
+    power: PowerModel = PowerModel(),
+    n_spare_domains: int = 0,
+) -> Dict:
+    """Relative cluster samples/iteration under one failure sample.
+
+    DP-DROP reforms replicas from fully-clean domains (the favourable
+    variant — dropping whole original replicas would be strictly worse).
+    """
+    failed = apply_spares(failed_counts, n_spare_domains)
+    n_domains = len(failed)
+    n_replicas = n_domains // spec.domains_per_replica
+
+    if method == "dpdrop":
+        clean = int((failed == 0).sum())
+        usable = clean // spec.domains_per_replica
+        thr = usable / n_replicas
+        return {"throughput": thr, "replica_throughputs": None,
+                "lost_fraction": 1.0 - thr}
+
+    assignments = pack_replicas(failed, spec.domain_size, spec.domains_per_replica)
+    thr = [
+        replica_throughput(a.tp, spec.domain_size, geom, method, power)
+        for a in assignments
+    ]
+    total = float(np.sum(thr)) / n_replicas
+    return {
+        "throughput": total,
+        "replica_throughputs": thr,
+        "lost_fraction": 1.0 - total,
+        "affected_replicas": sum(1 for t in thr if t < 1.0),
+    }
+
+
+def throughput_loss_curve(
+    spec: ClusterSpec,
+    failed_fractions,
+    methods=("dpdrop", "ntp", "ntp_pw"),
+    *,
+    samples: int = 20,
+    blast_radius: int = 1,
+    seed: int = 0,
+    geom: WorkloadGeometry = WorkloadGeometry(),
+) -> Dict[str, List[float]]:
+    """Fig. 6 / Fig. 10: mean lost-throughput fraction per failed fraction."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, List[float]] = {m: [] for m in methods}
+    for f in failed_fractions:
+        n_failed = int(round(f * spec.n_gpus))
+        losses = {m: [] for m in methods}
+        for _ in range(samples):
+            counts = sample_failed_domains(
+                spec.n_gpus, spec.domain_size, n_failed, rng, blast_radius
+            )
+            for m in methods:
+                losses[m].append(
+                    cluster_throughput(spec, counts, m, geom=geom)["lost_fraction"]
+                )
+        for m in methods:
+            out[m].append(float(np.mean(losses[m])))
+    return out
+
+
+def spares_analysis(
+    spec: ClusterSpec,
+    failed_domain_trace: List[np.ndarray],
+    spare_range,
+    method: str,
+    *,
+    geom: WorkloadGeometry = WorkloadGeometry(),
+) -> List[Dict]:
+    """Fig. 7: fixed minibatch — training PAUSES whenever the surviving
+    replicas (+ spare replicas) cannot supply the full minibatch. Returns
+    per-spare-count {spares, uptime, throughput_per_gpu}."""
+    out = []
+    n_replicas = (spec.n_gpus // spec.domain_size) // spec.domains_per_replica
+    for s in spare_range:
+        ok_time = 0
+        for counts in failed_domain_trace:
+            res = cluster_throughput(
+                spec, counts, method if method != "dpdrop" else "dpdrop",
+                geom=geom, n_spare_domains=s,
+            )
+            if method == "dpdrop":
+                maintained = res["throughput"] >= 1.0 - 1e-9
+            else:
+                # lost sample capacity must be covered by whole spare replicas
+                lost_replica_equiv = (1.0 - res["throughput"]) * n_replicas
+                spare_replicas = s // spec.domains_per_replica
+                maintained = spare_replicas >= np.ceil(lost_replica_equiv - 1e-9)
+            ok_time += int(maintained)
+        uptime = ok_time / max(len(failed_domain_trace), 1)
+        total_gpus = spec.n_gpus + s * spec.domain_size
+        out.append({
+            "spares": int(s),
+            "uptime": uptime,
+            "throughput_per_gpu": uptime * spec.n_gpus / total_gpus,
+        })
+    return out

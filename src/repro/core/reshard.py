@@ -1,0 +1,80 @@
+"""The NTP reshard collective (paper §3.1/§4.1) as jax.lax primitives.
+
+Runs inside shard_map over ('data', 'model'): a layout change of the local
+unit buffer via one tiled all-to-all over the scale-up-domain axis — the
+paper's "resharding is done within TP groups … without bottlenecking the
+synchronization", mapped NVLink→ICI. Gradient sync is then
+reshard(pre) → psum('data') → reshard(post), with the pre-reshard emitted
+per-bucket so XLA's latency-hiding scheduler can overlap it with the
+remaining backward computation (the paper's backward-hook overlap, §4.1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nonuniform import StackedTables, WeightPlan
+
+
+def _zero_pad_row(x):
+    return jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def reshard(
+    x,
+    tables: StackedTables,
+    *,
+    model_axis: str = "model",
+    data_axis: Optional[str] = "data",
+):
+    """Convert a local unit buffer (U, unit, ...) between layouts.
+
+    Table selection is rank-dependent (every rank runs this same SPMD
+    program): replica = axis_index(data_axis), rank = axis_index(model_axis).
+    """
+    d = jax.lax.axis_index(data_axis) if data_axis is not None else 0
+    r = jax.lax.axis_index(model_axis)
+    send = tables.send_idx[d, r]        # (n, s_max)
+    recv_slots = tables.recv_idx[d, r]  # (n, s_max)
+    stay = tables.stay_idx[d, r]        # (U,)
+
+    xp = _zero_pad_row(x)               # (U+1, ...) — index U gathers zeros
+    send_buf = xp[send]                 # (n, s_max, unit, ...)
+    recv = jax.lax.all_to_all(send_buf, model_axis, 0, 0, tiled=True)
+
+    out = xp[stay]                      # stays (pad slots -> zeros)
+    flat = recv.reshape((-1,) + recv.shape[2:])
+    out = out.at[recv_slots.reshape(-1)].set(flat, mode="drop")
+    return out
+
+
+def ntp_sync_gradient(
+    g,
+    wp: WeightPlan,
+    *,
+    model_axis: str = "model",
+    data_axis: str = "data",
+    scale=None,
+):
+    """Full NTP gradient synchronization for one unit-buffered gradient
+    (U, unit, ...): pre-sync reshard → all-reduce over DP → post-sync reshard.
+
+    ``scale``: optional per-replica contribution weight (e.g. local-batch
+    fraction); the caller divides by the total weight afterwards or bakes it
+    into ``scale``.
+    """
+    if scale is not None:
+        g = g * scale
+    g_sync = reshard(g, wp.pre, model_axis=model_axis, data_axis=data_axis)
+    g_sync = jax.lax.psum(g_sync, data_axis)
+    return reshard(g_sync, wp.post, model_axis=model_axis, data_axis=data_axis)
+
+
+def uniform_sync_gradient(g, *, data_axis: str = "data", scale=None):
+    """Healthy-path baseline: plain DP all-reduce (what NTP degenerates to
+    when every replica is healthy — pre/post reshard become identity)."""
+    if scale is not None:
+        g = g * scale
+    return jax.lax.psum(g, data_axis)

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; the kernels
+target TPU and are validated by executing the kernel body in interpret
+mode). Set REPRO_PALLAS_COMPILE=1 on a real TPU to run compiled.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import reshard_pack as _rp
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "window", "chunk", "softcap",
+                              "block_q", "block_k")
+)
+def flash_attention(q, k, v, *, kind="causal", window=4096, chunk=8192,
+                    softcap=None, block_q=512, block_k=512):
+    return _fa.flash_attention(
+        q, k, v, kind=kind, window=window, chunk=chunk, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=_INTERPRET,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "plus_one", "block_rows"))
+def rmsnorm(x, w, *, eps=1e-6, plus_one=False, block_rows=256):
+    return _rn.rmsnorm(
+        x, w, eps=eps, plus_one=plus_one, block_rows=block_rows,
+        interpret=_INTERPRET,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, *, chunk=256):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=_INTERPRET)
+
+
+@jax.jit
+def reshard_pack(src, send_idx):
+    return _rp.reshard_pack(src, send_idx, interpret=_INTERPRET)

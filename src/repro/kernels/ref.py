@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, kind: str = "causal", window: int = 4096,
+                        chunk: int = 8192, softcap: Optional[float] = None):
+    """q: (B,H,S,D); k/v: (B,KVH,S,D)."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    ok = kp <= qp
+    if kind == "sliding":
+        ok &= kp > qp - window
+    elif kind == "chunked":
+        ok &= (kp // chunk) == (qp // chunk)
+    elif kind == "bidir":
+        ok = jnp.ones_like(ok)
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6, plus_one: bool = False):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w32 = w.astype(jnp.float32)
+    if plus_one:
+        w32 = 1.0 + w32
+    return (y * w32).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (exact). x: (BH,S,hp); dt: (BH,S); A: (BH,);
+    B/C: (BH,S,ds). Returns (BH,S,hp) fp32."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    bh, s, hp = x.shape
+    ds = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct, a = inp
+        h = jnp.exp(dtt * a)[:, None, None] * h + (
+            dtt[:, None, None] * x_outer(xt, bt)
+        )
+        y = jnp.einsum("bps,bs->bp", h, ct)
+        return h, y
+
+    def x_outer(xt, bt):
+        return jnp.einsum("bp,bs->bps", xt, bt)
+
+    h0 = jnp.zeros((bh, hp, ds), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2),
+        dt.transpose(1, 0),
+        B.transpose(1, 0, 2),
+        C.transpose(1, 0, 2),
+        jnp.broadcast_to(A[None], (s, bh)),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2)
+
+
+def reshard_pack_ref(src, send_idx):
+    """src: (U+1, elems) zero-padded; send_idx: (n, s_max)."""
+    return src[send_idx]

@@ -1,0 +1,51 @@
+"""NTP reshard send-bucket packing — Pallas TPU kernel.
+
+The inner loop of the paper's pre/post-sync reshard (§4.1): gather partition
+units from the local comp/sync buffer into per-destination all-to-all send
+buckets according to the static Algorithm-1 tables. On GPU this is the
+torch.split + all_to_all prep in Fig. 12; on TPU we fuse the gather so the
+send buffer is produced in one VMEM pass.
+
+  grid = (n_dst,); per destination: s_max unit rows gathered by index from
+  the (U+1)-row zero-padded source (index U = pad ⇒ zero row).
+
+Unit rows are 128-element multiples by construction (DESIGN.md §3.2), so
+each gathered row is lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(idx_ref, src_ref, out_ref, *, s_max: int):
+    def body(s, _):
+        u = idx_ref[0, s]
+        row = src_ref[u]                       # dynamic gather (one unit row)
+        out_ref[0, s] = row
+        return 0
+
+    jax.lax.fori_loop(0, s_max, body, 0)
+
+
+def reshard_pack(src, send_idx, *, interpret: bool = True):
+    """src: (U+1, unit_elems) — zero-padded unit buffer (last row zeros).
+    send_idx: (n, s_max) int32 local slot per (dst, msg-slot), pad = U.
+    Returns send buffer (n, s_max, unit_elems)."""
+    up1, elems = src.shape
+    n, s_max = send_idx.shape
+    kernel = functools.partial(_pack_kernel, s_max=s_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, s_max), lambda i: (i, 0)),
+            pl.BlockSpec((up1, elems), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s_max, elems), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s_max, elems), src.dtype),
+        interpret=interpret,
+    )(send_idx, src)

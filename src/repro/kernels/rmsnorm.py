@@ -1,0 +1,43 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+One pass over rows: fp32 mean-of-squares + scale, optional gemma-style
+(1 + w) weighting. Tiling: grid over row blocks, (br, d) VMEM tiles
+(br=256 rows ⇒ ≤ 256·8192·4B = 8 MB at the largest assigned d_model).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    o_ref[...] = (y * w[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, plus_one: bool = False,
+            block_rows: int = 256, interpret: bool = True):
+    """x: (N, d); w: (d,). Returns (N, d) in x.dtype."""
+    n, d = x.shape
+    br = min(block_rows, n)
+    assert n % br == 0, (n, br)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps, plus_one=plus_one)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,91 @@
+"""Mamba-2 SSD chunk scan — Pallas TPU kernel.
+
+The compute core of mamba2-780m: per (batch, head), iterate chunks
+sequentially (innermost grid dim), carrying the (hp, ds) SSD state in VMEM
+scratch; within a chunk use the matmul-heavy dual form (decay-masked
+C Bᵀ attention-like block plus state injection) — MXU-aligned with
+chunk length L=256, hp=64, ds=128 tiles.
+
+  grid = (B·NH, S/L)
+  x  tile (1, L, hp)   dt tile (1, L)   B,C tiles (1, L, ds)
+  y  tile (1, L, hp)   state scratch (hp, ds) fp32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *, L: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0]                                   # scalar A (negative)
+    x = x_ref[0].astype(jnp.float32)               # (L, hp)
+    dt = dt_ref[0].astype(jnp.float32)             # (L,)
+    B = b_ref[0].astype(jnp.float32)               # (L, ds)
+    C = c_ref[0].astype(jnp.float32)               # (L, ds)
+
+    da = dt * a                                    # (L,) ≤ 0
+    acum = jnp.cumsum(da)                          # inclusive
+    atot = acum[-1]
+
+    # intra-chunk dual form
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    decay = jnp.exp(jnp.clip(acum[:, None] - acum[None, :], -60.0, 0.0))
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    M = jnp.where(ii >= jj, G * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, hp)
+
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                                 # (hp, ds)
+    cdec = jnp.exp(jnp.clip(acum, -60.0, 0.0))[:, None] * C      # (L, ds)
+    y = y + jax.lax.dot_general(cdec, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(atot) h + sum_j exp(atot - acum_j) dt_j x_j B_j^T
+    w = jnp.exp(jnp.clip(atot - acum, -60.0, 0.0)) * dt          # (L,)
+    inj = jax.lax.dot_general(x * w[:, None], B, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (hp, ds)
+    h_ref[...] = jnp.exp(atot) * h + inj
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = True):
+    """SSD scan over (BH, S, ·) flattened batch·heads.
+
+    x: (BH, S, hp); dt: (BH, S); A: (BH,); B, C: (BH, S, ds).
+    Returns y: (BH, S, hp) fp32. (Zero initial state; the recurrent decode
+    path lives in models/ssm.py — this kernel is the train/prefill hot loop.)
+    """
+    bh, s, hp = x.shape
+    ds = B.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0
+    kernel = functools.partial(_ssd_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // L),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, L, hp), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+            pl.BlockSpec((1, L, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, ds), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, hp), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hp, ds), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, B, C)

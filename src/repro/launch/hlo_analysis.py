@@ -1,0 +1,430 @@
+"""Loop-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA counts a while-loop body ONCE, not
+× trip-count, so any lax.scan (layer stacks, flash-attention tiles) is
+massively under-counted. Optimized HLO annotates
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, so we walk the
+call graph ourselves:
+
+  flops  — dot ops exact (2·|result|·K from lhs_contracting_dims), other
+           elementwise/reduce ops at 1 flop/element; fusion bodies descended
+           for flops only.
+  bytes  — memory traffic at materialization boundaries: every top-level
+           instruction contributes |operands| + |result|, fusions counted at
+           their boundary only (fused interiors live in registers/VMEM) —
+           a closer model of HBM traffic than XLA's per-op sum.
+  colls  — all-reduce / all-gather / reduce-scatter / all-to-all /
+           collective-permute with ring-model moved-bytes, × trip counts.
+
+Everything is per-device (the module is the post-partitioning per-device
+program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_ELTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "log",
+    "log-plus-one", "negate", "abs", "sign", "floor", "ceil", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "cosine", "sine", "erf",
+    "logistic", "atan2", "remainder", "round-nearest-afz",
+    "round-nearest-even", "is-finite", "cbrt",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+_COLLS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count\\?\"?:\{\\?\"?n\\?\"?:\\?\"?(\d+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_info(type_str: str) -> Tuple[int, int]:
+    """(bytes, elements) of a type string (tuples summed)."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+def _first_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_moved: float = 0.0
+    coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_moved += other.coll_moved * mult
+        self.unknown_loops += other.unknown_loops
+        for k, v in other.coll.items():
+            d = self.coll.setdefault(k, {"count": 0.0, "moved_bytes": 0.0,
+                                         "result_bytes": 0.0})
+            d["count"] += v["count"] * mult
+            d["moved_bytes"] += v["moved_bytes"] * mult
+            d["result_bytes"] += v["result_bytes"] * mult
+
+
+def _split_operands(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            depth += ch in "([{"
+            depth -= ch in ")]}"
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    toks = []
+    for o in out:
+        # operand may be '%name' or 'f32[..]{..} %name'
+        name = None
+        for t in reversed(o.split()):
+            if t.startswith("%"):
+                name = t.lstrip("%")
+                break
+        toks.append(name if name is not None else o)
+    return toks
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_HEAD_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def parse_module(text: str):
+    """Returns (computations: name -> list[Instr], entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_HEAD_RE.match(line)
+        if not m:
+            continue
+        rest = line[m.end():]
+        # result type: '(...)' tuple or 'dtype[...]...' up to ' op('
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            rtype = rest[: i + 1]
+            rest2 = rest[i + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            rtype = rest[:sp]
+            rest2 = rest[sp + 1:].lstrip()
+        par = rest2.find("(")
+        if par < 0:
+            continue
+        op = rest2[:par].strip()
+        depth = 0
+        for j in range(par, len(rest2)):
+            depth += rest2[j] == "("
+            depth -= rest2[j] == ")"
+            if depth == 0:
+                break
+        operand_str = rest2[par + 1 : j]
+        attrs = rest2[j + 1 :]
+        comps[cur].append(
+            Instr(
+                name=m.group(2),
+                rtype=rtype,
+                op=op,
+                operands=_split_operands(operand_str) if operand_str.strip() else [],
+                attrs=attrs,
+                is_root=bool(m.group(1)),
+            )
+        )
+    return comps, entry
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    gi = _GROUPS_IOTA_RE.search(attrs)
+    if gi:
+        return int(gi.group(2))
+    gl = _GROUPS_LIST_RE.search(attrs)
+    if gl:
+        return len([t for t in gl.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+def _coll_moved(op: str, rbytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * rbytes * (n - 1) / n
+    if op == "all-gather":
+        return rbytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(rbytes) * (n - 1)
+    if op == "all-to-all":
+        return rbytes * (n - 1) / n
+    return float(rbytes)  # collective-permute
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self.symtab: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.rtype for i in instrs} for c, instrs in self.comps.items()
+        }
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry, count_bytes=True)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, count_bytes: bool) -> Cost:
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total  # guard (acyclic anyway)
+        for ins in self.comps.get(name, []):
+            total.add(self._instr_cost(name, ins, count_bytes))
+        return total
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> float:
+        st = self.symtab[comp]
+        b = 0.0
+        for o in ins.operands:
+            t = st.get(o)
+            if t:
+                b += _shape_info(t)[0]
+        return b
+
+    def _instr_cost(self, comp: str, ins: Instr, count_bytes: bool) -> Cost:
+        c = Cost()
+        op = ins.op
+        base = op[:-6] if op.endswith("-start") else op
+        rbytes, relems = _shape_info(ins.rtype)
+
+        if op in _NO_TRAFFIC or op.endswith("-done") or op == "copy-done":
+            return c
+
+        # ---- control flow ------------------------------------------------
+        if op == "while":
+            trip_m = _TRIP_RE.search(ins.attrs)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            if not trip_m:
+                c.unknown_loops += 1
+            body = _BODY_RE.search(ins.attrs)
+            cond = _COND_RE.search(ins.attrs)
+            if body:
+                c.add(self._comp_cost(body.group(1), count_bytes), trip)
+            if cond:
+                c.add(self._comp_cost(cond.group(1), count_bytes), trip)
+            return c
+        if op == "conditional":
+            br = _BRANCHES_RE.search(ins.attrs)
+            if br:
+                names = [t.strip().lstrip("%") for t in br.group(1).split(",")]
+                subs = [self._comp_cost(n, count_bytes) for n in names]
+                if subs:
+                    worst = max(subs, key=lambda s: s.flops + s.bytes)
+                    c.add(worst)
+            return c
+        if op == "call":
+            ap = _APPLY_RE.search(ins.attrs)
+            if ap:
+                c.add(self._comp_cost(ap.group(1), count_bytes))
+            return c
+        if op == "fusion":
+            fc = _CALLS_RE.search(ins.attrs)
+            if fc:
+                inner = self._comp_cost(fc.group(1), count_bytes=False)
+                c.flops += inner.flops
+                c.coll_moved += inner.coll_moved
+                for k, v in inner.coll.items():
+                    c.add(Cost(coll=dict([(k, v)])))
+            if count_bytes:
+                c.bytes += rbytes + self._operand_bytes(comp, ins)
+            return c
+
+        # ---- collectives ---------------------------------------------------
+        if base in _COLLS:
+            n = _group_size(ins.attrs)
+            moved = _coll_moved(base, rbytes, n)
+            c.coll_moved += moved
+            c.coll[base] = {"count": 1.0, "moved_bytes": moved,
+                            "result_bytes": float(rbytes)}
+            if count_bytes:
+                c.bytes += rbytes + self._operand_bytes(comp, ins)
+            return c
+
+        # ---- slicing/scatter: in-place semantics, not full-operand copies --
+        if op in ("dynamic-slice", "gather"):
+            if count_bytes:
+                c.bytes += 2.0 * rbytes        # read slice + write result
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            if count_bytes:
+                st = self.symtab[comp]
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                ub = _shape_info(st.get(upd, ""))[0] if upd else rbytes
+                c.bytes += 2.0 * ub            # read update + write region
+            return c
+        if op in ("slice", "concatenate", "reshape", "transpose", "copy",
+                  "broadcast", "pad", "reverse"):
+            if count_bytes:
+                c.bytes += rbytes + self._operand_bytes(comp, ins)
+            return c
+
+        # ---- compute -------------------------------------------------------
+        if op == "dot":
+            lhs_t = self.symtab[comp].get(ins.operands[0], "") if ins.operands else ""
+            dims = _first_dims(lhs_t)
+            cm = _LHS_CONTRACT_RE.search(ins.attrs)
+            k = 1
+            if cm and dims:
+                for d in cm.group(1).split(","):
+                    if d:
+                        k *= dims[int(d)]
+            _, relems_arr = _shape_info(ins.rtype)
+            c.flops += 2.0 * relems_arr * k
+        elif op == "convolution":
+            c.flops += 2.0 * relems  # lower bound; no convs in these models
+        elif op in _ELTWISE:
+            c.flops += relems
+        elif op in ("reduce", "reduce-window"):
+            c.flops += self._operand_bytes(comp, ins) / 4.0  # ~1 flop/elem
+        elif op in ("sort",):
+            c.flops += relems * 10.0
+
+        if count_bytes:
+            c.bytes += rbytes + self._operand_bytes(comp, ins)
+        return c
+
+
+def analyze_hlo(text: str) -> Dict:
+    model = HloCostModel(text)
+    c = model.cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_moved_bytes": c.coll_moved,
+        "collectives": c.coll,
+        "unknown_trip_count_loops": c.unknown_loops,
+    }
+
+
+# ---------------------------------------------------------------------------
+# profiling: top byte/flop contributors (the dry-run "profile" for §Perf)
+
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_contributors(text: str, n: int = 25) -> List[dict]:
+    """Attribute bytes/flops to (opcode, jax op_name) pairs, with while-body
+    trip multiplication. The §Perf hypothesis source."""
+    model = HloCostModel(text)
+
+    # computation -> multiplicity (entry=1; while bodies × trip)
+    mult: Dict[str, float] = {model.entry: 1.0}
+    changed = True
+    while changed:
+        changed = False
+        for comp, instrs in model.comps.items():
+            if comp not in mult:
+                continue
+            m = mult[comp]
+            for ins in instrs:
+                # NB: fusions (_CALLS_RE) are NOT propagated — their interior
+                # is already attributed at the fusion boundary instruction.
+                for regex, scale in ((_BODY_RE, None), (_COND_RE, None)):
+                    mm = regex.search(ins.attrs)
+                    if not mm:
+                        continue
+                    if scale is None:
+                        tm = _TRIP_RE.search(ins.attrs)
+                        scale_eff = float(tm.group(1)) if tm else 1.0
+                    else:
+                        scale_eff = scale
+                    name = mm.group(1)
+                    new = m * scale_eff
+                    if mult.get(name, 0.0) < new:
+                        mult[name] = new
+                        changed = True
+
+    agg: Dict[str, dict] = {}
+    for comp, instrs in model.comps.items():
+        m = mult.get(comp)
+        if m is None:
+            continue
+        for ins in instrs:
+            if ins.op in ("while", "conditional", "call") or ins.op in _NO_TRAFFIC:
+                continue
+            c = model._instr_cost(comp, ins, count_bytes=True)
+            meta = _METADATA_RE.search(ins.attrs)
+            tag = meta.group(1).split("/")[-1] if meta else ins.op
+            key = f"{ins.op}:{tag}"
+            d = agg.setdefault(key, {"bytes": 0.0, "flops": 0.0, "count": 0})
+            d["bytes"] += (c.bytes) * m
+            d["flops"] += c.flops * m
+            d["count"] += m
+    out = [dict(key=k, **v) for k, v in agg.items()]
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]

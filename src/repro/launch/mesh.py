@@ -1,0 +1,27 @@
+"""Production meshes. Functions, not module-level constants — importing this
+module must never touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 DP × 16 TP — the `model` axis is the
+    scale-up domain, the paper's NVL-domain analogue). Multi-pod: 2 pods =
+    512 chips with a leading `pod` DP axis (DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for multi-device CPU tests (subprocesses set
+    xla_force_host_platform_device_count accordingly)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

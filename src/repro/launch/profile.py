@@ -1,0 +1,42 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, before any jax import (see dryrun.py).
+"""Dry-run profiler: compile one (arch × shape) at the production mesh and
+print the top byte/FLOP contributors from the optimized HLO — the 'profile'
+that drives §Perf hypotheses (no real-TPU timings exist here).
+
+  PYTHONPATH=src python -m repro.launch.profile --arch chameleon-34b --shape train_4k
+"""
+import argparse
+
+from repro.configs import get_arch, get_shape
+from repro.launch.hlo_analysis import analyze_hlo, top_contributors
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.train.steps import make_setup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    su = make_setup(get_arch(args.arch), get_shape(args.shape), mesh,
+                    dp_axes=dp_axes(mesh))
+    with mesh:
+        compiled = su.jit_step().lower(*su.abstract_args()).compile()
+    txt = compiled.as_text()
+    tot = analyze_hlo(txt)
+    print(f"total: {tot['flops']/1e12:.2f} TF, {tot['bytes']/1e12:.2f} TB, "
+          f"coll {tot['collective_moved_bytes']/1e12:.2f} TB moved")
+    print(f"{'op:jax_op_name':60s} {'GB':>10s} {'TF':>8s} {'count':>7s}")
+    for row in top_contributors(txt, args.top):
+        print(f"{row['key'][:60]:60s} {row['bytes']/1e9:10.1f} "
+              f"{row['flops']/1e12:8.2f} {row['count']:7.0f}")
+
+
+if __name__ == "__main__":
+    main()

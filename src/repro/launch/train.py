@@ -1,0 +1,108 @@
+"""Training launcher.
+
+Examples (CPU container — reduced configs execute, full configs dry-run):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
+      --steps 20 --seq-len 128 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --dry-run
+"""
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant of the arch family")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile at the production mesh instead of running")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU devices for a (2, n/2) test mesh")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    elif args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, get_shape, reduced
+    from repro.configs.shapes import ShapeSpec
+    from repro.checkpoint import save_checkpoint
+    from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+    from repro.launch.mesh import dp_axes, make_production_mesh, make_test_mesh
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.train.steps import make_setup
+
+    cfg = get_arch(args.arch)
+
+    if args.dry_run:
+        from repro.launch.dryrun import run_one
+
+        rec = run_one(args.arch, args.shape, args.multi_pod)
+        print(rec)
+        return
+
+    cfg = reduced(cfg) if args.reduced else cfg
+    shape = ShapeSpec("cli", args.seq_len, args.batch, "train")
+    mesh = None
+    if args.devices:
+        mesh = make_test_mesh(2, args.devices // 2)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    su = make_setup(cfg, shape, mesh, param_dtype=jnp.float32, opt_cfg=opt_cfg,
+                    dp_axes=("data",) if mesh else ("data",))
+    step = su.jit_step()
+
+    key = jax.random.PRNGKey(args.seed)
+    if mesh is not None:
+        params = jax.jit(su.model.init, out_shardings=su.param_sharding)(key)
+        opt = jax.jit(lambda p: adamw_init(p, opt_cfg),
+                      out_shardings=su.opt_sharding)(params)
+    else:
+        params = su.model.init(key)
+        opt = adamw_init(params, opt_cfg)
+    n_par = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_par/1e6:.1f}M devices={len(jax.devices())}")
+
+    pipe = SyntheticLMPipeline(
+        DataConfig(cfg.vocab_size, args.seq_len, args.batch, seed=args.seed), mesh
+    )
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = pipe.batch(i)
+        if su.cfg.encoder is not None:
+            batch["enc_input"] = jnp.zeros(
+                (args.batch, cfg.encoder.enc_seq, cfg.d_model), jnp.float32
+            )
+        params, opt, metrics = step(params, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(
+                f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"({(time.time()-t0):.1f}s)", flush=True,
+            )
+        if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, {"params": params, "opt": opt}, step=i + 1)
+            print(f"  saved checkpoint -> {args.ckpt}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params, "opt": opt}, step=args.steps)
+        print(f"final checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

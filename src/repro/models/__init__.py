@@ -1,0 +1,2 @@
+from repro.models.common import NO_SHARD, ShardCtx  # noqa: F401
+from repro.models.transformer import Model, build_model  # noqa: F401

@@ -1,0 +1,162 @@
+"""Shared model utilities: sharding context, norms, activations, RoPE."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Names the mesh axes the model should constrain activations to.
+
+    ``mesh=None`` (default, e.g. unit tests on 1 device) makes every
+    constraint a no-op so model code never branches.
+    """
+
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)   # batch axes ('pod','data') multi-pod
+    tp: Optional[str] = "model"       # tensor-parallel axis (scale-up domain)
+    sp: bool = True                   # §Perf C2: sequence-parallel residual
+    #   stream (gated off for rglru patterns — the RG-LRU recurrence runs
+    #   over the sequence and cannot compute seq-sharded)
+
+    def cons(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        spec = sanitize_spec(dict(self.mesh.shape), x.shape, spec)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def batch(self, x):
+        """(B, ...) activations: batch over dp axes."""
+        return self.cons(x, P(self.dp, *([None] * (x.ndim - 1))))
+
+    def residual(self, x):
+        """(B, S, d) residual stream between sublayers.
+
+        §Perf iteration C2 (beyond-paper, Megatron-LM sequence parallelism):
+        shard the sequence over the TP axis so norms/elementwise run 1/tp-th
+        as wide and GSPMD turns the TP all-reduce into reduce-scatter +
+        all-gather at the sublayer boundary. REPRO_BASELINE_SP=1 restores
+        the replicated residual stream."""
+        import os as _os
+
+        if not self.sp:
+            return x  # leave layout to XLA (baseline behaviour)
+        if (
+            self.mesh is None
+            or self.tp is None
+            or _os.environ.get("REPRO_BASELINE_SP")
+            or x.ndim != 3
+            or x.shape[1] % self.mesh.shape[self.tp] != 0
+            or x.shape[1] < 2 * self.mesh.shape[self.tp]
+        ):
+            return self.batch(x)
+        return self.cons(x, P(self.dp, self.tp, None))
+
+    def heads(self, x):
+        """(B, S, H, hd): q heads over tp (kv heads are NOT constrained —
+        kv_heads < tp for every assigned arch, Megatron replicates them)."""
+        return self.cons(x, P(self.dp, None, self.tp, None))
+
+    def hidden(self, x):
+        """(B, S, ff) MLP hidden: ff over tp."""
+        return self.cons(x, P(self.dp, None, self.tp))
+
+    def replicated(self, x):
+        return self.cons(x, P(*([None] * x.ndim)))
+
+
+def sanitize_spec(mesh_shape: dict, shape, spec: P) -> P:
+    """Drop spec axes whose mesh-size does not divide the dim (e.g. 12 whisper
+    heads over model=16 → replicate instead of erroring)."""
+    out = []
+    for d, names in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            out.append(None)
+            continue
+        tup = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for n in tup:
+            size *= mesh_shape[n]
+        out.append(names if shape[d] % size == 0 else None)
+    return P(*out)
+
+
+NO_SHARD = ShardCtx(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+
+def rms_norm(x, weight, eps: float, *, plus_one: bool = False):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (y * w).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)|(S,hd/2)
+    if angles.ndim == 2:  # (S, hd/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers (fan-in scaled normal, Megatron-style)
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = in_axis_size ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t) is diagonal,
+so training uses jax.lax.associative_scan (log-depth parallel prefix — the
+TPU-native formulation of the paper's linear recurrence) and decode is the
+O(1) per-token update.
+
+TP layout: d_inner channels sharded over `model`; the gate projections are
+block-diagonal (block_width channels per block, Griffin-style) so each block
+is a clean NTP partition unit (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ShardCtx, dense_init
+from repro.models.ssm import _causal_conv
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_init(cfg: ArchConfig, key, dtype) -> dict:
+    g = cfg.rglru
+    d = cfg.d_model
+    di = g.d_inner(d)
+    nb, w = di // g.block_width, g.block_width
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ)^c lands in [0.9, 0.999] (Griffin app. A)
+    u = jax.random.uniform(ks[0], (di,), jnp.float32, minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0)  # softplus^-1(-log u / c)
+    return {
+        "w_x": dense_init(ks[1], (d, di), d, dtype),
+        "w_y": dense_init(ks[2], (d, di), d, dtype),
+        "conv_w": dense_init(ks[3], (g.d_conv, di), g.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "gate_a": dense_init(ks[4], (nb, w, w), w, dtype),
+        "gate_i": dense_init(ks[5], (nb, w, w), w, dtype),
+        "bias_a": jnp.zeros((di,), jnp.float32),
+        "bias_i": jnp.zeros((di,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(ks[6], (di, d), di, dtype),
+    }
+
+
+def rglru_specs(cfg: ArchConfig, tp: str = "model") -> dict:
+    return {
+        "w_x": P(None, tp),
+        "w_y": P(None, tp),
+        "conv_w": P(None, tp),
+        "conv_b": P(tp),
+        "gate_a": P(tp, None, None),
+        "gate_i": P(tp, None, None),
+        "bias_a": P(tp),
+        "bias_i": P(tp),
+        "lam": P(tp),
+        "w_out": P(tp, None),
+    }
+
+
+def _gates(p, xb, nb, w):
+    """Block-diagonal gate projections. xb: (B,S,di) fp32."""
+    b, s, di = xb.shape
+    xr = xb.reshape(b, s, nb, w)
+    ra = jnp.einsum("bsnw,nwv->bsnv", xr, p["gate_a"].astype(jnp.float32))
+    ri = jnp.einsum("bsnw,nwv->bsnv", xr, p["gate_i"].astype(jnp.float32))
+    r = jax.nn.sigmoid(ra.reshape(b, s, di) + p["bias_a"])
+    i = jax.nn.sigmoid(ri.reshape(b, s, di) + p["bias_i"])
+    return r, i
+
+
+def rglru_apply(
+    cfg: ArchConfig,
+    p: dict,
+    x,
+    ctx: ShardCtx,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """cache (decode): {'conv': (B,K-1,di), 'h': (B,di) fp32}."""
+    g = cfg.rglru
+    b, s, d = x.shape
+    di = g.d_inner(d)
+    nb, w = di // g.block_width, g.block_width
+
+    xb = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    xb = ctx.hidden(xb)
+
+    xf = xb.astype(jnp.float32)
+    r, i = _gates(p, xf, nb, w)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,di) ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0))
+    bterm = beta * (i * xf)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, di), jnp.float32)
+    if cache is not None and s == 1:
+        h = a[:, 0] * h0 + bterm[:, 0]
+        y = h[:, None]
+        new_h = h
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        y = b_sc + a_sc * h0[:, None, :]                 # fold in initial state
+        new_h = y[:, -1]
+
+    yg = jax.nn.gelu(
+        jnp.einsum("bsd,df->bsf", x, p["w_y"]).astype(jnp.float32), approximate=True
+    )
+    out = (y * yg).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", out, p["w_out"])
+    new_cache = {"conv": new_conv, "h": new_h}
+    return ctx.batch(out), new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    g = cfg.rglru
+    di = g.d_inner(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, g.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di), jnp.float32),
+    }

@@ -1,0 +1,195 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: intra-chunk "dual" (attention-like) form + inter-chunk state
+recurrence via lax.scan — the TPU-friendly formulation (matmul-heavy,
+MXU-aligned chunk length). Decode is the O(1) recurrent update.
+
+TP layout: d_inner channels (== contiguous SSD heads) sharded over `model`;
+B/C state projections replicated (ngroups=1 ≈ MQA for states) — the NTP
+partition unit is the SSD head, mirroring attention heads (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ShardCtx, dense_init, rms_norm
+
+
+def ssm_init(cfg: ArchConfig, key, dtype) -> dict:
+    s = cfg.ssm
+    d, di, ds, nh = cfg.d_model, s.d_inner(cfg.d_model), s.d_state, s.n_heads(cfg.d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, di), d, dtype),
+        "w_x": dense_init(ks[1], (d, di), d, dtype),
+        "w_B": dense_init(ks[2], (d, ds), d, dtype),
+        "w_C": dense_init(ks[3], (d, ds), d, dtype),
+        "w_dt": dense_init(ks[4], (d, nh), d, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_w": dense_init(ks[5], (s.d_conv, di + 2 * ds), s.d_conv, dtype),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[6], (nh,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[7], (di, d), di, dtype),
+    }
+
+
+def ssm_specs(cfg: ArchConfig, tp: str = "model") -> dict:
+    return {
+        "w_z": P(None, tp),
+        "w_x": P(None, tp),
+        "w_B": P(None, None),
+        "w_C": P(None, None),
+        "w_dt": P(None, tp),
+        "dt_bias": P(tp),
+        "conv_w": P(None, None),  # mixed di+2ds channels; small — replicate
+        "conv_b": P(None),
+        "A_log": P(tp),
+        "D": P(tp),
+        "norm": P(tp),
+        "w_out": P(tp, None),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d. xBC: (B,S,C); conv_w: (K,C).
+    conv_state: (B,K-1,C) tail of previous tokens (decode) or None (train)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        full[:, i : i + xBC.shape[1], :] * conv_w[i][None, None, :] for i in range(k)
+    )
+    new_state = full[:, -(k - 1) :, :]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, h0, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,S,nh,hp)  dt: (B,S,nh)  A: (nh,)<0  B,C: (B,S,ds)
+    h0: (B,nh,hp,ds) initial state.
+    Returns y (B,S,nh,hp), h_final.
+    """
+    b, s, nh, hp = x.shape
+    ds = B.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    xr = x.reshape(b, nc, L, nh, hp)
+    dtr = dt.reshape(b, nc, L, nh)
+    Br = B.reshape(b, nc, L, ds)
+    Cr = C.reshape(b, nc, L, ds)
+
+    a = dtr * A[None, None, None, :]              # (b,nc,L,nh) ≤ 0
+    acum = jnp.cumsum(a, axis=2)                  # inclusive cumsum
+    atot = acum[:, :, -1, :]                      # (b,nc,nh)
+
+    # intra-chunk (dual/attention-like) term
+    G = jnp.einsum("bcis,bcjs->bcij", Cr, Br)     # (b,nc,L,L)
+    decay = jnp.exp(
+        jnp.clip(acum[:, :, :, None, :] - acum[:, :, None, :, :], -60.0, 0.0)
+    )                                             # (b,nc,i,j,nh)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    M = G[:, :, :, :, None] * decay * mask[None, None, :, :, None]
+    M = M * dtr[:, :, None, :, :]                 # weight by dt_j
+    y_diag = jnp.einsum("bcijn,bcjnp->bcinp", M, xr)
+
+    # per-chunk state injection:  sum_j exp(atot - acum_j) dt_j B_j x_j
+    w = jnp.exp(jnp.clip(atot[:, :, None, :] - acum, -60.0, 0.0)) * dtr  # (b,nc,L,nh)
+    chunk_state = jnp.einsum("bcjn,bcjs,bcjnp->bcnps", w, Br, xr)
+
+    def step(h, inp):
+        cs, at = inp                              # (b,nh,hp,ds), (b,nh)
+        h_new = h * jnp.exp(at)[:, :, None, None] + cs
+        return h_new, h                           # emit PRE-chunk state
+
+    cs_seq = chunk_state.transpose(1, 0, 2, 3, 4)  # (nc,b,nh,hp,ds)
+    at_seq = atot.transpose(1, 0, 2)
+    h_final, h_prevs = jax.lax.scan(step, h0, (cs_seq, at_seq))
+
+    # inter-chunk (state) term: C_i exp(acum_i) h_prev
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)    # (b,nc,nh,hp,ds)
+    cdec = jnp.exp(jnp.clip(acum, -60.0, 0.0))    # (b,nc,L,nh)
+    y_off = jnp.einsum("bcis,bcnps,bcin->bcinp", Cr, h_prevs, cdec)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hp)
+    return y, h_final
+
+
+def ssm_apply(
+    cfg: ArchConfig,
+    p: dict,
+    x,
+    ctx: ShardCtx,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """cache (decode): {'conv': (B,K-1,di+2ds), 'h': (B,nh,hp,ds)}."""
+    s = cfg.ssm
+    b, S, d = x.shape
+    di, ds = s.d_inner(d), s.d_state
+    nh, hp = s.n_heads(d), s.head_dim
+
+    z = jnp.einsum("bsd,df->bsf", x, p["w_z"])
+    xi = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    Bp = jnp.einsum("bsd,df->bsf", x, p["w_B"])
+    Cp = jnp.einsum("bsd,df->bsf", x, p["w_C"])
+    dt_raw = jnp.einsum("bsd,dn->bsn", x, p["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xi, Bp, Cp = jnp.split(xBC, [di, di + ds], axis=-1)
+    xi = ctx.hidden(xi)
+
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, S, nh, hp).astype(jnp.float32)
+    Bf, Cf = Bp.astype(jnp.float32), Cp.astype(jnp.float32)
+
+    if cache is not None and S == 1:
+        # recurrent decode: h' = exp(dt A) h + dt B x ; y = C·h' + D x
+        h = cache["h"]
+        dt1 = dt[:, 0]                             # (b,nh)
+        da = jnp.exp(dt1 * A[None, :])             # (b,nh)
+        inj = jnp.einsum("bn,bs,bnp->bnps", dt1, Bf[:, 0], xh[:, 0])
+        h_new = h * da[:, :, None, None] + inj
+        y = jnp.einsum("bs,bnps->bnp", Cf[:, 0], h_new)[:, None]
+        new_cache = {"conv": new_conv, "h": h_new}
+    else:
+        h0 = (
+            cache["h"]
+            if cache is not None
+            else jnp.zeros((b, nh, hp, ds), jnp.float32)
+        )
+        y, h_final = _ssd_chunked(xh, dt, A, Bf, Cf, h0, s.chunk)
+        new_cache = {"conv": new_conv, "h": h_final}
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, S, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return ctx.batch(out), new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ds, nh, hp = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * ds), dtype),
+        "h": jnp.zeros((batch, nh, hp, ds), jnp.float32),
+    }

@@ -1,0 +1,81 @@
+"""AdamW with fp32 moments (+ optional fp32 master params when the model
+params are bf16). Pure-pytree implementation; no external deps."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    keep_master: bool = True  # fp32 master copy when params are low-precision
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.keep_master and any(
+        p.dtype != jnp.float32 for p in jax.tree.leaves(params)
+    ):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    master = state.get("master", params)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + cfg.weight_decay * p32)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(
+        lambda p32, dt: p32.astype(dt), new_master, param_dtypes
+    )
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (  # noqa: F401
+    param_shardings,
+    sanitize_spec,
+    zero1_spec,
+)

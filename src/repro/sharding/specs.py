@@ -1,0 +1,68 @@
+"""Parameter / optimizer-state sharding utilities.
+
+TP placement comes from each module's ``*_specs`` (Megatron layout, paper
+§3.1). This module turns those PartitionSpecs into NamedShardings for a
+concrete mesh, and adds ZeRO-1-style optimizer-state sharding over the DP
+axes (the paper's workloads assume Megatron's distributed optimizer; without
+it the 480B arch could not fit either).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import sanitize_spec
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def param_shardings(mesh: Mesh, spec_tree, shape_tree):
+    """PartitionSpec pytree + abstract shapes -> NamedSharding pytree
+    (dropping any axis that does not divide the dim)."""
+    ms = dict(mesh.shape)
+
+    def one(spec, shaped):
+        return NamedSharding(mesh, sanitize_spec(ms, shaped.shape, spec))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=_is_spec)
+
+
+def zero1_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...], dp_axes=("data",)) -> P:
+    """Extend a param spec with DP sharding on the largest eligible dim —
+    ZeRO-1: optimizer moments are additionally partitioned across the
+    data-parallel axis, cutting their footprint |dp|-fold."""
+    ms = dict(mesh.shape)
+    dp = tuple(a for a in dp_axes if a in ms)
+    dp_size = 1
+    for a in dp:
+        dp_size *= ms[a]
+    if dp_size == 1 or not shape:
+        return spec
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    # candidate dims: unsharded, divisible by dp_size; pick the largest
+    cands = [
+        (shape[d], d)
+        for d, e in enumerate(entries)
+        if e is None and shape[d] % dp_size == 0
+    ]
+    if not cands:
+        return spec
+    _, d = max(cands)
+    entries[d] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def zero1_shardings(mesh: Mesh, spec_tree, shape_tree, dp_axes=("data",)):
+    ms = dict(mesh.shape)
+
+    def one(spec, shaped):
+        s = sanitize_spec(ms, shaped.shape, spec)
+        s = zero1_spec(mesh, s, shaped.shape, dp_axes)
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=_is_spec)

@@ -1,0 +1,5 @@
+from repro.train.steps import (  # noqa: F401
+    Setup,
+    cross_entropy,
+    make_setup,
+)

@@ -1,0 +1,25 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 device;
+multi-device tests launch subprocesses (tests/dist/)."""
+import dataclasses
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def arch_ids():
+    from repro.configs import ARCH_IDS
+
+    return ARCH_IDS
+
+
+def reduced_cfg(arch_id: str, capacity_factor: float = 8.0):
+    """Smoke config; MoE capacity raised so dispatch drops nothing (tests
+    compare against drop-free oracles)."""
+    from repro.configs import get_arch, reduced
+
+    cfg = reduced(get_arch(arch_id))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor)
+        )
+    return cfg

@@ -1,0 +1,78 @@
+"""Config registry + derived-quantity sanity."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_archs, get_arch, get_shape, reduced
+
+EXPECTED = {
+    "llama4-scout-17b-a16e": dict(n_layers=48, d_model=5120, n_heads=40,
+                                  n_kv_heads=8, d_ff=8192, vocab_size=202048),
+    "qwen2-7b": dict(n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+                     d_ff=18944, vocab_size=152064),
+    "whisper-small": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                          d_ff=3072, vocab_size=51865),
+    "mamba2-780m": dict(n_layers=48, d_model=1536, d_ff=0, vocab_size=50280),
+    "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                              n_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "gemma2-9b": dict(n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8,
+                      d_ff=14336, vocab_size=256000),
+    "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        d_ff=4864, vocab_size=32000),
+    "granite-3-2b": dict(n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+                         d_ff=8192, vocab_size=49155),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+                          d_ff=22016, vocab_size=65536),
+    "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+                        d_ff=9216, vocab_size=256000),
+}
+
+
+def test_all_ten_archs_registered():
+    assert set(EXPECTED) == set(ARCH_IDS)
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("aid", sorted(EXPECTED))
+def test_assigned_dimensions(aid):
+    cfg = get_arch(aid)
+    for k, v in EXPECTED[aid].items():
+        assert getattr(cfg, k) == v, (aid, k)
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("aid", sorted(EXPECTED))
+def test_padded_vocab_tp_divisible(aid):
+    assert get_arch(aid).padded_vocab() % 16 == 0
+
+
+def test_param_counts_plausible():
+    # headline parameter counts within 20% of the model cards
+    approx = {
+        "qwen2-7b": 7.6e9, "gemma2-9b": 9.2e9, "granite-3-2b": 2.5e9,
+        "chameleon-34b": 34e9, "minitron-4b": 4.2e9, "mamba2-780m": 0.78e9,
+        "recurrentgemma-9b": 9.6e9, "arctic-480b": 482e9,
+    }
+    for aid, want in approx.items():
+        got = get_arch(aid).n_params()
+        assert 0.75 * want < got < 1.35 * want, (aid, got, want)
+
+
+def test_moe_active_params():
+    llama4 = get_arch("llama4-scout-17b-a16e")
+    assert llama4.n_active_params() < 0.3 * llama4.n_params()
+    arctic = get_arch("arctic-480b")
+    assert arctic.n_active_params() < 0.1 * arctic.n_params()
+
+
+def test_shapes_registry():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert get_shape("long_500k").seq_len == 524_288
+    assert get_shape("train_4k").kind == "train"
+
+
+@pytest.mark.parametrize("aid", sorted(EXPECTED))
+def test_reduced_is_small(aid):
+    r = reduced(get_arch(aid))
+    assert r.d_model <= 512 and r.n_layers <= 4
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert r.layer_pattern == get_arch(aid).layer_pattern  # same family

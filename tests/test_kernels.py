@@ -1,0 +1,107 @@
+"""Pallas kernel validation: sweep shapes/dtypes/mask-kinds, allclose
+against the pure-jnp oracles in kernels/ref.py (interpret mode on CPU)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kvh,s,d,bq,bk",
+    [
+        (1, 2, 1, 128, 64, 64, 64),
+        (2, 4, 2, 256, 64, 64, 128),
+        (1, 8, 8, 256, 128, 128, 256),   # MHA
+        (2, 4, 1, 512, 32, 256, 512),    # MQA
+    ],
+)
+@pytest.mark.parametrize("kind", ["causal", "sliding", "chunked", "bidir"])
+def test_flash_attention(b, h, kvh, s, d, bq, bk, kind, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kvh, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kvh, s, d)), dtype)
+    kw = dict(window=96, chunk=128)
+    got = ops.flash_attention(q, k, v, kind=kind, block_q=bq, block_k=bk, **kw)
+    want = ref.flash_attention_ref(q, k, v, kind=kind, **kw)
+    err = np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32)).max()
+    assert err < _tol(dtype), (kind, dtype, err)
+
+
+def test_flash_attention_softcap():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, kind="causal", softcap=30.0,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, kind="causal", softcap=30.0)
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() < 3e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,br", [(256, 128, 64), (512, 384, 256), (128, 512, 128)])
+@pytest.mark.parametrize("plus_one", [False, True])
+def test_rmsnorm(n, d, br, plus_one, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    w = jnp.asarray(RNG.normal(size=(d,)) * 0.1, dtype)
+    got = ops.rmsnorm(x, w, plus_one=plus_one, block_rows=br)
+    want = ref.rmsnorm_ref(x, w, plus_one=plus_one)
+    err = np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32)).max()
+    assert err < _tol(dtype)
+
+
+@pytest.mark.parametrize("bh,s,hp,ds,chunk", [
+    (2, 64, 16, 32, 16), (3, 128, 16, 32, 32), (1, 256, 64, 128, 64),
+])
+def test_ssd_scan(bh, s, hp, ds, chunk):
+    x = jnp.asarray(RNG.normal(size=(bh, s, hp)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(bh, s)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(bh,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(bh, s, ds)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(bh, s, ds)) * 0.3, jnp.float32)
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt, A, B, C)
+    err = np.abs(np.asarray(got) - np.asarray(want)).max()
+    assert err < 5e-4, err
+
+
+def test_ssd_kernel_matches_model_path():
+    """Kernel == models/ssm.py chunked implementation (two formulations)."""
+    from repro.models.ssm import _ssd_chunked
+
+    b, s, nh, hp, ds = 2, 64, 3, 16, 32
+    x = jnp.asarray(RNG.normal(size=(b, s, nh, hp)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(nh,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, ds)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, ds)) * 0.3, jnp.float32)
+    h0 = jnp.zeros((b, nh, hp, ds), jnp.float32)
+    want, _ = _ssd_chunked(x, dt, A, B, C, h0, 16)
+
+    xk = x.transpose(0, 2, 1, 3).reshape(b * nh, s, hp)
+    dtk = dt.transpose(0, 2, 1).reshape(b * nh, s)
+    Ak = jnp.tile(A, b)
+    Bk = jnp.repeat(B[:, None], nh, 1).reshape(b * nh, s, ds)
+    Ck = jnp.repeat(C[:, None], nh, 1).reshape(b * nh, s, ds)
+    got = ops.ssd_scan(xk, dtk, Ak, Bk, Ck, chunk=16)
+    got = got.reshape(b, nh, s, hp).transpose(0, 2, 1, 3)
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() < 5e-4
+
+
+@pytest.mark.parametrize("u,elems,n,smax", [(10, 8, 4, 5), (33, 128, 8, 9)])
+def test_reshard_pack(u, elems, n, smax):
+    src = jnp.asarray(
+        np.vstack([RNG.normal(size=(u, elems)), np.zeros((1, elems))]),
+        jnp.float32,
+    )
+    idx = jnp.asarray(RNG.integers(0, u + 1, size=(n, smax)), jnp.int32)
+    got = ops.reshard_pack(src, idx)
+    want = ref.reshard_pack_ref(src, idx)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) for the paper's Algorithm 1 and the
+reshard tables — the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shard_mapping as sm
+
+dims = st.integers(min_value=1, max_value=32).flatmap(
+    lambda n1: st.tuples(
+        st.integers(min_value=max(1, n1), max_value=512),  # k >= n1
+        st.just(n1),
+        st.integers(min_value=1, max_value=n1),
+    )
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims)
+def test_comp_assignment_invariants(knn):
+    k, n1, n2 = knn
+    comp = sm.comp_assignment(k, n1, n2)
+    sync = sm.sync_assignment(k, n2)
+    # every unit placed on a valid rank
+    assert comp.shape == (k,)
+    assert comp.min() >= 0 and comp.max() < n1
+    # balanced within one unit
+    counts = np.bincount(comp, minlength=n1)
+    assert counts.max() - counts.min() <= 1
+    # sync layout: contiguous, balanced, only ranks < n2
+    scounts = np.bincount(sync, minlength=n1)
+    assert (scounts[n2:] == 0).all()
+    assert scounts[:n2].max() - scounts[:n2].min() <= 1
+    assert (np.diff(sync) >= 0).all()  # contiguous == monotone
+    # degenerate: no failures -> identical layouts (zero reshard traffic)
+    if n1 == n2:
+        assert (comp == sync).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims)
+def test_sync_ranks_keep_prefix(knn):
+    """Sync rank j computes a prefix of its own sync shard (minimal motion)."""
+    k, n1, n2 = knn
+    comp = sm.comp_assignment(k, n1, n2)
+    sync = sm.sync_assignment(k, n2)
+    target = sm.balanced_sizes(k, n1)
+    for j in range(n2):
+        units = np.where(sync == j)[0]
+        keep = min(len(units), target[j])
+        assert (comp[units[:keep]] == j).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims)
+def test_offload_traffic_balanced(knn):
+    """Algorithm 1's rotation: pairwise offload transfers differ by <= 1 unit
+    per (sync, offload) pair... bounded by ceil-fairness across offload ranks."""
+    k, n1, n2 = knn
+    c = sm.comp_layout(k, n1, n2)
+    s = sm.sync_layout(k, n1, n2)
+    tm = sm.transfer_matrix(c, s)
+    if n1 > n2:
+        recv_per_offload = tm[n2:, :].sum(axis=1)
+        # each offload rank relays its full comp load
+        assert recv_per_offload.max() - recv_per_offload.min() <= 1
+
+
+@settings(max_examples=80, deadline=None)
+@given(dims)
+def test_reshard_tables_roundtrip(knn):
+    """pre then post tables map every unit back where it started."""
+    k, n1, n2 = knn
+    c, s, pre, post = sm.plan(k, n1, n2)
+    buf = pre.buf
+    # simulate the data movement with numpy
+    src = np.full((n1, buf), -1, dtype=np.int64)
+    src[:, : c.max_count] = c.slots
+
+    def apply(tables, src_state, dst_layout):
+        out = np.full((n1, buf), -1, dtype=np.int64)
+        for r in range(n1):
+            for t in range(buf):
+                u = tables.stay_idx[r, t]
+                if u != tables.pad:
+                    out[r, t] = src_state[r, u]
+        for r in range(n1):
+            for d in range(n1):
+                for m in range(tables.s_max):
+                    su = tables.send_idx[r, d, m]
+                    du = tables.recv_idx[d, r, m]
+                    if su != tables.pad and du != tables.pad:
+                        out[d, du] = src_state[r, su]
+        return out
+
+    mid = apply(pre, src, s)
+    # mid must equal the sync layout
+    want_mid = np.full((n1, buf), -1, dtype=np.int64)
+    want_mid[:, : s.max_count] = s.slots
+    assert (mid == want_mid).all()
+    back = apply(post, mid, c)
+    assert (back == src).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims, st.integers(min_value=1, max_value=4096))
+def test_reshard_bytes_sane(knn, unit_bytes):
+    k, n1, n2 = knn
+    c = sm.comp_layout(k, n1, n2)
+    s = sm.sync_layout(k, n1, n2)
+    per_rank = sm.reshard_bytes_per_rank(c, s, unit_bytes)
+    assert (per_rank >= 0).all()
+    if n1 == n2:
+        assert per_rank.sum() == 0
+    # total moved <= everything
+    assert per_rank.max() <= k * unit_bytes

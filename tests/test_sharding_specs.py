@@ -1,0 +1,78 @@
+"""Sharding-spec consistency: for every arch, the PartitionSpec tree must
+mirror the param tree exactly, TP-sharded dims must divide by the mesh, and
+ZeRO-1 must add a data axis without clobbering TP placement."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS
+from repro.models import build_model
+from repro.models.common import sanitize_spec
+
+from conftest import reduced_cfg
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+@pytest.mark.parametrize("aid", sorted(ARCH_IDS))
+def test_param_specs_mirror_params(aid):
+    cfg = reduced_cfg(aid)
+    m = build_model(cfg)
+    pshape = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = m.param_specs()
+    s1 = jax.tree_util.tree_structure(jax.tree.map(lambda x: 0, pshape))
+    s2 = jax.tree_util.tree_structure(
+        jax.tree.map(lambda s: 0, specs, is_leaf=_is_spec)
+    )
+    assert s1 == s2
+    # every spec has rank <= leaf rank
+    for spec, leaf in zip(
+        jax.tree.leaves(specs, is_leaf=_is_spec), jax.tree.leaves(pshape)
+    ):
+        assert len(tuple(spec)) <= leaf.ndim, (spec, leaf.shape)
+
+
+def test_full_arch_specs_divisible_on_production_mesh():
+    """FULL configs: after sanitize, every sharded dim divides 16 (the
+    `model` axis); embedding/lm-head stay vocab-sharded (padded vocab)."""
+    from repro.configs import get_arch
+
+    mesh_shape = {"data": 16, "model": 16}
+    for aid in ARCH_IDS:
+        cfg = get_arch(aid)
+        m = build_model(cfg)
+        pshape = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        specs = m.param_specs()
+        flat_specs = jax.tree.leaves(specs, is_leaf=_is_spec)
+        flat_shapes = jax.tree.leaves(pshape)
+        n_sharded = 0
+        for spec, leaf in zip(flat_specs, flat_shapes):
+            s = sanitize_spec(mesh_shape, leaf.shape, spec)
+            for d, names in enumerate(tuple(s)):
+                if names is None:
+                    continue
+                n_sharded += 1
+                size = 1
+                for n in (names if isinstance(names, tuple) else (names,)):
+                    size *= mesh_shape[n]
+                assert leaf.shape[d] % size == 0
+        assert n_sharded > 0, aid
+        # embedding must shard (padded vocab)
+        emb_spec = sanitize_spec(mesh_shape, pshape["embed"].shape, specs["embed"])
+        assert tuple(emb_spec)[0] is not None, aid
+
+
+def test_zero1_adds_data_axis():
+    from repro.sharding.specs import zero1_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    s = zero1_spec(FakeMesh(), P(None, "model"), (4096, 1024))
+    assert tuple(s)[0] == "data"
+    # never steals a TP axis
+    s2 = zero1_spec(FakeMesh(), P("model", None), (16, 7))  # nothing divisible
+    assert tuple(s2) == ("model", None)
