@@ -11,6 +11,7 @@ we also run the reshard collective for real on 8 fake CPU devices elsewhere
 import numpy as np
 
 from repro.core import shard_mapping as sm
+from repro.runtime import ClusterHealth, plan_from_health
 
 A100_FLOPS = 312e12 * 0.5      # bf16 peak × achievable
 NVLINK_BW = 600e9 / 2          # per-direction
@@ -29,10 +30,16 @@ def workload_points():
 def comm_comp_ratio(hidden, seq, tp_red, tp=8, local_batch=1, unit=128):
     d_ff = 4 * hidden
     n_params_layer = 4 * hidden * hidden + 3 * hidden * d_ff
+    # one domain loses (tp - tp_red) GPUs; the packed plan's sync degree is
+    # the Algorithm-1 n2 (runtime event/health bridge, DESIGN.md §2.1)
+    fplan = plan_from_health(ClusterHealth(
+        domain_size=tp, failed=(tp - tp_red, 0),
+    ))
+    n2 = fplan.n_sync
     # reshard bytes: per-rank max over the layer's two sharded weights
     k_ff = d_ff // unit
-    c = sm.comp_layout(k_ff, tp, tp_red)
-    s = sm.sync_layout(k_ff, tp, tp_red)
+    c = sm.comp_layout(k_ff, tp, n2)
+    s = sm.sync_layout(k_ff, tp, n2)
     unit_bytes = unit * hidden * 2 * 3       # gate+up+down rows, bf16
     reshard = sm.reshard_bytes_per_rank(c, s, unit_bytes).max()
     # attention units = kv groups ~ heads/…: fold in as params share

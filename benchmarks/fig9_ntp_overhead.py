@@ -1,6 +1,11 @@
 """Fig. 9 analogue: NTP end-to-end overhead breakdown, derived structurally
 from the compiled NTP train step at the production mesh
-(results/ntp_dryrun.json — `python -m repro.launch.dryrun_ntp`)."""
+(results/ntp_dryrun.json — `python -m repro.launch.dryrun_ntp`).
+
+The dryrun builds its step through the runtime API (`plan_from_health` +
+`Mode` + the pluggable-optimizer step builder), so the collectives accounted
+here are exactly the ones an `NTPSession` executes after a failure event.
+"""
 import json
 import os
 
@@ -19,7 +24,10 @@ def run():
     with open(PATH) as f:
         rep = json.load(f)
     h, d, ov = rep["healthy"], rep["degraded"], rep["overhead"]
+    plans = f"plans {h.get('replica_tp')} -> {d.get('replica_tp')}"
     rows = [
+        {"name": "fig9/modes", "value": 1,
+         "derived": f"{h.get('mode')} -> {d.get('mode')} ({plans})"},
         {"name": "fig9/healthy/allreduce_s", "value": round(h["allreduce_s"], 4),
          "derived": f"a2a={h['reshard_s']:.4f}s compute={h['compute_s']:.4f}s"},
         {"name": "fig9/degraded/allreduce_s", "value": round(d["allreduce_s"], 4),

@@ -2,9 +2,10 @@
 
   PYTHONPATH=src python examples/quickstart.py [--steps 60]
 
-Uses the same public API as the production launcher (configs → make_setup →
-jit_step): pick any assigned arch with --arch; --reduced swaps in the
-smoke-scale variant so it runs in seconds on CPU.
+Uses the runtime session API — the same entry point the NTP failure demo and
+the launcher route through (`NTPSession.from_arch` wraps configs →
+make_setup → jit_step): pick any assigned arch with --arch; --reduced-style
+smoke scale is applied automatically so it runs in seconds on CPU.
 """
 import argparse
 import functools
@@ -16,8 +17,8 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced
 from repro.configs.shapes import ShapeSpec
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
-from repro.optim import AdamWConfig, adamw_init, warmup_cosine
-from repro.train.steps import make_setup
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.runtime import NTPSession
 
 
 def main():
@@ -29,15 +30,14 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
-    su = make_setup(
+    session = NTPSession.from_arch(
         cfg, ShapeSpec("quickstart", args.seq, args.batch, "train"), None,
         param_dtype=jnp.float32, opt_cfg=AdamWConfig(lr=2e-3),
         lr_schedule=functools.partial(warmup_cosine, warmup=10, total=5000),
+        key=jax.random.PRNGKey(0),
     )
-    step = su.jit_step()
-    params = su.model.init(jax.random.PRNGKey(0))
-    opt = adamw_init(params, su.opt_cfg)
-    print(f"{cfg.arch_id}: {sum(p.size for p in jax.tree.leaves(params))/1e6:.2f}M params")
+    n_par = sum(p.size for p in jax.tree.leaves(session.params))
+    print(f"{cfg.arch_id}: {n_par/1e6:.2f}M params (mode {session.mode.value})")
 
     pipe = SyntheticLMPipeline(DataConfig(cfg.vocab_size, args.seq, args.batch, noise=0.02))
     t0 = time.time()
@@ -45,7 +45,7 @@ def main():
         batch = pipe.batch(i)
         if cfg.encoder is not None:
             batch["enc_input"] = jnp.zeros((args.batch, cfg.encoder.enc_seq, cfg.d_model))
-        params, opt, m = step(params, opt, batch)
+        m = session.step(batch)
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
                   f"({time.time()-t0:.1f}s)")

@@ -1,8 +1,13 @@
 """End-to-end NTP driver (the paper's scenario, §3/§5): train a model
-data-parallel over two scale-up domains, kill a GPU mid-run, restart with
-nonuniform tensor parallelism (TP4 + TP3) per the resource manager, and keep
-training THE SAME weights — loss continues smoothly while DP-DROP would have
-lost a replica (and the fixed minibatch).
+data-parallel over two scale-up domains, kill a GPU mid-run, and keep
+training THE SAME weights with nonuniform tensor parallelism (TP4 + TP3) —
+loss continues smoothly while DP-DROP would have lost a replica (and the
+fixed minibatch).
+
+Everything routes through the runtime session API: the failure is a
+`FailureEvent` consumed by `NTPSession.apply()`, which replans via the
+resource manager and repacks params + AdamW state in place — no hand-rolled
+unpack/pack round-trip, no checkpoint restart.
 
 Run with 8 simulated devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -19,10 +24,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import nonuniform as nu
-from repro.core import ntp_train as nt
 from repro.core.policies import table1_settings
 from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+from repro.optim import AdamWConfig, adamw
+from repro.runtime import FailureEvent, NTPModelConfig, NTPSession
 
 
 def main():
@@ -30,7 +35,7 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--fail-at", type=int, default=None, help="default steps//2")
     ap.add_argument("--big", action="store_true", help="~100M params")
-    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=4)
     args = ap.parse_args()
@@ -43,21 +48,22 @@ def main():
     mesh = jax.make_mesh((2, 4), ("data", "model"))
 
     if args.big:
-        cfg = nt.NTPModelConfig(d_model=768, n_kv_groups=8, q_per_kv=2,
-                                head_dim=48, d_ff=3072, unit_rows=128,
-                                n_layers=12, vocab=8192)
+        cfg = NTPModelConfig(d_model=768, n_kv_groups=8, q_per_kv=2,
+                             head_dim=48, d_ff=3072, unit_rows=128,
+                             n_layers=12, vocab=8192)
     else:
-        cfg = nt.NTPModelConfig(d_model=256, n_kv_groups=8, q_per_kv=2,
-                                head_dim=32, d_ff=1024, unit_rows=128,
-                                n_layers=4, vocab=2048)
+        cfg = NTPModelConfig(d_model=256, n_kv_groups=8, q_per_kv=2,
+                             head_dim=32, d_ff=1024, unit_rows=128,
+                             n_layers=4, vocab=2048)
 
-    canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
-    n_par = sum(p.size for p in jax.tree.leaves(canon))
+    session = NTPSession.create(
+        cfg, mesh, local_batch=args.local_batch,
+        optimizer=adamw(AdamWConfig(lr=args.lr)),
+        key=jax.random.PRNGKey(0),
+    )
+    n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"model: {n_par/1e6:.1f}M params; mesh data=2 model=4 "
-          f"(2 DP replicas × TP4 scale-up domains)")
-
-    healthy = nu.FailurePlan(n1=4, replica_tp=(4, 4))
-    degraded = nu.FailurePlan(n1=4, replica_tp=(4, 3))  # GPU (1,3) died
+          f"(2 DP replicas × TP4 scale-up domains); plan {session.plan}")
 
     pipe = SyntheticLMPipeline(
         DataConfig(cfg.vocab, args.seq, 2 * args.local_batch, noise=0.0)
@@ -67,37 +73,27 @@ def main():
         return jnp.asarray(pipe._batch_np(step))
 
     # ---- phase 1: healthy uniform training --------------------------------
-    params = nt.pack_params(cfg, canon, healthy)
-    step_fn, _ = nt.make_ntp_train_step(
-        cfg, healthy, mesh, mode="uniform", local_batch=args.local_batch,
-        lr=args.lr,
-    )
     losses = []
     t0 = time.time()
     for i in range(fail_at):
-        params, loss = step_fn(params, batches(i))
-        losses.append(float(loss))
+        losses.append(float(session.step(batches(i))["loss"]))
         if i % 20 == 0:
             print(f"[healthy TP4+TP4] step {i:4d} loss {losses[-1]:.4f}")
 
-    # ---- failure: GPU dies in replica 1's domain ---------------------------
+    # ---- failure: a GPU dies in one replica's scale-up domain --------------
     print(f"\n*** step {fail_at}: GPU failure in replica 1's scale-up domain —"
-          " restarting with NTP (TP4 + TP3) ***")
-    print("    resource manager: degraded domain packed to replica index 1;")
-    print(f"    replica 1 local batch {args.local_batch} -> "
-          f"{degraded.local_batch_fraction(args.local_batch)[1]} (paper §3.1);")
-    print("    sync layout: contiguous over TP3; Alg-1 reshard tables built.\n")
+          " replanning with NTP ***")
+    plan = session.apply(FailureEvent(step=fail_at, replica=1))
+    lb = plan.local_batch_fraction(args.local_batch)
+    print(f"    resource manager: degraded domain packed to the lowest rank;"
+          f" new plan {plan};")
+    print(f"    degraded replica local batch {args.local_batch} -> "
+          f"{lb.min()} (paper §3.1);")
+    print("    params + AdamW moments repacked in place; Alg-1 reshard "
+          "tables rebuilt.\n")
 
-    # carry the same weights across the restart (checkpoint-equivalent)
-    canon_now = nt.unpack_params(cfg, params, healthy, replica=0)
-    params = nt.pack_params(cfg, canon_now, degraded)
-    step_fn, _ = nt.make_ntp_train_step(
-        cfg, degraded, mesh, mode="ntp", local_batch=args.local_batch,
-        lr=args.lr,
-    )
     for i in range(fail_at, args.steps):
-        params, loss = step_fn(params, batches(i))
-        losses.append(float(loss))
+        losses.append(float(session.step(batches(i))["loss"]))
         if i % 20 == 0:
             print(f"[NTP TP4+TP3]     step {i:4d} loss {losses[-1]:.4f}")
 
@@ -107,11 +103,13 @@ def main():
     print(f"\nloss around the failure: {pre:.4f} -> {post:.4f} "
           f"(continuity gap {abs(post-pre):.4f})")
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); {dt:.1f}s total")
-    print("\nWith power boosting (NTP-PW) replica 1 would keep local batch 4;")
+    print("\nWith power boosting (NTP-PW) the degraded replica would keep "
+          f"local batch {args.local_batch};")
     for r in table1_settings():
         print("  ", r)
     assert losses[-1] < losses[0], "training diverged"
-    print("\nOK: training survived the failure with nonuniform TP.")
+    print("\nOK: training survived the failure with nonuniform TP "
+          f"(events consumed: {len(session.events)}).")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""jax version-compatibility shims.
+
+``shard_map`` graduated from jax.experimental (where the replication-check
+kwarg is ``check_rep``) to the jax namespace (``check_vma``); wrap both so
+the rest of the codebase writes one call.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )

@@ -19,19 +19,40 @@ and a dense single-logical-copy reference for equivalence tests.
 """
 from __future__ import annotations
 
+import enum
 import functools
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core import nonuniform as nu
 from repro.core import reshard as rs
+from repro.optim.base import Optimizer, sgd
+
+
+class Mode(enum.Enum):
+    """Gradient-synchronization regime of one training job (DESIGN.md §2.2).
+
+    UNIFORM  — every replica healthy; plain DP all-reduce.
+    NTP      — nonuniform TP: reshard → psum('data') → reshard sync.
+    DP_DROP  — baseline: replicas containing a failure contribute nothing.
+    """
+
+    UNIFORM = "uniform"
+    NTP = "ntp"
+    DP_DROP = "dpdrop"
+
+    @classmethod
+    def coerce(cls, v: Union["Mode", str]) -> "Mode":
+        if isinstance(v, Mode):
+            return v
+        return cls(str(v).lower().replace("-", "").replace("_", ""))
 
 
 @dataclass(frozen=True)
@@ -114,26 +135,32 @@ def _pack_unit(w, wp: nu.WeightPlan):
     ))
 
 
+def _copy(x):
+    # replicated leaves pass through pack/unpack unchanged: materialize a
+    # fresh buffer so donated step inputs never alias caller-held trees
+    return jnp.array(x, copy=True)
+
+
 def pack_params(cfg: NTPModelConfig, canonical: Dict, fplan: nu.FailurePlan) -> Dict:
     plans = _plans(cfg, fplan)
     out = {
-        "embed": canonical["embed"],
-        "head": canonical["head"],
-        "final_norm": canonical["final_norm"],
+        "embed": _copy(canonical["embed"]),
+        "head": _copy(canonical["head"]),
+        "final_norm": _copy(canonical["final_norm"]),
         "layers": [],
     }
     for lp in canonical["layers"]:
         out["layers"].append(
             {
-                "ln1": lp["ln1"],
-                "ln2": lp["ln2"],
+                "ln1": _copy(lp["ln1"]),
+                "ln2": _copy(lp["ln2"]),
                 "wq": _pack_unit(lp["wq"], plans["attn"]),
                 "wk": _pack_unit(lp["wk"], plans["attn"]),
                 "wv": _pack_unit(lp["wv"], plans["attn"]),
                 "wo": _pack_unit(lp["wo"], plans["attn"]),
                 "A": _pack_unit(lp["A"], plans["mlp"]),
                 "B": _pack_unit(lp["B"], plans["mlp"]),
-                **({"router": lp["router"]} if "router" in lp else {}),
+                **({"router": _copy(lp["router"])} if "router" in lp else {}),
             }
         )
     return out
@@ -150,37 +177,53 @@ def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan: nu.FailurePlan,
         return jnp.asarray(out)
 
     out = {
-        "embed": packed["embed"],
-        "head": packed["head"],
-        "final_norm": packed["final_norm"],
+        "embed": _copy(packed["embed"]),
+        "head": _copy(packed["head"]),
+        "final_norm": _copy(packed["final_norm"]),
         "layers": [],
     }
     for lp in packed["layers"]:
         out["layers"].append(
             {
-                "ln1": lp["ln1"],
-                "ln2": lp["ln2"],
+                "ln1": _copy(lp["ln1"]),
+                "ln2": _copy(lp["ln2"]),
                 "wq": unp(lp["wq"], plans["attn"]),
                 "wk": unp(lp["wk"], plans["attn"]),
                 "wv": unp(lp["wv"], plans["attn"]),
                 "wo": unp(lp["wo"], plans["attn"]),
                 "A": unp(lp["A"], plans["mlp"]),
                 "B": unp(lp["B"], plans["mlp"]),
-                **({"router": lp["router"]} if "router" in lp else {}),
+                **({"router": _copy(lp["router"])} if "router" in lp else {}),
             }
         )
     return out
 
 
+def repack_params(cfg: NTPModelConfig, packed: Dict, old: nu.FailurePlan,
+                  new: nu.FailurePlan, *, replica: int = 0) -> Dict:
+    """Re-express a packed tree under a new failure plan (params or any tree
+    mirroring the param structure, e.g. AdamW moments). The canonical weights
+    are recovered from ``replica`` of the old layout — every replica holds the
+    same logical units after sync, so any index is equivalent."""
+    if new == old:
+        return packed
+    return pack_params(cfg, unpack_params(cfg, packed, old, replica), new)
+
+
 # ---------------------------------------------------------------------------
-# forward (local math inside shard_map)
+# forward (local math inside shard_map; model_axis=None -> dense reference
+# with no collectives — every unit on one logical rank)
+
+def _psum(x, axis):
+    return jax.lax.psum(x, axis) if axis is not None else x
+
 
 def _rms(x, w):
     v = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
     return x * jax.lax.rsqrt(v + 1e-6) * w
 
 
-def _attn_local(lp, h, cfg: NTPModelConfig):
+def _attn_local(lp, h, cfg: NTPModelConfig, model_axis="model"):
     """h: (B,S,d) replicated; unit-buffered weights (U, d, ...)."""
     b, s, d = h.shape
     q = jnp.einsum("bsd,udr->bsur", h, lp["wq"])
@@ -195,16 +238,16 @@ def _attn_local(lp, h, cfg: NTPModelConfig):
     out = jnp.einsum("bugst,btuh->bsugh", probs.astype(h.dtype), v)
     out = out.reshape(b, s, u, cfg.q_per_kv * cfg.head_dim)
     y = jnp.einsum("bsur,urd->bsd", out, lp["wo"])
-    return jax.lax.psum(y, "model")
+    return _psum(y, model_axis)
 
 
-def _mlp_local(lp, h):
+def _mlp_local(lp, h, model_axis="model"):
     a = jax.nn.gelu(jnp.einsum("bsd,udf->bsuf", h, lp["A"]))
     z = jnp.einsum("bsuf,ufd->bsd", a, lp["B"])
-    return jax.lax.psum(z, "model")
+    return _psum(z, model_axis)
 
 
-def _moe_local(lp, h, unit_ids, cfg: NTPModelConfig):
+def _moe_local(lp, h, unit_ids, cfg: NTPModelConfig, model_axis="model"):
     """NTP-MoE ffn: partition unit = whole expert (DESIGN.md §4). Each rank
     computes its local expert units on all tokens (dense-masked prototype
     formulation), gated by the replicated router; zero-padded units are
@@ -223,29 +266,46 @@ def _moe_local(lp, h, unit_ids, cfg: NTPModelConfig):
     y = jnp.einsum("bsuf,ufd->bsud", a, lp["B"])
     gate_u = gates[..., jnp.clip(unit_ids, 0)] * (unit_ids >= 0)
     z = jnp.einsum("bsud,bsu->bsd", y, gate_u.astype(y.dtype))
-    return jax.lax.psum(z, "model")
+    return _psum(z, model_axis)
 
 
 def _forward_local(cfg: NTPModelConfig, params, tokens, sample_mask,
-                   moe_unit_ids=None):
+                   moe_unit_ids=None, axes=("data", "model")):
     """tokens: (B, S+1) local; sample_mask: (B,) bool. Returns global loss.
-    moe_unit_ids: (U,) this rank's global expert id per slot (MoE mode)."""
+    moe_unit_ids: (U,) this rank's global expert id per slot (MoE mode).
+    axes=(None, None) runs the dense single-logical-copy reference."""
+    data_axis, model_axis = axes
     inp, tgt = tokens[:, :-1], tokens[:, 1:]
     x = params["embed"][inp]
     for lp in params["layers"]:
-        x = x + _attn_local(lp, _rms(x, lp["ln1"]), cfg)
+        x = x + _attn_local(lp, _rms(x, lp["ln1"]), cfg, model_axis)
         if cfg.is_moe:
-            x = x + _moe_local(lp, _rms(x, lp["ln2"]), moe_unit_ids, cfg)
+            x = x + _moe_local(lp, _rms(x, lp["ln2"]), moe_unit_ids, cfg, model_axis)
         else:
-            x = x + _mlp_local(lp, _rms(x, lp["ln2"]))
+            x = x + _mlp_local(lp, _rms(x, lp["ln2"]), model_axis)
     logits = jnp.einsum("bsd,dv->bsv", _rms(x, params["final_norm"]), params["head"])
     logits = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
     tok_loss = (lse - ll) * sample_mask[:, None]
-    total = jax.lax.psum(tok_loss.sum(), "data")
-    count = jax.lax.psum((sample_mask[:, None] * jnp.ones_like(tok_loss)).sum(), "data")
+    total = _psum(tok_loss.sum(), data_axis)
+    count = _psum((sample_mask[:, None] * jnp.ones_like(tok_loss)).sum(), data_axis)
     return total / jnp.maximum(count, 1.0)
+
+
+def make_reference_loss(cfg: NTPModelConfig):
+    """Dense single-logical-copy loss on CANONICAL params — no mesh, no
+    collectives; the oracle for the NTP equivalence tests.
+
+    loss(canonical_params, tokens (B,S+1), sample_mask (B,)) -> scalar.
+    """
+    uids = jnp.arange(cfg.k_ff, dtype=jnp.int32) if cfg.is_moe else None
+
+    def loss(canonical, tokens, sample_mask):
+        return _forward_local(cfg, canonical, tokens, sample_mask, uids,
+                              axes=(None, None))
+
+    return loss
 
 
 # ---------------------------------------------------------------------------
@@ -259,19 +319,28 @@ def make_ntp_train_step(
     fplan: nu.FailurePlan,
     mesh,
     *,
-    mode: str = "ntp",           # 'ntp' | 'dpdrop' | 'uniform'
+    mode: Union[Mode, str] = Mode.NTP,
     local_batch: int = 4,
-    lr: float = 1e-2,
+    optimizer: Optional[Optimizer] = None,
 ):
-    """Returns (step, param_in_specs). step(params, batch) -> (params, loss).
-    SGD update (the sync math, not the optimizer, is what NTP changes)."""
+    """Returns ``step`` with the same contract as train/steps.py:
+
+        step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``metrics`` carries at least ``loss`` and ``grad_norm``. The optimizer is
+    pluggable (repro.optim.sgd / repro.optim.adamw) — the sync math, not the
+    optimizer, is what NTP changes, so any elementwise update is legal on the
+    packed buffers (every replica holds identical synced unit gradients and
+    padded slots stay zero; DESIGN.md §2.3)."""
+    mode = Mode.coerce(mode)
+    optimizer = optimizer or sgd(1e-2)
     plans = _plans(cfg, fplan)
     d_axis = fplan.d
 
     # per-replica usable local batch
-    if mode == "ntp":
+    if mode is Mode.NTP:
         lb = fplan.local_batch_fraction(local_batch)
-    elif mode == "dpdrop":
+    elif mode is Mode.DP_DROP:
         lb = np.array([
             local_batch if t == fplan.n1 else 0 for t in fplan.replica_tp
         ])
@@ -338,7 +407,7 @@ def make_ntp_train_step(
                 wp = plans["attn"] if key in ("wq", "wk", "wv", "wo") else plans["mlp"]
                 g = g.reshape(g.shape[1:])  # drop replica dim
                 orig_shape = g.shape
-                if mode == "ntp" and not fplan.healthy:
+                if mode is Mode.NTP and not fplan.healthy:
                     g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
                     g = g.reshape(orig_shape)
                 else:
@@ -352,11 +421,23 @@ def make_ntp_train_step(
             check_vma=False,
         )(grads)
 
-    @jax.jit
-    def step(params, batch):
+    def norm_weights(params):
+        # packed unit buffers hold D identical copies of every synced unit
+        # gradient: weight them 1/D so the global grad norm (clipping + the
+        # grad_norm metric) equals the canonical-training norm exactly
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: 1.0 / d_axis if _key(path) in UNIT_KEYS else 1.0,
+            params,
+        )
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(global_loss)(params, batch)
         grads = sync_grads(grads)
-        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-        return new_params, loss
+        new_params, new_state, metrics = optimizer.update(
+            grads, opt_state, params, norm_weights=norm_weights(grads)
+        )
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
 
-    return step, None
+    return step

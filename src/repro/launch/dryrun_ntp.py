@@ -16,10 +16,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import nonuniform as nu
 from repro.core import ntp_train as nt
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.dryrun import LINK_BW, PEAK_FLOPS
+from repro.optim import sgd
+from repro.runtime import ClusterHealth, Mode, plan_from_health
 
 
 def build_cfg(d_model: int = 6144) -> nt.NTPModelConfig:
@@ -40,10 +41,17 @@ def run(replica_tp, *, d_model: int = 6144, local_batch: int = 1, seq: int = 204
     mesh = jax.make_mesh(mesh_shape, ("data", "model"),
                          devices=jax.devices()[:n])
     cfg = build_cfg(d_model)
-    fplan = nu.FailurePlan(n1=mesh_shape[1], replica_tp=tuple(replica_tp))
-    mode = "uniform" if fplan.healthy else "ntp"
-    step, _ = nt.make_ntp_train_step(
-        cfg, fplan, mesh, mode=mode, local_batch=local_batch, lr=1e-2,
+    # event/health bridge: replica_tp -> per-domain failures -> packed plan
+    health = ClusterHealth(
+        domain_size=mesh_shape[1],
+        failed=tuple(mesh_shape[1] - t for t in replica_tp),
+    )
+    fplan = plan_from_health(health)
+    mode = Mode.UNIFORM if fplan.healthy else Mode.NTP
+    optimizer = sgd(1e-2)  # memory-neutral: dryrun reports temp bytes
+    step = nt.make_ntp_train_step(
+        cfg, fplan, mesh, mode=mode, local_batch=local_batch,
+        optimizer=optimizer,
     )
     canon_shapes = jax.eval_shape(
         lambda k: nt.init_canonical(cfg, k), jax.random.PRNGKey(0)
@@ -57,14 +65,15 @@ def run(replica_tp, *, d_model: int = 6144, local_batch: int = 1, seq: int = 204
     packed_abs = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), packed
     )
-    lowered = jax.jit(step).lower(packed_abs, tokens)
+    opt_abs = jax.eval_shape(optimizer.init, packed_abs)
+    lowered = step.lower(packed_abs, opt_abs, tokens)
     compiled = lowered.compile()
     hlo = analyze_hlo(compiled.as_text())
     a2a = hlo["collectives"].get("all-to-all", {"count": 0, "moved_bytes": 0})
     ar = hlo["collectives"].get("all-reduce", {"count": 0, "moved_bytes": 0})
     return {
-        "replica_tp": list(replica_tp),
-        "mode": mode,
+        "replica_tp": list(fplan.replica_tp),
+        "mode": mode.value,
         "flops_per_device": hlo["flops"],
         "compute_s": hlo["flops"] / PEAK_FLOPS,
         "all_to_all": a2a,

@@ -4,6 +4,12 @@ Examples (CPU container — reduced configs execute, full configs dry-run):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \\
       --steps 20 --seq-len 128 --batch 8
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --dry-run
+
+NTP mode — train the nonuniform-TP prototype through the runtime session and
+inject a mid-run GPU failure (consumed as a FailureEvent, replanned in
+place):
+  PYTHONPATH=src python -m repro.launch.train --ntp --devices 8 \\
+      --steps 40 --fail-at 20 [--fail-replica 1]
 """
 import argparse
 import os
@@ -12,7 +18,16 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="arch config id (required unless --ntp)")
+    ap.add_argument("--ntp", action="store_true",
+                    help="train the NTP prototype via the runtime session")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a GPU failure before this step (NTP mode)")
+    ap.add_argument("--fail-replica", type=int, default=1,
+                    help="DP replica whose scale-up domain loses a GPU")
+    ap.add_argument("--fail-gpus", type=int, default=1,
+                    help="GPUs lost in the failure event")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant of the arch family")
@@ -30,6 +45,11 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="fake CPU devices for a (2, n/2) test mesh")
     args = ap.parse_args()
+    if args.arch is None and not args.ntp:
+        ap.error("--arch is required unless --ntp is given")
+    if args.ntp and args.dry_run:
+        ap.error("--ntp has no --dry-run path; use python -m "
+                 "repro.launch.dryrun_ntp for compile-only NTP accounting")
 
     if args.dry_run:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -37,6 +57,10 @@ def main() -> None:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}"
         )
+
+    if args.ntp:
+        _run_ntp(args)
+        return
 
     import jax
     import jax.numpy as jnp
@@ -104,5 +128,69 @@ def main() -> None:
         print(f"final checkpoint -> {args.ckpt}")
 
 
+def _run_ntp(args) -> None:
+    """NTP prototype through the runtime session, with an optional injected
+    mid-training failure — the paper's scenario as a launcher flag."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import DataConfig, SyntheticLMPipeline
+    from repro.launch.mesh import make_test_mesh
+    from repro.optim import AdamWConfig, adamw
+    from repro.runtime import FailureEvent, NTPModelConfig, NTPSession
+
+    n_dev = args.devices or 8
+    if len(jax.devices()) < n_dev:
+        raise SystemExit(
+            f"need {n_dev} devices: pass --devices {n_dev} (or set XLA_FLAGS)"
+        )
+    if args.fail_at is not None and not 0 <= args.fail_replica < 2:
+        raise SystemExit(
+            f"--fail-replica {args.fail_replica} out of range for 2 DP replicas"
+        )
+    mesh = make_test_mesh(2, n_dev // 2)
+    n1 = n_dev // 2
+    cfg = NTPModelConfig(
+        d_model=256, n_kv_groups=2 * n1, q_per_kv=2, head_dim=32,
+        d_ff=max(512, 128 * n1), unit_rows=128, n_layers=2, vocab=2048,
+    )
+    session = NTPSession.create(
+        cfg, mesh, local_batch=args.batch,
+        optimizer=adamw(AdamWConfig(lr=args.lr)),
+        key=jax.random.PRNGKey(args.seed),
+    )
+    n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
+    print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
+          f"plan {session.plan}")
+
+    pipe = SyntheticLMPipeline(
+        DataConfig(cfg.vocab, args.seq_len, 2 * args.batch, seed=args.seed)
+    )
+    t0 = time.time()
+    for i in range(args.steps):
+        if args.fail_at is not None and i == args.fail_at:
+            plan = session.apply(
+                FailureEvent(step=i, replica=args.fail_replica,
+                             n_gpus=args.fail_gpus)
+            )
+            print(f"*** step {i}: FailureEvent(replica={args.fail_replica}, "
+                  f"n_gpus={args.fail_gpus}) -> plan {plan} "
+                  f"mode {session.mode.value}")
+        metrics = session.step(jnp.asarray(pipe._batch_np(i)))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(
+                f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"({(time.time()-t0):.1f}s)", flush=True,
+            )
+        if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            session.save(args.ckpt)
+            print(f"  saved canonical checkpoint -> {args.ckpt}")
+    if args.ckpt:
+        session.save(args.ckpt)
+        print(f"final canonical checkpoint -> {args.ckpt}")
+
+
 if __name__ == "__main__":
     main()
+

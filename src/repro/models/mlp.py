@@ -182,7 +182,6 @@ def _local_dispatch_compute(cfg: ArchConfig, p_local, xf, cap: int):
 
     # ---- expert parallelism: one all-to-all ships each expert's slots to
     # the rank that owns it (paper's NVL-domain all-to-all -> ICI)
-    tp_size = jax.lax.axis_size("model")
     buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
                              tiled=True)              # (E/tp, cap*tp, d)
     h = jnp.einsum("ecd,edf->ecf", buf, p_local["w_up"])
@@ -214,8 +213,9 @@ def moe_apply_expert_parallel(cfg: ArchConfig, p: dict, x, ctx: ShardCtx):
     all-to-all and an all-gather rebuilds the TP-replicated activations.
     Capacity is per (rank, expert) — the standard TPU MoE semantics.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec
+
+    from repro.compat import shard_map
 
     m = cfg.moe
     mesh, tp = ctx.mesh, ctx.tp

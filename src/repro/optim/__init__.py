@@ -1,2 +1,3 @@
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa: F401
+from repro.optim.base import Optimizer, adamw, sgd  # noqa: F401
 from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -33,16 +33,28 @@ def adamw_init(params, cfg: AdamWConfig) -> dict:
     return state
 
 
-def global_norm(tree) -> jnp.ndarray:
+def global_norm(tree, norm_weights=None) -> jnp.ndarray:
+    """L2 norm of a gradient tree. ``norm_weights`` (matching pytree of
+    scalars) weights each leaf's squared contribution — the NTP step uses
+    1/D for packed unit buffers, which hold D identical replica copies of
+    every synced unit gradient, so the result equals the canonical norm."""
+    if norm_weights is None:
+        return jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(tree))
+        )
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+        sum(w * jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g, w in zip(jax.tree.leaves(tree),
+                            jax.tree.leaves(norm_weights)))
     )
 
 
-def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0,
+                 norm_weights=None):
     """Returns (new_params, new_state, metrics)."""
     step = state["step"] + 1
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads, norm_weights)
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
 
     b1, b2 = cfg.b1, cfg.b2

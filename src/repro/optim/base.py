@@ -1,0 +1,70 @@
+"""Pluggable optimizer interface for the step builders.
+
+A tiny (init, update) pair — enough for train/steps.py-style loops and the
+NTP runtime (core/ntp_train.py, runtime/session.py) to share one contract:
+
+    state = opt.init(params)
+    params, state, metrics = opt.update(grads, state, params,
+                                        norm_weights=None)
+
+``metrics`` always contains ``grad_norm`` and ``lr``; every state dict
+carries an int32 ``step`` counter. ``norm_weights`` (optional pytree of
+per-leaf scalars) corrects the global grad norm when the gradient tree holds
+redundant copies — the NTP step passes 1/D for packed unit buffers so
+clipping and the metric match canonical training exactly. States whose extra
+leaves mirror the param tree (AdamW's ``m``/``v``/``master``) advertise them
+in ``param_like`` so the NTP runtime can repack them across failure plans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params) -> (params, state, metrics)
+    param_like: Tuple[str, ...] = ()  # state keys structured like the params
+
+
+def sgd(lr: float) -> Optimizer:
+    """Plain SGD — used where exact equivalence to a hand-derived reference
+    matters (no clipping, no adaptive state)."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, norm_weights=None):
+        gnorm = global_norm(grads, norm_weights)
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+        return new_params, {"step": state["step"] + 1}, metrics
+
+    return Optimizer(name="sgd", init=init, update=update)
+
+
+def adamw(cfg: Optional[AdamWConfig] = None,
+          lr_schedule: Optional[Callable] = None) -> Optimizer:
+    """AdamW (repro.optim.adamw) with an optional lr schedule on the state's
+    step counter."""
+    cfg = cfg or AdamWConfig()
+
+    def init(params):
+        return adamw_init(params, cfg)
+
+    def update(grads, state, params, norm_weights=None):
+        scale = lr_schedule(state["step"]) if lr_schedule is not None else 1.0
+        return adamw_update(grads, state, params, cfg, scale,
+                            norm_weights=norm_weights)
+
+    return Optimizer(
+        name="adamw", init=init, update=update,
+        param_like=("m", "v", "master"),
+    )

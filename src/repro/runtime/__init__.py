@@ -1,0 +1,8 @@
+"""Failure-aware training runtime: the public entry point that unifies the
+uniform and nonuniform-TP stacks behind one session API (DESIGN.md §2)."""
+from repro.core.nonuniform import FailurePlan  # noqa: F401
+from repro.core.ntp_train import Mode, NTPModelConfig  # noqa: F401
+from repro.runtime.events import (  # noqa: F401
+    ClusterHealth, DeadReplicaError, FailureEvent, plan_from_health,
+)
+from repro.runtime.session import NTPSession  # noqa: F401

@@ -1,0 +1,126 @@
+"""Typed failure events and cluster health, and the bridge from the resource
+manager's packing (`ReplicaAssignment`) into the nonuniform-TP `FailurePlan`
+(DESIGN.md §2.1).
+
+The paper's restart flow (§3.3): a GPU fails somewhere in a scale-up domain;
+on restart the resource manager packs partially-failed domains into the
+lowest-rank DP replicas and the job resumes with those replicas at reduced
+TP. Here that flow is data: a `FailureEvent` updates `ClusterHealth`, and
+`plan_from_health()` turns the packed assignment into the `FailurePlan` the
+step builder and reshard tables consume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.nonuniform import FailurePlan
+from repro.core.resource_manager import (
+    ReplicaAssignment, apply_spares, pack_replicas,
+)
+
+
+class DeadReplicaError(RuntimeError):
+    """A replica's every scale-up domain lost all GPUs — NTP cannot keep it
+    computing; the job needs DP_DROP or spare domains."""
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """One failure notification. Exactly one of ``domain`` (physical
+    scale-up-domain index) or ``replica`` (current mesh DP index — resolved
+    against the live packing) must identify the blast site."""
+
+    step: Optional[int] = None      # training step the failure was observed at
+    domain: Optional[int] = None
+    replica: Optional[int] = None
+    n_gpus: int = 1                 # GPUs lost in that domain
+
+    def __post_init__(self):
+        if (self.domain is None) == (self.replica is None):
+            raise ValueError(
+                "FailureEvent needs exactly one of domain= or replica="
+            )
+        if self.n_gpus < 1:
+            raise ValueError("n_gpus must be >= 1")
+
+
+@dataclass(frozen=True)
+class ClusterHealth:
+    """Failed-GPU counts per physical scale-up domain."""
+
+    domain_size: int
+    failed: Tuple[int, ...]
+    domains_per_replica: int = 1
+
+    def __post_init__(self):
+        assert self.domain_size >= 1
+        assert all(0 <= f <= self.domain_size for f in self.failed)
+        assert len(self.failed) % self.domains_per_replica == 0
+
+    @classmethod
+    def pristine(cls, n_domains: int, domain_size: int,
+                 domains_per_replica: int = 1) -> "ClusterHealth":
+        return cls(domain_size, (0,) * n_domains, domains_per_replica)
+
+    @classmethod
+    def from_plan(cls, plan: FailurePlan) -> "ClusterHealth":
+        """One domain per replica, failures as implied by the plan's TPs."""
+        return cls(plan.n1, tuple(plan.n1 - t for t in plan.replica_tp))
+
+    @property
+    def n_domains(self) -> int:
+        return len(self.failed)
+
+    @property
+    def n_replicas(self) -> int:
+        return self.n_domains // self.domains_per_replica
+
+    @property
+    def healthy(self) -> bool:
+        return all(f == 0 for f in self.failed)
+
+    def assignments(self) -> List[ReplicaAssignment]:
+        """Current packing: most-failed domains into the lowest replicas."""
+        return pack_replicas(
+            list(self.failed), self.domain_size, self.domains_per_replica
+        )
+
+    def apply(self, event: FailureEvent) -> "ClusterHealth":
+        """Health after ``event``. A replica-addressed event lands on that
+        replica's worst domain under the CURRENT packing (the domain already
+        pinning its TP)."""
+        domain = event.domain
+        if domain is None:
+            asg = self.assignments()
+            if not 0 <= event.replica < len(asg):
+                raise ValueError(f"no replica {event.replica}")
+            a = asg[event.replica]
+            domain = int(a.domain_ids[int(np.argmax(a.failed))])
+        if not 0 <= domain < self.n_domains:
+            raise ValueError(f"no domain {domain}")
+        failed = list(self.failed)
+        failed[domain] = min(self.domain_size, failed[domain] + event.n_gpus)
+        return replace(self, failed=tuple(failed))
+
+
+def plan_from_health(health: ClusterHealth, *, spares: int = 0) -> FailurePlan:
+    """Bridge `pack_replicas` output into a `FailurePlan`.
+
+    Spare domains (paper §3.3 / Fig. 7) absorb the worst failures first;
+    whatever remains is packed and becomes per-replica operating TPs. Raises
+    DeadReplicaError when packing still leaves a replica at TP 0.
+    """
+    counts = np.asarray(health.failed)
+    if spares:
+        counts = apply_spares(counts, spares)
+    asg = pack_replicas(counts, health.domain_size, health.domains_per_replica)
+    tp = tuple(a.tp for a in asg)
+    if any(t == 0 for t in tp):
+        raise DeadReplicaError(
+            f"replica_tp={tp}: a replica has no surviving GPUs "
+            "(use Mode.DP_DROP or add spare domains)"
+        )
+    return FailurePlan(n1=health.domain_size, replica_tp=tp)

@@ -1,0 +1,296 @@
+"""NTPSession — the single runtime entry point for training under failures
+(DESIGN.md §2).
+
+One façade over the two training stacks:
+
+* the **NTP prototype** (core/ntp_train.py): unit-buffered nonuniform TP
+  inside shard_map, failure-event-driven replanning, pluggable optimizer;
+* the **production arch stack** (train/steps.py make_setup): GSPMD-sharded
+  arch-config models — uniform only (a failure there is a full restart; the
+  NTP backend is the paper's mitigation).
+
+Session lifecycle::
+
+    session = NTPSession.create(cfg, mesh, local_batch=4,
+                                optimizer=optim.adamw(AdamWConfig(lr=1e-2)))
+    for i, batch in ...:
+        if gpu_died:
+            session.apply(FailureEvent(step=i, replica=r))   # replan in place
+        metrics = session.step(batch)                        # loss, grad_norm
+    session.save("ckpt.npz")                                 # canonical layout
+
+`apply()` transitions FailurePlan -> FailurePlan' by repacking params AND
+optimizer state through the pack/unpack machinery — the checkpoint-free
+equivalent of the paper's restart, with no caller-visible host round-trip.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import ntp_train as nt
+from repro.core.nonuniform import FailurePlan
+from repro.core.ntp_train import Mode, NTPModelConfig
+from repro.optim import AdamWConfig, Optimizer, adamw
+from repro.runtime.events import ClusterHealth, FailureEvent, plan_from_health
+
+
+class NTPSession:
+    """Stateful training session: owns packed params + optimizer state, the
+    jitted step for the current FailurePlan, and the health ledger."""
+
+    # -------------------------------------------------------------- create
+
+    def __init__(self, *_, **__):
+        raise TypeError("use NTPSession.create(...) or NTPSession.from_arch(...)")
+
+    @classmethod
+    def _new(cls) -> "NTPSession":
+        return object.__new__(cls)
+
+    @classmethod
+    def create(
+        cls,
+        cfg: NTPModelConfig,
+        mesh,
+        *,
+        health: Optional[ClusterHealth] = None,
+        plan: Optional[FailurePlan] = None,
+        mode: Union[Mode, str] = Mode.NTP,
+        local_batch: int = 4,
+        optimizer: Optional[Optimizer] = None,
+        params: Optional[Dict] = None,     # canonical; default random init
+        key=None,
+    ) -> "NTPSession":
+        """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
+        and/or ``plan`` seed the failure state (default: pristine)."""
+        self = cls._new()
+        self._backend = "ntp"
+        self._cfg = cfg
+        self._mesh = mesh
+        self._mode = Mode.coerce(mode)
+        self._local_batch = local_batch
+        self._optimizer = optimizer or adamw(AdamWConfig(lr=1e-2))
+        d, n1 = mesh.shape["data"], mesh.shape["model"]
+
+        if health is None:
+            health = (
+                ClusterHealth.from_plan(plan) if plan is not None
+                else ClusterHealth.pristine(d, n1)
+            )
+        self._health = health
+        packed = plan_from_health(health)
+        if plan is not None and plan != packed:
+            # a plan out of packed order would make replica-addressed events
+            # resolve against the wrong physical domain
+            raise ValueError(
+                f"plan {plan} is not in resource-manager packed order "
+                f"(most-degraded first); health {health.failed} packs to "
+                f"{packed}"
+            )
+        self._plan = packed
+        assert self._plan.d == d and self._plan.n1 == n1, (
+            f"plan {self._plan} does not fit mesh (data={d}, model={n1})"
+        )
+
+        canonical = params if params is not None else nt.init_canonical(
+            cfg, key if key is not None else jax.random.PRNGKey(0)
+        )
+        self._params = nt.pack_params(cfg, canonical, self._plan)
+        self._opt = self._optimizer.init(self._params)
+        self._events: List[FailureEvent] = []
+        self._last_metrics: Dict[str, Any] = {}
+        self._build_step()
+        return self
+
+    @classmethod
+    def from_arch(
+        cls,
+        cfg,                    # repro.configs.base.ArchConfig
+        shape,                  # repro.configs.shapes.ShapeSpec (kind="train")
+        mesh=None,
+        *,
+        opt_cfg: Optional[AdamWConfig] = None,
+        param_dtype=jnp.float32,
+        lr_schedule=None,
+        key=None,
+    ) -> "NTPSession":
+        """Uniform session over the production arch stack (make_setup)."""
+        import functools
+
+        from repro.optim import warmup_cosine
+        from repro.train.steps import make_setup
+
+        self = cls._new()
+        self._backend = "arch"
+        self._cfg = cfg
+        self._mesh = mesh
+        self._mode = Mode.UNIFORM
+        kw = {}
+        if lr_schedule is not None:
+            kw["lr_schedule"] = lr_schedule
+        self._setup = make_setup(cfg, shape, mesh, param_dtype=param_dtype,
+                                 opt_cfg=opt_cfg, **kw)
+        self._step_fn = self._setup.jit_step()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        from repro.optim import adamw_init
+
+        if mesh is not None:
+            self._params = jax.jit(
+                self._setup.model.init, out_shardings=self._setup.param_sharding
+            )(key)
+            self._opt = jax.jit(
+                lambda p: adamw_init(p, self._setup.opt_cfg),
+                out_shardings=self._setup.opt_sharding,
+            )(self._params)
+        else:
+            self._params = self._setup.model.init(key)
+            self._opt = adamw_init(self._params, self._setup.opt_cfg)
+        self._health = None
+        self._plan = None
+        self._events = []
+        self._last_metrics = {}
+        return self
+
+    # ------------------------------------------------------------- introspect
+
+    @property
+    def mode(self) -> Mode:
+        return self._mode
+
+    @property
+    def plan(self) -> Optional[FailurePlan]:
+        return self._plan
+
+    @property
+    def health(self) -> Optional[ClusterHealth]:
+        return self._health
+
+    @property
+    def events(self) -> List[FailureEvent]:
+        return list(self._events)
+
+    @property
+    def params(self):
+        """The live (packed / sharded) parameter tree."""
+        return self._params
+
+    @property
+    def opt_state(self):
+        return self._opt
+
+    @property
+    def opt_step(self) -> int:
+        return int(jax.device_get(self._opt["step"]))
+
+    def canonical_params(self, replica: int = 0) -> Dict:
+        """Dense canonical weights recovered from one replica (NTP backend)."""
+        self._require_ntp("canonical_params")
+        return nt.unpack_params(self._cfg, jax.device_get(self._params),
+                                self._plan, replica=replica)
+
+    # ---------------------------------------------------------------- train
+
+    def step(self, batch) -> Dict[str, Any]:
+        """One optimizer step; returns the metrics dict (loss, grad_norm, …)."""
+        self._params, self._opt, metrics = self._step_fn(
+            self._params, self._opt, batch
+        )
+        self._last_metrics = metrics
+        return metrics
+
+    # ---------------------------------------------------------------- events
+
+    def apply(self, event: FailureEvent) -> FailurePlan:
+        """Consume a failure event: update health, replan, and repack params
+        and optimizer state into the new plan — training continues with the
+        same logical weights (the paper's restart, minus the restart)."""
+        self._require_ntp("failure replanning")
+        new_health = self._health.apply(event)
+        new_plan = plan_from_health(new_health)
+        self._events.append(event)
+        self._health = new_health
+        if new_plan == self._plan:
+            return self._plan
+
+        old_plan = self._plan
+        self._params = nt.repack_params(
+            self._cfg, jax.device_get(self._params), old_plan, new_plan
+        )
+        self._opt = self._repack_opt(jax.device_get(self._opt), old_plan, new_plan)
+        self._plan = new_plan
+        if self._mode is Mode.UNIFORM and not new_plan.healthy:
+            self._mode = Mode.NTP  # uniform jobs degrade into NTP, not death
+        self._build_step()
+        return new_plan
+
+    # ------------------------------------------------------------ checkpoint
+
+    def save(self, path: str) -> None:
+        """Write params + optimizer state in CANONICAL layout: restorable
+        into a session running under any FailurePlan."""
+        self._require_ntp("canonical checkpointing")
+        tree = {
+            "params": self.canonical_params(),
+            "opt": self._canonical_opt(),
+        }
+        save_checkpoint(path, tree, step=self.opt_step)
+
+    def restore(self, path: str) -> int:
+        """Load a canonical checkpoint into the CURRENT plan's packing.
+        Returns the saved step."""
+        self._require_ntp("canonical checkpointing")
+        like = {
+            "params": self.canonical_params(),
+            "opt": self._canonical_opt(),
+        }
+        tree, step = load_checkpoint(path, like)
+        self._params = nt.pack_params(self._cfg, tree["params"], self._plan)
+        self._opt = self._pack_opt(tree["opt"])
+        return step if step is not None else self.opt_step
+
+    # ---------------------------------------------------------------- private
+
+    def _require_ntp(self, what: str) -> None:
+        if self._backend != "ntp":
+            raise NotImplementedError(
+                f"{what} needs the NTP prototype backend (NTPSession.create); "
+                "the arch backend trains uniformly via train/steps.py"
+            )
+
+    def _build_step(self) -> None:
+        self._step_fn = nt.make_ntp_train_step(
+            self._cfg, self._plan, self._mesh, mode=self._mode,
+            local_batch=self._local_batch, optimizer=self._optimizer,
+        )
+
+    def _repack_opt(self, opt: Dict, old: FailurePlan, new: FailurePlan) -> Dict:
+        return {
+            k: (
+                nt.repack_params(self._cfg, v, old, new)
+                if k in self._optimizer.param_like else v
+            )
+            for k, v in opt.items()
+        }
+
+    def _canonical_opt(self) -> Dict:
+        opt = jax.device_get(self._opt)
+        return {
+            k: (
+                nt.unpack_params(self._cfg, v, self._plan)
+                if k in self._optimizer.param_like else v
+            )
+            for k, v in opt.items()
+        }
+
+    def _pack_opt(self, canonical_opt: Dict) -> Dict:
+        return {
+            k: (
+                nt.pack_params(self._cfg, v, self._plan)
+                if k in self._optimizer.param_like else v
+            )
+            for k, v in canonical_opt.items()
+        }

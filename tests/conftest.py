@@ -1,8 +1,33 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 device;
 multi-device tests launch subprocesses (tests/dist/)."""
 import dataclasses
+import os
+import subprocess
+import sys
 
 import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+@pytest.fixture(scope="session")
+def run_dist():
+    """Run tests/dist/<script> in a subprocess with N fake CPU devices
+    (XLA_FLAGS must be set before jax import — never in-process)."""
+
+    def _run(script: str, devices: int = 8, timeout: int = 900) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, os.path.join(HERE, "dist", script)],
+            capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        assert r.returncode == 0, f"{script} failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+        return r.stdout
+
+    return _run
 
 
 @pytest.fixture(scope="session")

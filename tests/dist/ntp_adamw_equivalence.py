@@ -1,0 +1,49 @@
+"""AdamW on packed NTP buffers == canonical AdamW, INCLUDING global-norm
+gradient clipping (the `norm_weights` 1/D correction, DESIGN.md §2.3):
+grad norms match to f32 exactness, params stay within AdamW's early-step
+noise amplification. 8 fake CPU devices."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntp_train as nt
+from repro.optim import AdamWConfig, adamw, adamw_init, adamw_update
+from repro.runtime import FailurePlan, NTPModelConfig, NTPSession
+
+LB = 4
+cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
+                     d_ff=256, unit_rows=64, n_layers=2, vocab=128)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+plan = FailurePlan(n1=4, replica_tp=(3, 4))
+ocfg = AdamWConfig(lr=1e-2, grad_clip=0.5)  # tight clip so it engages
+
+canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+sess = NTPSession.create(cfg, mesh, plan=plan, local_batch=LB,
+                         optimizer=adamw(ocfg), params=canon)
+
+lb = plan.local_batch_fraction(LB)
+mask = jnp.asarray(np.concatenate(
+    [(np.arange(LB) < lb[d]).astype(np.float32) for d in range(plan.d)]))
+ref_grad = jax.jit(jax.value_and_grad(nt.make_reference_loss(cfg)))
+ref, ref_opt = canon, adamw_init(canon, ocfg)
+
+rng = np.random.default_rng(0)
+for i in range(4):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (plan.d * LB, 33)))
+    m = sess.step(tokens)
+    rl, g = ref_grad(ref, tokens, mask)
+    ref, ref_opt, rm = adamw_update(g, ref_opt, ref, ocfg)
+    gdiff = abs(float(m["grad_norm"]) - float(rm["grad_norm"]))
+    print(f"step {i}: loss diff {abs(float(m['loss'])-float(rl)):.2e}  "
+          f"gnorm diff {gdiff:.2e}")
+    assert abs(float(m["loss"]) - float(rl)) < 1e-4, "loss mismatch"
+    assert gdiff < 1e-5, "packed grad norm != canonical grad norm"
+
+for r in range(plan.d):
+    got = sess.canonical_params(replica=r)
+    err = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+              for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)))
+    print(f"replica {r}: max param err vs canonical AdamW {err:.2e}")
+    assert err < 5e-4, f"replica {r} params diverged"
+print("NTP_ADAMW_OK")

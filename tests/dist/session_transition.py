@@ -1,0 +1,77 @@
+"""NTPSession integration: healthy -> degraded transition via a
+FailureEvent must (a) repack params AND AdamW moments exactly as the manual
+unpack/repack path, (b) keep training (finite, improving loss), and
+(c) round-trip through a canonical checkpoint. 8 fake CPU devices."""
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntp_train as nt
+from repro.optim import AdamWConfig, adamw
+from repro.runtime import FailureEvent, NTPModelConfig, NTPSession
+
+cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
+                     d_ff=256, unit_rows=64, n_layers=2, vocab=128)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+session = NTPSession.create(cfg, mesh, local_batch=4,
+                            optimizer=adamw(AdamWConfig(lr=1e-2)),
+                            key=jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+def batch(i):
+    return jnp.asarray(rng.integers(0, cfg.vocab, (8, 33)))
+
+losses = [float(session.step(batch(i))["loss"]) for i in range(4)]
+
+params_before = jax.device_get(session.params)
+opt_before = jax.device_get(session.opt_state)
+old_plan = session.plan
+
+new_plan = session.apply(FailureEvent(step=4, replica=1))
+assert new_plan != old_plan and not new_plan.healthy, new_plan
+assert session.health.failed == (0, 1), session.health
+
+def trees_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+# (a) exact equivalence with the manual unpack -> pack path
+manual = nt.pack_params(cfg, nt.unpack_params(cfg, params_before, old_plan),
+                        new_plan)
+assert trees_equal(jax.device_get(session.params), manual), "param repack"
+for k in ("m", "v"):
+    manual_k = nt.pack_params(
+        cfg, nt.unpack_params(cfg, opt_before[k], old_plan), new_plan
+    )
+    assert trees_equal(jax.device_get(session.opt_state[k]), manual_k), (
+        f"opt[{k}] repack"
+    )
+assert int(jax.device_get(session.opt_state["step"])) == 4
+print("repack equivalence (params + AdamW m/v) OK")
+
+# (b) training continues on the same weights
+post = [float(session.step(batch(i))["loss"]) for i in range(4, 10)]
+assert np.isfinite(post).all(), post
+assert np.mean(post) < np.mean(losses[:2]), (losses, post)
+print(f"loss continuity across failure: {losses[-1]:.4f} -> {post[0]:.4f}")
+
+# (c) canonical checkpoint round-trips into a degraded-plan session
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "ck.npz")
+    session.save(path)
+    other = NTPSession.create(cfg, mesh, plan=session.plan, local_batch=4,
+                              optimizer=adamw(AdamWConfig(lr=1e-2)))
+    step = other.restore(path)
+    assert step == 10, step
+    assert trees_equal(jax.device_get(other.params),
+                       jax.device_get(session.params)), "restore params"
+    assert trees_equal(jax.device_get(other.opt_state["m"]),
+                       jax.device_get(session.opt_state["m"])), "restore m"
+print("canonical save/restore OK")
+print("SESSION_TRANSITION_OK")

@@ -1,6 +1,8 @@
 """Failure/availability/power/policy models vs the paper's own claims."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.availability import (

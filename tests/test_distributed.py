@@ -1,35 +1,17 @@
 """Multi-device tests: each launches a subprocess with 8 fake CPU devices
-(XLA_FLAGS must be set before jax import — never globally, per the brief)."""
-import os
-import subprocess
-import sys
-
+(XLA_FLAGS must be set before jax import — never globally, per the brief).
+The ``run_dist`` fixture lives in conftest.py."""
 import pytest
-
-HERE = os.path.dirname(__file__)
-SRC = os.path.join(HERE, "..", "src")
-
-
-def run_dist(script: str, devices: int = 8, timeout: int = 900) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run(
-        [sys.executable, os.path.join(HERE, "dist", script)],
-        capture_output=True, text=True, timeout=timeout, env=env,
-    )
-    assert r.returncode == 0, f"{script} failed:\n{r.stdout}\n{r.stderr[-3000:]}"
-    return r.stdout
 
 
 @pytest.mark.slow
-def test_reshard_collective_roundtrip_and_sync():
+def test_reshard_collective_roundtrip_and_sync(run_dist):
     out = run_dist("reshard_roundtrip.py")
     assert "RESHARD_OK" in out
 
 
 @pytest.mark.slow
-def test_ntp_training_equivalence():
+def test_ntp_training_equivalence(run_dist):
     """The paper's core claim, end to end: nonuniform (TP4 + TP3) replicas
     with reshard-synced gradients train identically to a dense reference."""
     out = run_dist("ntp_equivalence.py")
@@ -37,13 +19,13 @@ def test_ntp_training_equivalence():
 
 
 @pytest.mark.slow
-def test_sharded_training_and_decode():
+def test_sharded_training_and_decode(run_dist):
     out = run_dist("sharded_train.py")
     assert "SHARDED_TRAIN_OK" in out
 
 
 @pytest.mark.slow
-def test_ntp_moe_expert_units_equivalence():
+def test_ntp_moe_expert_units_equivalence(run_dist):
     """DESIGN.md §4 executable: NTP with the EXPERT as the partition unit —
     degraded TP4→TP3 MoE training == dense reference (router included)."""
     out = run_dist("ntp_moe_equivalence.py")
@@ -51,7 +33,7 @@ def test_ntp_moe_expert_units_equivalence():
 
 
 @pytest.mark.slow
-def test_moe_expert_parallel_matches_oracle():
+def test_moe_expert_parallel_matches_oracle(run_dist):
     """§Perf A1: the all-to-all expert-parallel dispatch is numerically
     identical to the dense oracle (drop-free capacity)."""
     out = run_dist("moe_expert_parallel.py")

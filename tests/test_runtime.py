@@ -1,0 +1,194 @@
+"""Runtime API tests: event/health -> plan bridging, Mode dispatch, and the
+packed-tree repack algebra (host-side; the live NTPSession transition runs
+in a multi-device subprocess, tests/dist/session_transition.py)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import ntp_train as nt
+from repro.core.nonuniform import FailurePlan
+from repro.optim import AdamWConfig, adamw, sgd
+from repro.runtime import (
+    ClusterHealth, DeadReplicaError, FailureEvent, Mode, plan_from_health,
+)
+
+
+# ---------------------------------------------------------------------------
+# events / health / plan bridge
+
+def test_pristine_health_gives_uniform_plan():
+    h = ClusterHealth.pristine(4, 8)
+    plan = plan_from_health(h)
+    assert plan == FailurePlan(n1=8, replica_tp=(8, 8, 8, 8))
+    assert plan.healthy and h.healthy
+
+
+def test_plan_from_health_packs_failures_into_lowest_replicas():
+    # failures scattered over domains 1 and 3 -> packed to replicas 0, 1
+    h = ClusterHealth(domain_size=8, failed=(0, 2, 0, 1))
+    plan = plan_from_health(h)
+    assert plan.replica_tp == (6, 7, 8, 8)
+    assert plan.n_sync == 6
+
+
+def test_plan_from_health_round_trips_assignments():
+    h = ClusterHealth(domain_size=4, failed=(1, 0))
+    asg = h.assignments()
+    plan = plan_from_health(h)
+    assert tuple(a.tp for a in asg) == plan.replica_tp == (3, 4)
+    # the degraded physical domain (id 0) sits at the lowest replica
+    assert asg[0].domain_ids[0] == 0 and asg[0].failed[0] == 1
+
+
+def test_plan_from_health_spares_absorb_failures():
+    h = ClusterHealth(domain_size=8, failed=(3, 0, 1, 0))
+    assert plan_from_health(h).replica_tp == (5, 7, 8, 8)
+    assert plan_from_health(h, spares=1).replica_tp == (7, 8, 8, 8)
+    assert plan_from_health(h, spares=2).replica_tp == (8, 8, 8, 8)
+
+
+def test_dead_replica_raises():
+    h = ClusterHealth(domain_size=4, failed=(4, 0))
+    with pytest.raises(DeadReplicaError):
+        plan_from_health(h)
+
+
+def test_failure_event_validation():
+    with pytest.raises(ValueError):
+        FailureEvent()                       # neither address
+    with pytest.raises(ValueError):
+        FailureEvent(domain=0, replica=1)    # both addresses
+    with pytest.raises(ValueError):
+        FailureEvent(domain=0, n_gpus=0)
+
+
+def test_health_apply_by_domain_and_replica():
+    h = ClusterHealth(domain_size=4, failed=(0, 0))
+    h1 = h.apply(FailureEvent(domain=1))
+    assert h1.failed == (0, 1)
+    # replica-addressed: replica 0 currently serves the degraded domain 1
+    # (most-failed packs lowest), so the hit lands there again
+    h2 = h1.apply(FailureEvent(replica=0))
+    assert h2.failed == (0, 2)
+    # saturates at domain_size
+    h3 = h2.apply(FailureEvent(domain=1, n_gpus=99))
+    assert h3.failed == (0, 4)
+
+
+def test_health_from_plan_round_trip():
+    plan = FailurePlan(n1=4, replica_tp=(3, 4))
+    h = ClusterHealth.from_plan(plan)
+    assert h.failed == (1, 0)
+    assert plan_from_health(h) == plan
+
+
+# ---------------------------------------------------------------------------
+# Mode enum dispatch
+
+def test_mode_coerce_accepts_legacy_strings():
+    assert Mode.coerce("uniform") is Mode.UNIFORM
+    assert Mode.coerce("ntp") is Mode.NTP
+    assert Mode.coerce("dpdrop") is Mode.DP_DROP
+    assert Mode.coerce("dp_drop") is Mode.DP_DROP
+    assert Mode.coerce(Mode.NTP) is Mode.NTP
+    with pytest.raises(ValueError):
+        Mode.coerce("bogus")
+
+
+def _tiny_cfg():
+    return nt.NTPModelConfig(d_model=32, n_kv_groups=2, q_per_kv=1,
+                             head_dim=16, d_ff=64, unit_rows=32,
+                             n_layers=1, vocab=64)
+
+
+def test_mode_dispatch_local_batches():
+    """UNIFORM keeps full local batches, NTP reduces ∝ TP, DP_DROP zeroes
+    the degraded replica — the observable Mode semantics."""
+    plan = FailurePlan(n1=2, replica_tp=(1, 2))
+    lb = 4
+    assert list(plan.local_batch_fraction(lb)) == [2, 4]           # NTP
+    dropped = [lb if t == plan.n1 else 0 for t in plan.replica_tp]
+    assert dropped == [0, 4]                                       # DP_DROP
+
+
+# ---------------------------------------------------------------------------
+# repack algebra (host-side; no mesh needed)
+
+def test_repack_params_matches_manual_unpack_pack():
+    cfg = _tiny_cfg()
+    old = FailurePlan(n1=2, replica_tp=(2, 2))
+    new = FailurePlan(n1=2, replica_tp=(1, 2))
+    canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+    packed = nt.pack_params(cfg, canon, old)
+
+    got = nt.repack_params(cfg, packed, old, new)
+    want = nt.pack_params(cfg, nt.unpack_params(cfg, packed, old), new)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # canonical content is preserved across the transition, from any replica
+    for r in range(new.d):
+        back = nt.unpack_params(cfg, got, new, replica=r)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(canon)):
+            assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_repack_is_noop_for_same_plan():
+    cfg = _tiny_cfg()
+    plan = FailurePlan(n1=2, replica_tp=(1, 2))
+    packed = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(1)),
+                            plan)
+    assert nt.repack_params(cfg, packed, plan, plan) is packed
+
+
+def test_optimizer_state_trees_are_repackable():
+    """AdamW moments mirror the param structure, so the same repack applies
+    (what NTPSession.apply relies on); SGD has no param-like state."""
+    cfg = _tiny_cfg()
+    old = FailurePlan(n1=2, replica_tp=(2, 2))
+    new = FailurePlan(n1=2, replica_tp=(1, 2))
+    packed = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(2)),
+                            old)
+    opt = adamw(AdamWConfig(lr=1e-3))
+    state = opt.init(packed)
+    assert set(opt.param_like) >= {"m", "v"}
+    for k in ("m", "v"):
+        re = nt.repack_params(cfg, state[k], old, new)
+        want = nt.pack_params(cfg, nt.unpack_params(cfg, state[k], old), new)
+        for a, b in zip(jax.tree.leaves(re), jax.tree.leaves(want)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert sgd(1e-2).param_like == ()
+
+
+def test_session_rejects_unpacked_plan_order():
+    """A plan out of resource-manager packed order would mis-resolve
+    replica-addressed events; create() must reject it before any compute."""
+    from repro.runtime import NTPSession
+
+    class StubMesh:  # only .shape is read before validation
+        shape = {"data": 2, "model": 4}
+
+    with pytest.raises(ValueError, match="packed order"):
+        NTPSession.create(_tiny_cfg(), StubMesh(),
+                          plan=FailurePlan(n1=4, replica_tp=(4, 3)))
+
+
+# ---------------------------------------------------------------------------
+# live session transition (8 fake devices, subprocess)
+
+@pytest.mark.slow
+def test_session_failure_transition(run_dist):
+    """healthy -> degraded via NTPSession.apply: params + AdamW state match
+    the manual unpack/repack path exactly, training continues, and the
+    canonical checkpoint round-trips."""
+    out = run_dist("session_transition.py")
+    assert "SESSION_TRANSITION_OK" in out
+
+
+@pytest.mark.slow
+def test_session_adamw_matches_canonical(run_dist):
+    """AdamW on packed buffers (incl. global-norm clipping via the 1/D
+    norm_weights correction) == canonical AdamW."""
+    out = run_dist("ntp_adamw_equivalence.py")
+    assert "NTP_ADAMW_OK" in out

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the paper's Algorithm 1 and the
 reshard tables — the system's core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import shard_mapping as sm

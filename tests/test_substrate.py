@@ -7,6 +7,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
