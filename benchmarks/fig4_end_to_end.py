@@ -1,0 +1,47 @@
+"""Fig. 4 end-to-end: one Llama3-calibrated failure/recovery trace (per-event
+(domain, gpu) placement from `simulate_events`) replayed through the
+resource-manager packing, reporting trace-mean goodput per fault-tolerance
+policy — the availability argument of §2.3/§6.1 as a single number per
+policy instead of Fig. 6's per-failed-fraction cross sections."""
+import numpy as np
+
+from repro.core.availability import ClusterSpec
+from repro.core.failure_model import FailureTraceConfig, simulate_events
+from repro.core.policies import cluster_throughput
+
+SAMPLE_EVERY_H = 6.0
+
+
+def run():
+    spec = ClusterSpec(n_gpus=32_768, domain_size=32, domains_per_replica=8)
+    rows = []
+    for mult in (1.0, 3.0):
+        cfg = FailureTraceConfig(
+            n_gpus=spec.n_gpus, domain_size=spec.domain_size,
+            days=15.0, rate_multiplier=mult, seed=3,
+        )
+        ev = simulate_events(cfg)
+        times = np.arange(0.0, cfg.days * 24.0, SAMPLE_EVERY_H)
+        counts_t = [
+            ev.failed_counts_at(t, cfg.n_domains, spec.domain_size)
+            for t in times
+        ]
+        goodputs = {}
+        for method in ("dpdrop", "ntp", "ntp_pw"):
+            thr = [
+                cluster_throughput(spec, counts, method)["throughput"]
+                for counts in counts_t
+            ]
+            goodputs[method] = float(np.mean(thr))
+            rows.append({
+                "name": f"fig4e2e/rate{mult:g}x/{method}/goodput",
+                "value": round(goodputs[method], 5),
+                "derived": f"trace-mean lost={1 - goodputs[method]:.4f} "
+                           f"({len(times)} samples)",
+            })
+        rows.append({
+            "name": f"fig4e2e/rate{mult:g}x/ntp_pw_vs_dpdrop/recovered",
+            "value": round(goodputs["ntp_pw"] - goodputs["dpdrop"], 5),
+            "derived": "goodput NTP-PW recovers over DP-DROP on the same trace",
+        })
+    return rows

@@ -10,6 +10,7 @@ MODULES = [
     "fig2_scaling",
     "fig3_availability",
     "fig4_failure_trace",
+    "fig4_end_to_end",
     "fig6_throughput_loss",
     "fig7_spares",
     "fig8_reshard_overhead",

@@ -1,6 +1,12 @@
 """Failure-trace simulation calibrated to the Llama-3 training report
 (paper §2.3, Fig. 4): Poisson failure arrivals, 78% hardware failures with
 multi-day recovery, 22% software failures with ~3h recovery.
+
+`simulate_events` is the one sampler: every failure carries its (domain, gpu)
+placement and its recovery time, so the same trace drives both the Fig.-4
+counts (`simulate_trace`, a thin wrapper) and the live lifecycle replay
+(`runtime.orchestrator.TraceRunner`, which needs to know WHERE each failure
+lands and when it heals).
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ HW_FRACTION = 0.78
 @dataclass(frozen=True)
 class FailureTraceConfig:
     n_gpus: int = 32_768
+    domain_size: int = 64               # scale-up domain width for placement
     days: float = 15.0
     rate_per_gpu_hour: float = LLAMA3_RATE_PER_GPU_HOUR
     rate_multiplier: float = 1.0        # §2.3 studies 3× spikes
@@ -27,13 +34,46 @@ class FailureTraceConfig:
     dt_hours: float = 1.0
     seed: int = 0
 
+    @property
+    def n_domains(self) -> int:
+        return self.n_gpus // self.domain_size
 
-def simulate_trace(cfg: FailureTraceConfig):
-    """Returns (t_hours, n_failed) arrays — concurrently-failed GPU counts.
 
-    Memoryless arrivals across the fleet; each failure picks an (independent)
-    recovery time by type. Warm-started by simulating a lead-in window longer
+@dataclass(frozen=True)
+class TraceEvents:
+    """Per-event failure trace: each entry is one GPU failing at ``start_h``
+    and coming back at ``end_h`` (hours since the start of the observation
+    window; lead-in events have start_h < 0 but may still be down inside the
+    window). Sorted by start time."""
+
+    start_h: np.ndarray     # (E,) failure onset
+    end_h: np.ndarray       # (E,) recovery completion
+    gpu: np.ndarray         # (E,) global gpu id
+    domain: np.ndarray      # (E,) gpu // domain_size
+    is_hw: np.ndarray       # (E,) bool — hardware vs software failure
+
+    @property
+    def n_events(self) -> int:
+        return len(self.start_h)
+
+    def failed_counts_at(self, t_h: float, n_domains: int,
+                         domain_size: int) -> np.ndarray:
+        """Concurrently-failed GPUs per domain at time ``t_h`` (clipped to
+        the domain size: a domain cannot lose more GPUs than it has)."""
+        live = (self.start_h <= t_h) & (self.end_h > t_h)
+        counts = np.bincount(self.domain[live], minlength=n_domains)
+        return np.minimum(counts, domain_size)
+
+
+def simulate_events(cfg: FailureTraceConfig) -> TraceEvents:
+    """Sample the per-event trace. Memoryless arrivals across the fleet; each
+    failure picks an (independent) recovery time by type and lands on a
+    uniformly-random GPU. Warm-started by simulating a lead-in window longer
     than the max recovery so the trace starts in steady state.
+
+    The count draws reuse `simulate_trace`'s historical RNG stream (placement
+    is drawn after them), so aggregate counts are bit-identical to the old
+    count-only sampler at the same seed.
     """
     rng = np.random.default_rng(cfg.seed)
     lead_h = cfg.hw_recovery_days[1] * 24.0
@@ -48,14 +88,27 @@ def simulate_trace(cfg: FailureTraceConfig):
         rng.uniform(*cfg.hw_recovery_days, n_events) * 24.0,
         cfg.sw_recovery_hours,
     )
-    ends = starts + rec
+    gpu = rng.integers(0, cfg.n_gpus, n_events)
 
-    t = np.arange(lead_h, total_h, cfg.dt_hours)
-    # concurrent failures at each sample time
+    order = np.argsort(starts, kind="stable")
+    return TraceEvents(
+        start_h=starts[order] - lead_h,
+        end_h=(starts + rec)[order] - lead_h,
+        gpu=gpu[order],
+        domain=gpu[order] // cfg.domain_size,
+        is_hw=is_hw[order],
+    )
+
+
+def simulate_trace(cfg: FailureTraceConfig):
+    """Returns (t_hours, n_failed) arrays — concurrently-failed GPU counts.
+    Count-only view over `simulate_events` (kept for the Fig.-4 analytics)."""
+    ev = simulate_events(cfg)
+    t = np.arange(0.0, cfg.days * 24.0, cfg.dt_hours)
     n_failed = (
-        (starts[None, :] <= t[:, None]) & (ends[None, :] > t[:, None])
+        (ev.start_h[None, :] <= t[:, None]) & (ev.end_h[None, :] > t[:, None])
     ).sum(axis=1)
-    return t - lead_h, n_failed
+    return t, n_failed
 
 
 def fraction_time_above(cfg: FailureTraceConfig, frac_threshold: float) -> float:

@@ -314,6 +314,22 @@ def make_reference_loss(cfg: NTPModelConfig):
 UNIT_KEYS = ("wq", "wk", "wv", "wo", "A", "B")
 
 
+def default_local_batches(
+    fplan: nu.FailurePlan, mode: Union[Mode, str], local_batch: int
+) -> np.ndarray:
+    """Per-replica usable local batch implied by the mode alone: UNIFORM
+    keeps the full batch, NTP shrinks ∝ surviving TP (paper §3.1), DP_DROP
+    zeroes every replica containing a failure."""
+    mode = Mode.coerce(mode)
+    if mode is Mode.NTP:
+        return fplan.local_batch_fraction(local_batch)
+    if mode is Mode.DP_DROP:
+        return np.array([
+            local_batch if t == fplan.n1 else 0 for t in fplan.replica_tp
+        ])
+    return np.array([local_batch] * fplan.d)
+
+
 def make_ntp_train_step(
     cfg: NTPModelConfig,
     fplan: nu.FailurePlan,
@@ -322,6 +338,7 @@ def make_ntp_train_step(
     mode: Union[Mode, str] = Mode.NTP,
     local_batch: int = 4,
     optimizer: Optional[Optimizer] = None,
+    local_batches=None,
 ):
     """Returns ``step`` with the same contract as train/steps.py:
 
@@ -331,21 +348,25 @@ def make_ntp_train_step(
     pluggable (repro.optim.sgd / repro.optim.adamw) — the sync math, not the
     optimizer, is what NTP changes, so any elementwise update is legal on the
     packed buffers (every replica holds identical synced unit gradients and
-    padded slots stay zero; DESIGN.md §2.3)."""
+    padded slots stay zero; DESIGN.md §2.3).
+
+    ``local_batches``: optional per-replica usable-sample override (NTP-PW —
+    a power-boosted degraded replica keeps MORE than its ∝-TP share, up to
+    the full local batch; core/power.py + runtime/orchestrator.py decide).
+    Defaults to the mode's own rule (`default_local_batches`)."""
     mode = Mode.coerce(mode)
     optimizer = optimizer or sgd(1e-2)
     plans = _plans(cfg, fplan)
     d_axis = fplan.d
 
-    # per-replica usable local batch
-    if mode is Mode.NTP:
-        lb = fplan.local_batch_fraction(local_batch)
-    elif mode is Mode.DP_DROP:
-        lb = np.array([
-            local_batch if t == fplan.n1 else 0 for t in fplan.replica_tp
-        ])
+    if local_batches is None:
+        lb = default_local_batches(fplan, mode, local_batch)
     else:
-        lb = np.array([local_batch] * d_axis)
+        lb = np.asarray(local_batches, dtype=np.int64)
+        assert lb.shape == (d_axis,), (lb.shape, d_axis)
+        assert ((lb >= 0) & (lb <= local_batch)).all(), (
+            f"local_batches {lb} outside [0, {local_batch}]"
+        )
     lb_table = jnp.asarray(lb, jnp.int32)
 
     unit_spec = P("data", "model")

@@ -37,6 +37,15 @@ def stage_slowdown(tp_red: int, tp_full: int, geom: WorkloadGeometry) -> float:
     return float(geom.mlp_flops_share * even + (1 - geom.mlp_flops_share) * heads)
 
 
+def boosted_operating_point(slow: float, power: PowerModel):
+    """NTP-PW operating point for one stage at slowdown ``slow`` (Table 1
+    convention, shared with the runtime PowerPolicy): boost just enough to
+    erase the whole slowdown, capped by the rack (§3.2). Returns
+    (power_mult, residual_slowdown) — residual 1.0 when within the cap."""
+    p = min(power.required_power_for_speedup(slow), power.max_boost)
+    return float(p), float(slow / power.speedup(p))
+
+
 def replica_throughput(
     tp_red: int,
     tp_full: int,
@@ -84,8 +93,7 @@ def table1_settings(
             "rel_iter_time": round(slow * bs / base_bs, 3),
         })
         if tp != base_tp:
-            preq = min(power.required_power_for_speedup(slow), power.max_boost)
-            rel = slow / power.speedup(preq)
+            preq, rel = boosted_operating_point(slow, power)
             rows.append({
                 "config": f"TP{tp}-PW", "local_bs": base_bs,
                 "power": round(preq, 2), "rel_iter_time": round(rel, 3),

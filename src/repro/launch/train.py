@@ -10,6 +10,12 @@ inject a mid-run GPU failure (consumed as a FailureEvent, replanned in
 place):
   PYTHONPATH=src python -m repro.launch.train --ntp --devices 8 \\
       --steps 40 --fail-at 20 [--fail-replica 1]
+
+Trace mode — replay a Llama3-calibrated failure/recovery trace through the
+lifecycle orchestrator (fail -> boost -> repair; DESIGN.md §2.4), with the
+power policy deciding NTP vs NTP-PW per transition:
+  PYTHONPATH=src python -m repro.launch.train --ntp --devices 8 --steps 200 \\
+      --trace 2e5 --trace-seed 0 --power-policy ntp_pw
 """
 import argparse
 import os
@@ -28,6 +34,18 @@ def main() -> None:
                     help="DP replica whose scale-up domain loses a GPU")
     ap.add_argument("--fail-gpus", type=int, default=1,
                     help="GPUs lost in the failure event")
+    ap.add_argument("--trace", type=float, default=None, metavar="RATE_MULT",
+                    help="replay a Llama3-calibrated fail/repair trace at "
+                         "this failure-rate multiplier (NTP mode; try 1e5+ — "
+                         "the tiny test cluster needs a huge multiplier to "
+                         "see events in a short run)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="trace sampler seed (default 0)")
+    ap.add_argument("--steps-per-hour", type=float, default=1.0,
+                    help="training steps per simulated trace hour")
+    ap.add_argument("--power-policy", choices=["ntp", "ntp_pw"], default=None,
+                    help="per-transition NTP vs NTP-PW decision hook "
+                         "(default: ntp when --trace is given)")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant of the arch family")
@@ -50,6 +68,11 @@ def main() -> None:
     if args.ntp and args.dry_run:
         ap.error("--ntp has no --dry-run path; use python -m "
                  "repro.launch.dryrun_ntp for compile-only NTP accounting")
+    if (args.trace is not None or args.power_policy) and not args.ntp:
+        ap.error("--trace/--power-policy need --ntp (lifecycle orchestration "
+                 "is NTP-backend-only)")
+    if args.trace is not None and args.fail_at is not None:
+        ap.error("--trace and --fail-at are mutually exclusive")
 
     if args.dry_run:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -130,14 +153,15 @@ def main() -> None:
 
 def _run_ntp(args) -> None:
     """NTP prototype through the runtime session, with an optional injected
-    mid-training failure — the paper's scenario as a launcher flag."""
+    mid-training failure (--fail-at) or a full trace-driven fail/repair
+    lifecycle (--trace) — the paper's scenario as launcher flags."""
     import jax
     import jax.numpy as jnp
 
     from repro.data.pipeline import DataConfig, SyntheticLMPipeline
     from repro.launch.mesh import make_test_mesh
     from repro.optim import AdamWConfig, adamw
-    from repro.runtime import FailureEvent, NTPModelConfig, NTPSession
+    from repro.runtime import FailureEvent, NTPModelConfig, NTPSession, power_policy
 
     n_dev = args.devices or 8
     if len(jax.devices()) < n_dev:
@@ -154,18 +178,26 @@ def _run_ntp(args) -> None:
         d_model=256, n_kv_groups=2 * n1, q_per_kv=2, head_dim=32,
         d_ff=max(512, 128 * n1), unit_rows=128, n_layers=2, vocab=2048,
     )
+    policy_name = args.power_policy or ("ntp" if args.trace is not None else None)
     session = NTPSession.create(
         cfg, mesh, local_batch=args.batch,
         optimizer=adamw(AdamWConfig(lr=args.lr)),
         key=jax.random.PRNGKey(args.seed),
+        power_policy=power_policy(policy_name) if policy_name else None,
     )
     n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
-          f"plan {session.plan}")
+          f"plan {session.plan}"
+          + (f"  policy {policy_name}" if policy_name else ""))
 
     pipe = SyntheticLMPipeline(
         DataConfig(cfg.vocab, args.seq_len, 2 * args.batch, seed=args.seed)
     )
+
+    if args.trace is not None:
+        _run_ntp_trace(args, session, pipe)
+        return
+
     t0 = time.time()
     for i in range(args.steps):
         if args.fail_at is not None and i == args.fail_at:
@@ -186,6 +218,53 @@ def _run_ntp(args) -> None:
         if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             session.save(args.ckpt)
             print(f"  saved canonical checkpoint -> {args.ckpt}")
+    if args.ckpt:
+        session.save(args.ckpt)
+        print(f"final canonical checkpoint -> {args.ckpt}")
+
+
+def _run_ntp_trace(args, session, pipe) -> None:
+    """Replay a sampled failure/recovery trace against the live session via
+    the lifecycle orchestrator (DESIGN.md §2.4)."""
+    import jax.numpy as jnp
+
+    from repro.core.failure_model import FailureTraceConfig
+    from repro.runtime import RecoveryEvent, TraceRunner, schedule_from_trace
+
+    d, n1 = session.plan.d, session.plan.n1
+    trace_cfg = FailureTraceConfig(
+        n_gpus=d * n1, domain_size=n1,
+        days=args.steps / args.steps_per_hour / 24.0,
+        rate_multiplier=args.trace, seed=args.trace_seed,
+    )
+    schedule = schedule_from_trace(
+        trace_cfg, steps=args.steps, steps_per_hour=args.steps_per_hour
+    )
+    n_fail = sum(1 for s in schedule if not isinstance(s.event, RecoveryEvent))
+    print(f"trace: {len(schedule)} events ({n_fail} failures, "
+          f"{len(schedule) - n_fail} repairs) over {args.steps} steps")
+
+    t0 = time.time()
+
+    def on_event(ev, plan):
+        kind = "repair " if isinstance(ev, RecoveryEvent) else "failure"
+        print(f"*** step {ev.step}: {kind} domain {ev.domain} -> plan {plan}  "
+              f"local_batches {session.local_batches}")
+
+    runner = TraceRunner(session, schedule, on_event=on_event)
+    log_every = max(args.log_every, 1)
+    for start in range(0, args.steps, log_every):
+        n = min(log_every, args.steps - start)
+        hist = runner.run(lambda i: jnp.asarray(pipe._batch_np(i)), n)
+        h = hist[-1]
+        extra = (f"  boost {h['power_boost']:.2f}  rel_iter "
+                 f"{h['rel_iter_time']:.3f}" if "power_boost" in h else "")
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.3f}  tp {h['replica_tp']}{extra}  "
+              f"({time.time() - t0:.1f}s)", flush=True)
+    s = runner.summary()
+    print(f"lifecycle: {s['failures']} failures, {s['repairs']} repairs, "
+          f"goodput {s['goodput']:.3f}, final plan {s['final_plan']}")
     if args.ckpt:
         session.save(args.ckpt)
         print(f"final canonical checkpoint -> {args.ckpt}")

@@ -1,8 +1,14 @@
 """Failure-aware training runtime: the public entry point that unifies the
-uniform and nonuniform-TP stacks behind one session API (DESIGN.md §2)."""
+uniform and nonuniform-TP stacks behind one session API (DESIGN.md §2), plus
+the trace-driven lifecycle orchestrator (DESIGN.md §2.4)."""
 from repro.core.nonuniform import FailurePlan  # noqa: F401
 from repro.core.ntp_train import Mode, NTPModelConfig  # noqa: F401
 from repro.runtime.events import (  # noqa: F401
-    ClusterHealth, DeadReplicaError, FailureEvent, plan_from_health,
+    ClusterHealth, DeadReplicaError, FailureEvent, LifecycleEvent,
+    RecoveryEvent, plan_from_health,
+)
+from repro.runtime.orchestrator import (  # noqa: F401
+    PowerDecision, PowerPolicy, ScheduledEvent, TraceRunner, power_policy,
+    schedule_from_trace,
 )
 from repro.runtime.session import NTPSession  # noqa: F401

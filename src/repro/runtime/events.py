@@ -1,18 +1,20 @@
-"""Typed failure events and cluster health, and the bridge from the resource
-manager's packing (`ReplicaAssignment`) into the nonuniform-TP `FailurePlan`
-(DESIGN.md §2.1).
+"""Typed failure/recovery events and cluster health, and the bridge from the
+resource manager's packing (`ReplicaAssignment`) into the nonuniform-TP
+`FailurePlan` (DESIGN.md §2.1).
 
 The paper's restart flow (§3.3): a GPU fails somewhere in a scale-up domain;
 on restart the resource manager packs partially-failed domains into the
 lowest-rank DP replicas and the job resumes with those replicas at reduced
 TP. Here that flow is data: a `FailureEvent` updates `ClusterHealth`, and
 `plan_from_health()` turns the packed assignment into the `FailurePlan` the
-step builder and reshard tables consume.
+step builder and reshard tables consume. `RecoveryEvent` is the inverse — a
+repaired GPU lowers a domain's failed count and the next packing raises the
+affected replica's TP back toward full (DESIGN.md §2.4 lifecycle).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -28,23 +30,43 @@ class DeadReplicaError(RuntimeError):
 
 
 @dataclass(frozen=True)
-class FailureEvent:
-    """One failure notification. Exactly one of ``domain`` (physical
-    scale-up-domain index) or ``replica`` (current mesh DP index — resolved
-    against the live packing) must identify the blast site."""
+class _ClusterEvent:
+    """Shared shape of failure/recovery notifications. Exactly one of
+    ``domain`` (physical scale-up-domain index) or ``replica`` (current mesh
+    DP index — resolved against the live packing) must identify the site."""
 
-    step: Optional[int] = None      # training step the failure was observed at
+    step: Optional[int] = None      # training step the event was observed at
     domain: Optional[int] = None
     replica: Optional[int] = None
-    n_gpus: int = 1                 # GPUs lost in that domain
+    n_gpus: int = 1                 # GPUs affected in that domain
 
     def __post_init__(self):
         if (self.domain is None) == (self.replica is None):
             raise ValueError(
-                "FailureEvent needs exactly one of domain= or replica="
+                f"{type(self).__name__} needs exactly one of domain= or replica="
             )
         if self.n_gpus < 1:
             raise ValueError("n_gpus must be >= 1")
+
+
+@dataclass(frozen=True)
+class FailureEvent(_ClusterEvent):
+    """One failure notification: ``n_gpus`` GPUs lost in the blast site's
+    scale-up domain (replica-addressed events land on that replica's worst
+    domain under the current packing)."""
+
+
+@dataclass(frozen=True)
+class RecoveryEvent(_ClusterEvent):
+    """One repair notification — the inverse of `FailureEvent`: ``n_gpus``
+    GPUs return to service. A replica-addressed repair lands on that
+    replica's WORST domain (the one pinning its TP). Repairing an
+    already-healthy domain is a no-op: failed counts saturate at the domain
+    size on the way down, so the way up must absorb the matching surplus
+    repairs of a clamped trace."""
+
+
+LifecycleEvent = Union[FailureEvent, RecoveryEvent]
 
 
 @dataclass(frozen=True)
@@ -88,10 +110,12 @@ class ClusterHealth:
             list(self.failed), self.domain_size, self.domains_per_replica
         )
 
-    def apply(self, event: FailureEvent) -> "ClusterHealth":
-        """Health after ``event``. A replica-addressed event lands on that
-        replica's worst domain under the CURRENT packing (the domain already
-        pinning its TP)."""
+    def resolve_domain(self, event: LifecycleEvent) -> int:
+        """Physical domain ``event`` lands on: its explicit ``domain``, or —
+        replica-addressed — the worst domain of that replica under the
+        CURRENT packing (the domain already pinning its TP: for a failure
+        that is where another hit hurts least, for a repair where a fix
+        helps most)."""
         domain = event.domain
         if domain is None:
             asg = self.assignments()
@@ -101,8 +125,17 @@ class ClusterHealth:
             domain = int(a.domain_ids[int(np.argmax(a.failed))])
         if not 0 <= domain < self.n_domains:
             raise ValueError(f"no domain {domain}")
+        return domain
+
+    def apply(self, event: LifecycleEvent) -> "ClusterHealth":
+        """Health after ``event`` (site per `resolve_domain`). Failures
+        saturate at the domain size; repairs saturate at fully healthy."""
+        domain = self.resolve_domain(event)
         failed = list(self.failed)
-        failed[domain] = min(self.domain_size, failed[domain] + event.n_gpus)
+        if isinstance(event, RecoveryEvent):
+            failed[domain] = max(0, failed[domain] - event.n_gpus)
+        else:
+            failed[domain] = min(self.domain_size, failed[domain] + event.n_gpus)
         return replace(self, failed=tuple(failed))
 
 

@@ -1,0 +1,346 @@
+"""Trace-driven failure/recovery orchestration: the full NTP lifecycle
+(pristine → degraded → boosted → repaired) replayed against a live
+`NTPSession` (DESIGN.md §2.4).
+
+Three pieces:
+
+* `PowerPolicy` — the NTP vs NTP-PW decision hook (paper §3.2, Table 1): on
+  every lifecycle transition it consults `core.power.PowerModel` to pick each
+  replica's power boost and usable local batch, and predicts the job's
+  relative iteration time (recorded into step metrics by the session).
+* `schedule_from_trace` — converts `core.failure_model.simulate_events`
+  output (per-event (domain, gpu) placement + recovery times) into a timed
+  `ScheduledEvent` list of `FailureEvent`/`RecoveryEvent` for a job-scale
+  cluster (one scale-up domain per DP replica).
+* `TraceRunner` — replays a schedule against a real session, optionally
+  asserting canonical-equivalence to a dense uniform reference at every step
+  and at every transition (the paper's availability story, §2.3/§6.1, as an
+  executable test harness).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import ntp_train as nt
+from repro.core.failure_model import FailureTraceConfig, simulate_events
+from repro.core.nonuniform import FailurePlan
+from repro.core.policies import (
+    WorkloadGeometry, boosted_operating_point, stage_slowdown,
+)
+from repro.core.power import PowerModel
+from repro.runtime.events import FailureEvent, LifecycleEvent, RecoveryEvent
+
+POLICY_NAMES = ("ntp", "ntp_pw")
+
+
+@dataclass(frozen=True)
+class PowerDecision:
+    """One policy verdict for one `FailurePlan`."""
+
+    method: str                      # "uniform" | "ntp" | "ntp_pw"
+    boost: Tuple[float, ...]         # per-replica power multiplier (×TDP)
+    local_batches: Tuple[int, ...]   # per-replica usable samples
+    rel_iter_time: float             # predicted job iter time (1.0 = healthy)
+
+    @property
+    def max_boost(self) -> float:
+        return max(self.boost)
+
+
+@dataclass(frozen=True)
+class PowerPolicy:
+    """Decides, per lifecycle transition, how degraded replicas keep pace:
+
+    * ``ntp``    — no boost; shrink local batch ∝ surviving TP (paper §3.1).
+    * ``ntp_pw`` — repurpose the failed GPUs' power budget (capped at the
+      rack's ``max_boost``, §3.2) and keep as much of the full local batch as
+      the boosted speed sustains; shrink only past the cap (Table 1).
+    """
+
+    name: str = "ntp"
+    model: PowerModel = PowerModel()
+    geom: Optional[WorkloadGeometry] = None
+
+    def __post_init__(self):
+        if self.name not in POLICY_NAMES:
+            raise ValueError(f"policy {self.name!r} not in {POLICY_NAMES}")
+
+    def decide(self, plan: FailurePlan, *, local_batch: int,
+               geom: Optional[WorkloadGeometry] = None) -> PowerDecision:
+        geom = geom or self.geom or WorkloadGeometry()
+        geom = replace(geom, local_batch=local_batch)
+        n1 = plan.n1
+        ntp_lb = plan.local_batch_fraction(local_batch)
+        boosts, lbs, rels = [], [], []
+        for r, t in enumerate(plan.replica_tp):
+            if t == n1:
+                boosts.append(1.0)
+                lbs.append(local_batch)
+                rels.append(1.0)
+                continue
+            slow = stage_slowdown(t, n1, geom)
+            if self.name == "ntp_pw":
+                # shared Table-1 operating point (core/policies.py); shed
+                # batch only past the rack cap, and never below the
+                # un-boosted ∝-TP share
+                p, eff = boosted_operating_point(slow, self.model)
+                bs = int(np.clip(np.floor(local_batch / eff),
+                                 max(1, int(ntp_lb[r])), local_batch))
+            else:
+                p = 1.0
+                eff = slow
+                bs = int(ntp_lb[r])
+            boosts.append(float(p))
+            lbs.append(bs)
+            rels.append(eff * bs / local_batch)
+        method = "uniform" if plan.healthy else self.name
+        return PowerDecision(
+            method=method, boost=tuple(boosts), local_batches=tuple(lbs),
+            rel_iter_time=float(max(rels)),
+        )
+
+
+def power_policy(name: str, *, model: Optional[PowerModel] = None,
+                 geom: Optional[WorkloadGeometry] = None) -> PowerPolicy:
+    """Factory for the CLI spelling (``ntp`` / ``ntp_pw`` / ``ntp-pw``)."""
+    return PowerPolicy(name=name.lower().replace("-", "_"),
+                       model=model or PowerModel(), geom=geom)
+
+
+# ---------------------------------------------------------------------------
+# trace -> timed event schedule
+
+@dataclass(frozen=True)
+class ScheduledEvent:
+    step: int
+    event: LifecycleEvent
+
+
+def schedule_from_trace(
+    cfg: FailureTraceConfig, *, steps: int, steps_per_hour: float = 1.0,
+) -> List[ScheduledEvent]:
+    """Timed fail/repair schedule for a job whose cluster is described by
+    ``cfg`` — one scale-up domain per DP replica (``cfg.n_gpus = D × n1``,
+    ``cfg.domain_size = n1``). Every simulated failure becomes a
+    domain-addressed `FailureEvent` at its onset step and a matching
+    `RecoveryEvent` at its repair step; failures already live at step 0
+    (lead-in) are injected at step 0, and repairs beyond the horizon are
+    dropped (the GPU stays down for the rest of the run)."""
+    ev = simulate_events(cfg)
+    out: List[ScheduledEvent] = []
+    for i in range(ev.n_events):
+        s0 = max(0, int(np.ceil(ev.start_h[i] * steps_per_hour)))
+        s1 = int(np.ceil(ev.end_h[i] * steps_per_hour))
+        dom = int(ev.domain[i])
+        if s1 <= 0 or s0 >= steps or s1 <= s0:
+            continue
+        out.append(ScheduledEvent(s0, FailureEvent(step=s0, domain=dom)))
+        if s1 < steps:
+            out.append(ScheduledEvent(s1, RecoveryEvent(step=s1, domain=dom)))
+    # repairs before failures at the same step: a same-step repair can make
+    # an otherwise replica-killing failure legal (and never the reverse)
+    return sorted(out,
+                  key=lambda e: (e.step, not isinstance(e.event, RecoveryEvent)))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle replay
+
+class TraceRunner:
+    """Replays a `ScheduledEvent` list against a live `NTPSession`.
+
+    With ``verify=True`` it co-trains a dense single-logical-copy reference
+    (same optimizer, same batches, the session's per-replica sample masks)
+    and asserts f32-level agreement of the loss at EVERY step (``atol``) and
+    of the canonical weights at every lifecycle transition (``param_atol``,
+    default ``atol``) — including the upward (repair) transitions that
+    restore full TP. Requires a fresh session. Note AdamW's rsqrt update
+    amplifies f32 rounding noise into ~1e-4 weight deltas per step even with
+    identical math, so long AdamW runs need a looser ``param_atol``; SGD is
+    tight at any length.
+    """
+
+    def __init__(
+        self,
+        session,
+        schedule: List[ScheduledEvent],
+        *,
+        verify: bool = False,
+        atol: float = 1e-4,
+        param_atol: Optional[float] = None,
+        on_event: Optional[Callable[[LifecycleEvent, FailurePlan], None]] = None,
+    ):
+        self.session = session
+        self.schedule = sorted(schedule, key=lambda e: e.step)
+        self.verify = verify
+        self.atol = atol
+        self.param_atol = atol if param_atol is None else param_atol
+        self.on_event = on_event
+        self.history: List[Dict] = []
+        self.transitions: List[Dict] = []
+        self._next_step = 0
+        self._repair_debt: Dict[int, int] = {}  # domain -> GPUs never failed
+        if verify:
+            if session.opt_step != 0:
+                raise ValueError("verify=True needs a fresh (step-0) session")
+            self._ref_loss = jax.jit(
+                jax.value_and_grad(nt.make_reference_loss(session.cfg))
+            )
+            self._ref_params = session.canonical_params()
+            self._ref_opt = session.optimizer.init(self._ref_params)
+
+    # ------------------------------------------------------------- internals
+
+    def _mask(self):
+        lb = self.session.local_batches
+        full = self.session.local_batch
+        return np.concatenate(
+            [(np.arange(full) < b).astype(np.float32) for b in lb]
+        )
+
+    def _check_canonical(self, where: str) -> float:
+        got = self.session.canonical_params()
+        err = max(
+            float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(self._ref_params))
+        )
+        assert err < self.param_atol, (
+            f"{where}: canonical params diverged from dense reference "
+            f"(max abs err {err:.3e})"
+        )
+        return err
+
+    def _apply_due(self, step: int) -> List[LifecycleEvent]:
+        from repro.runtime.events import DeadReplicaError
+
+        applied = []
+        while self.schedule and self.schedule[0].step <= step:
+            ev = self.schedule.pop(0).event
+            old_plan = self.session.plan
+            if isinstance(ev, RecoveryEvent):
+                # a repair whose failure was rejected must not touch the
+                # ledger: its GPU was never marked failed, and applying it
+                # would raise TP for hardware that is actually still down
+                dom = self.session.health.resolve_domain(ev)
+                debt = self._repair_debt.get(dom, 0)
+                if debt:
+                    absorbed = min(debt, ev.n_gpus)
+                    self._repair_debt[dom] = debt - absorbed
+                    if absorbed == ev.n_gpus:
+                        self.transitions.append({
+                            "step": step, "kind": "absorbed", "event": ev,
+                            "old_plan": old_plan, "new_plan": old_plan,
+                        })
+                        continue
+                    ev = RecoveryEvent(step=ev.step, domain=dom,
+                                       n_gpus=ev.n_gpus - absorbed)
+            try:
+                new_plan = self.session.apply(ev)
+            except DeadReplicaError as e:
+                # the blast would leave a replica with no GPUs — outside
+                # NTP's regime (DP_DROP / spares territory, paper §3.3).
+                # The session refused before mutating; remember the debt so
+                # the GPU's matching repair is absorbed, not applied.
+                dom = self.session.health.resolve_domain(ev)
+                self._repair_debt[dom] = (
+                    self._repair_debt.get(dom, 0) + ev.n_gpus
+                )
+                self.transitions.append({
+                    "step": step, "kind": "rejected", "event": ev,
+                    "old_plan": old_plan, "new_plan": old_plan,
+                    "error": str(e),
+                })
+                continue
+            applied.append(ev)
+            rec = {
+                "step": step,
+                "kind": "repair" if isinstance(ev, RecoveryEvent) else "failure",
+                "event": ev,
+                "old_plan": old_plan,
+                "new_plan": new_plan,
+            }
+            if self.verify and new_plan != old_plan:
+                rec["canonical_err"] = self._check_canonical(
+                    f"step {step} ({rec['kind']} transition {old_plan} -> {new_plan})"
+                )
+            self.transitions.append(rec)
+            if self.on_event is not None:
+                self.on_event(ev, new_plan)
+        return applied
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, batch_fn: Callable[[int], object], steps: int) -> List[Dict]:
+        """Drive ``steps`` optimizer steps, consuming due events before each.
+        ``batch_fn(step)`` must return the full (D·local_batch, S+1) token
+        batch. Resumable: repeated calls continue the global step counter.
+        Returns the metrics history of THIS call's steps."""
+        first = self._next_step
+        for i in range(first, first + steps):
+            applied = self._apply_due(i)
+            batch = batch_fn(i)
+            metrics = self.session.step(batch)
+            rec = {
+                "step": i,
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics["grad_norm"]),
+                "replica_tp": self.session.plan.replica_tp,
+                "local_batches": tuple(int(b) for b in self.session.local_batches),
+                "events_applied": len(applied),
+            }
+            for k in ("power_boost", "rel_iter_time", "policy"):
+                if k in metrics:
+                    rec[k] = metrics[k]
+            if self.verify:
+                rl = self._ref_step(batch)
+                diff = abs(rec["loss"] - rl)
+                assert diff < self.atol, (
+                    f"step {i}: NTP loss {rec['loss']:.6f} diverged from dense "
+                    f"reference {rl:.6f} (|diff| {diff:.3e})"
+                )
+                rec["ref_loss"] = rl
+            self.history.append(rec)
+        self._next_step = first + steps
+        if self.verify:
+            self._check_canonical("end of run")
+        return self.history[first:]
+
+    def _ref_step(self, batch) -> float:
+        import jax.numpy as jnp
+
+        mask = jnp.asarray(self._mask())
+        rl, g = self._ref_loss(self._ref_params, batch, mask)
+        self._ref_params, self._ref_opt, _ = self.session.optimizer.update(
+            g, self._ref_opt, self._ref_params
+        )
+        return float(rl)
+
+    # ------------------------------------------------------------- reporting
+
+    def goodput(self) -> float:
+        """Mean fraction of the full minibatch actually trained on — the
+        live-session analogue of the paper's lost-throughput metric."""
+        if not self.history:
+            return 1.0
+        full = self.session.local_batch * self.session.plan.d
+        return float(np.mean([sum(h["local_batches"]) / full for h in self.history]))
+
+    def summary(self) -> Dict:
+        n_fail = sum(1 for t in self.transitions if t["kind"] == "failure")
+        n_rep = sum(1 for t in self.transitions if t["kind"] == "repair")
+        return {
+            "steps": len(self.history),
+            "failures": n_fail,
+            "repairs": n_rep,
+            "rejected": sum(1 for t in self.transitions
+                            if t["kind"] == "rejected"),
+            "absorbed_repairs": sum(1 for t in self.transitions
+                                    if t["kind"] == "absorbed"),
+            "goodput": self.goodput(),
+            "final_plan": self.session.plan,
+        }

@@ -16,12 +16,19 @@ Session lifecycle::
     for i, batch in ...:
         if gpu_died:
             session.apply(FailureEvent(step=i, replica=r))   # replan in place
+        if gpu_repaired:
+            session.apply(RecoveryEvent(step=i, domain=d))   # TP back up
         metrics = session.step(batch)                        # loss, grad_norm
     session.save("ckpt.npz")                                 # canonical layout
 
 `apply()` transitions FailurePlan -> FailurePlan' by repacking params AND
 optimizer state through the pack/unpack machinery — the checkpoint-free
 equivalent of the paper's restart, with no caller-visible host round-trip.
+It runs in BOTH directions: a `FailureEvent` lowers a replica's TP, a
+`RecoveryEvent` raises it back toward full (DESIGN.md §2.4). An optional
+`PowerPolicy` (runtime/orchestrator.py) is consulted on every transition to
+pick per-replica power boost + usable batch (NTP vs NTP-PW) and annotate
+step metrics with the boost level and predicted relative iteration time.
 """
 from __future__ import annotations
 
@@ -35,7 +42,9 @@ from repro.core import ntp_train as nt
 from repro.core.nonuniform import FailurePlan
 from repro.core.ntp_train import Mode, NTPModelConfig
 from repro.optim import AdamWConfig, Optimizer, adamw
-from repro.runtime.events import ClusterHealth, FailureEvent, plan_from_health
+from repro.runtime.events import (
+    ClusterHealth, FailureEvent, LifecycleEvent, plan_from_health,
+)
 
 
 class NTPSession:
@@ -64,6 +73,8 @@ class NTPSession:
         optimizer: Optional[Optimizer] = None,
         params: Optional[Dict] = None,     # canonical; default random init
         key=None,
+        power_policy=None,                 # orchestrator.PowerPolicy
+        spares: int = 0,                   # spare domains absorbing failures
     ) -> "NTPSession":
         """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
         and/or ``plan`` seed the failure state (default: pristine)."""
@@ -74,6 +85,14 @@ class NTPSession:
         self._mode = Mode.coerce(mode)
         self._local_batch = local_batch
         self._optimizer = optimizer or adamw(AdamWConfig(lr=1e-2))
+        if power_policy is not None and self._mode is Mode.DP_DROP:
+            raise ValueError(
+                "a PowerPolicy decides NTP/NTP-PW batches — contradictory "
+                "with Mode.DP_DROP (which zeroes degraded replicas)"
+            )
+        self._policy = power_policy
+        self._spares = spares
+        self._decision = None
         d, n1 = mesh.shape["data"], mesh.shape["model"]
 
         if health is None:
@@ -82,7 +101,7 @@ class NTPSession:
                 else ClusterHealth.pristine(d, n1)
             )
         self._health = health
-        packed = plan_from_health(health)
+        packed = plan_from_health(health, spares=spares)
         if plan is not None and plan != packed:
             # a plan out of packed order would make replica-addressed events
             # resolve against the wrong physical domain
@@ -101,8 +120,9 @@ class NTPSession:
         )
         self._params = nt.pack_params(cfg, canonical, self._plan)
         self._opt = self._optimizer.init(self._params)
-        self._events: List[FailureEvent] = []
+        self._events: List[LifecycleEvent] = []
         self._last_metrics: Dict[str, Any] = {}
+        self._decide()
         self._build_step()
         return self
 
@@ -153,6 +173,9 @@ class NTPSession:
         self._plan = None
         self._events = []
         self._last_metrics = {}
+        self._policy = None
+        self._spares = 0
+        self._decision = None
         return self
 
     # ------------------------------------------------------------- introspect
@@ -170,8 +193,36 @@ class NTPSession:
         return self._health
 
     @property
-    def events(self) -> List[FailureEvent]:
+    def events(self) -> List[LifecycleEvent]:
         return list(self._events)
+
+    @property
+    def cfg(self):
+        return self._cfg
+
+    @property
+    def optimizer(self) -> Optimizer:
+        return self._optimizer
+
+    @property
+    def local_batch(self) -> int:
+        return self._local_batch
+
+    @property
+    def local_batches(self):
+        """Per-replica usable samples under the current plan (the power
+        policy's decision, or the mode's default rule)."""
+        self._require_ntp("local batch accounting")
+        if self._decision is not None:
+            return list(self._decision.local_batches)
+        return list(
+            nt.default_local_batches(self._plan, self._mode, self._local_batch)
+        )
+
+    @property
+    def power_decision(self):
+        """The PowerPolicy's verdict for the current plan (None: no policy)."""
+        return self._decision
 
     @property
     def params(self):
@@ -195,22 +246,35 @@ class NTPSession:
     # ---------------------------------------------------------------- train
 
     def step(self, batch) -> Dict[str, Any]:
-        """One optimizer step; returns the metrics dict (loss, grad_norm, …)."""
+        """One optimizer step; returns the metrics dict (loss, grad_norm, …).
+        Under a PowerPolicy the dict additionally carries the policy verdict:
+        ``policy``, ``power_boost`` (max ×TDP over replicas) and the
+        predicted ``rel_iter_time``."""
         self._params, self._opt, metrics = self._step_fn(
             self._params, self._opt, batch
         )
+        if self._decision is not None:
+            metrics = dict(
+                metrics,
+                policy=self._decision.method,
+                power_boost=self._decision.max_boost,
+                rel_iter_time=self._decision.rel_iter_time,
+            )
         self._last_metrics = metrics
         return metrics
 
     # ---------------------------------------------------------------- events
 
-    def apply(self, event: FailureEvent) -> FailurePlan:
-        """Consume a failure event: update health, replan, and repack params
-        and optimizer state into the new plan — training continues with the
-        same logical weights (the paper's restart, minus the restart)."""
-        self._require_ntp("failure replanning")
+    def apply(self, event: LifecycleEvent) -> FailurePlan:
+        """Consume a lifecycle event: update health, replan, and repack
+        params and optimizer state into the new plan — training continues
+        with the same logical weights. For a `FailureEvent` that is the
+        paper's restart minus the restart (TP goes down); for a
+        `RecoveryEvent` it is the missing inverse (TP comes back up, params
+        and AdamW state spread back over the repaired ranks)."""
+        self._require_ntp("lifecycle replanning")
         new_health = self._health.apply(event)
-        new_plan = plan_from_health(new_health)
+        new_plan = plan_from_health(new_health, spares=self._spares)
         self._events.append(event)
         self._health = new_health
         if new_plan == self._plan:
@@ -224,6 +288,7 @@ class NTPSession:
         self._plan = new_plan
         if self._mode is Mode.UNIFORM and not new_plan.healthy:
             self._mode = Mode.NTP  # uniform jobs degrade into NTP, not death
+        self._decide()
         self._build_step()
         return new_plan
 
@@ -261,10 +326,30 @@ class NTPSession:
                 "the arch backend trains uniformly via train/steps.py"
             )
 
+    def _decide(self) -> None:
+        """Consult the PowerPolicy (if any) for the current plan. Geometry is
+        derived from the live model: attention quantizes at kv-group (unit)
+        granularity."""
+        if self._policy is None:
+            self._decision = None
+            return
+        from repro.core.policies import WorkloadGeometry
+
+        geom = self._policy.geom or WorkloadGeometry(
+            n_heads=self._cfg.n_kv_groups, local_batch=self._local_batch
+        )
+        self._decision = self._policy.decide(
+            self._plan, local_batch=self._local_batch, geom=geom
+        )
+
     def _build_step(self) -> None:
         self._step_fn = nt.make_ntp_train_step(
             self._cfg, self._plan, self._mesh, mode=self._mode,
             local_batch=self._local_batch, optimizer=self._optimizer,
+            local_batches=(
+                None if self._decision is None
+                else self._decision.local_batches
+            ),
         )
 
     def _repack_opt(self, opt: Dict, old: FailurePlan, new: FailurePlan) -> Dict:

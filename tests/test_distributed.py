@@ -38,3 +38,13 @@ def test_moe_expert_parallel_matches_oracle(run_dist):
     identical to the dense oracle (drop-free capacity)."""
     out = run_dist("moe_expert_parallel.py")
     assert "MOE_EP_OK" in out
+
+
+@pytest.mark.slow
+def test_session_lifecycle_fail_boost_repair(run_dist):
+    """ISSUE 2 acceptance: a scripted fail -> boost -> repair trace replayed
+    through NTPSession (via TraceRunner) matches the dense uniform reference
+    to f32 exactness at every step, including after RecoveryEvents restore
+    TP to full — with both plain-NTP/SGD and NTP-PW/AdamW policies."""
+    out = run_dist("session_lifecycle.py")
+    assert "SESSION_LIFECYCLE_OK" in out

@@ -1,0 +1,113 @@
+"""Golden regression tests for the analytic layer (ISSUE 2 satellite): pin
+`table1_settings`, `throughput_loss_curve` (small spec, fixed seed) and
+`steady_state_failed_fraction` to checked-in JSON so policy/power refactors
+cannot silently drift from the paper's Table 1 / Figs. 6-7 calibration.
+
+On mismatch the freshly-computed values are written next to the golden file
+as ``analytic_golden.actual.json`` (uploaded as a CI artifact) so the diff is
+inspectable. To intentionally re-pin after a calibrated change:
+
+    PYTHONPATH=src python tests/test_golden_analytic.py --regen
+"""
+import json
+import os
+
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "analytic_golden.json")
+ACTUAL_PATH = os.path.join(GOLDEN_DIR, "analytic_golden.actual.json")
+REL_TOL = 1e-6
+
+
+def compute_golden():
+    """Everything pinned, computed fresh. Must stay cheap (< a few s) and
+    fully deterministic (fixed seeds, closed-form elsewhere)."""
+    from repro.core.availability import ClusterSpec
+    from repro.core.failure_model import (
+        FailureTraceConfig, steady_state_failed_fraction,
+    )
+    from repro.core.policies import table1_settings, throughput_loss_curve
+
+    spec = ClusterSpec(n_gpus=4096, domain_size=32, domains_per_replica=4)
+    curve = throughput_loss_curve(
+        spec, [1e-3, 2e-3, 4e-3], samples=4, seed=0
+    )
+    return {
+        "table1_settings": table1_settings(),
+        "throughput_loss_curve": {
+            "spec": {"n_gpus": spec.n_gpus, "domain_size": spec.domain_size,
+                     "domains_per_replica": spec.domains_per_replica},
+            "failed_fractions": [1e-3, 2e-3, 4e-3],
+            "samples": 4,
+            "seed": 0,
+            "curves": curve,
+        },
+        "steady_state_failed_fraction": {
+            "rate_1x": steady_state_failed_fraction(FailureTraceConfig()),
+            "rate_3x": steady_state_failed_fraction(
+                FailureTraceConfig(rate_multiplier=3.0)
+            ),
+        },
+    }
+
+
+def _flatten(prefix, obj, out):
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            _flatten(f"{prefix}.{k}", obj[k], out)
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            _flatten(f"{prefix}[{i}]", v, out)
+    else:
+        out[prefix] = obj
+
+
+def test_analytic_layer_matches_golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        f"missing golden file {GOLDEN_PATH}; generate it with "
+        "PYTHONPATH=src python tests/test_golden_analytic.py --regen"
+    )
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    actual = compute_golden()
+
+    want, got = {}, {}
+    _flatten("golden", golden, want)
+    _flatten("golden", actual, got)
+
+    mismatches = []
+    for key in sorted(set(want) | set(got)):
+        if key not in want or key not in got:
+            mismatches.append(f"{key}: only in "
+                              f"{'golden' if key in want else 'actual'}")
+            continue
+        w, g = want[key], got[key]
+        if isinstance(w, float) or isinstance(g, float):
+            ok = g == pytest.approx(w, rel=REL_TOL, abs=1e-12)
+        else:
+            ok = w == g
+        if not ok:
+            mismatches.append(f"{key}: golden {w!r} != actual {g!r}")
+
+    if mismatches:
+        with open(ACTUAL_PATH, "w") as f:
+            json.dump(actual, f, indent=2, sort_keys=True)
+        pytest.fail(
+            "analytic layer drifted from the paper-calibrated golden values "
+            f"({len(mismatches)} mismatches; fresh values written to "
+            f"{ACTUAL_PATH}):\n  " + "\n  ".join(mismatches[:20])
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(compute_golden(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)

@@ -1,0 +1,131 @@
+"""Property-based lifecycle-transition tests (ISSUE 2 satellite): random
+interleavings of fail/repair events on a 2×4 mesh must never corrupt the
+canonical weights carried through the repack chain, and `ClusterHealth.apply`
+must be inverse-consistent (fail then repair of the same GPU restores the
+packed plan). Host-side — the repack algebra is pure numpy; the live-session
+trajectory equivalence runs in tests/dist/session_lifecycle.py."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import ntp_train as nt
+from repro.runtime import (
+    ClusterHealth, DeadReplicaError, FailureEvent, RecoveryEvent,
+    plan_from_health,
+)
+
+D, N1 = 2, 4  # the 2×4 mesh of the live lifecycle test
+
+
+def _tiny_cfg():
+    return nt.NTPModelConfig(d_model=32, n_kv_groups=4, q_per_kv=1,
+                             head_dim=16, d_ff=128, unit_rows=32,
+                             n_layers=1, vocab=64)
+
+
+# one lifecycle event: (is_failure, addressed_by_domain, index, n_gpus)
+EVENT = st.tuples(st.booleans(), st.booleans(), st.integers(0, D - 1),
+                  st.integers(1, 2))
+
+
+def _to_event(is_fail, by_domain, idx, n_gpus):
+    cls = FailureEvent if is_fail else RecoveryEvent
+    return cls(domain=idx) if by_domain else cls(replica=idx, n_gpus=n_gpus)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(EVENT, max_size=10))
+def test_random_interleavings_preserve_canonical_weights(events):
+    """Fold an arbitrary fail/repair interleaving through health -> plan ->
+    repack; the canonical content of params AND an AdamW-moment-like tree
+    must survive every transition bit-exactly, recoverable from EVERY
+    replica. Events that would kill a replica (TP 0) are skipped, as the
+    session would refuse them."""
+    cfg = _tiny_cfg()
+    canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+    moment = jax.tree.map(lambda x: x * 0.5, canon)  # stand-in AdamW m/v
+
+    health = ClusterHealth.pristine(D, N1)
+    plan = plan_from_health(health)
+    packed = nt.pack_params(cfg, canon, plan)
+    packed_m = nt.pack_params(cfg, moment, plan)
+
+    n_applied = 0
+    for ev_tuple in events:
+        ev = _to_event(*ev_tuple)
+        new_health = health.apply(ev)
+        try:
+            new_plan = plan_from_health(new_health)
+        except DeadReplicaError:
+            continue
+        packed = nt.repack_params(cfg, packed, plan, new_plan)
+        packed_m = nt.repack_params(cfg, packed_m, plan, new_plan)
+        health, plan = new_health, new_plan
+        n_applied += 1
+
+    for r in range(plan.d):
+        for got_tree, want_tree in ((packed, canon), (packed_m, moment)):
+            back = nt.unpack_params(cfg, got_tree, plan, replica=r)
+            for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(want_tree)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                    f"replica {r} corrupted after {n_applied} transitions "
+                    f"(final plan {plan})"
+                )
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, N1 - 1), min_size=D, max_size=D),
+       st.integers(0, D - 1))
+def test_fail_then_repair_same_domain_is_identity(failed, domain):
+    """Failing one GPU in a domain and then repairing one GPU in the same
+    domain restores both the health ledger and the packed FailurePlan —
+    whenever the failure was not clamped at the domain size."""
+    health = ClusterHealth(domain_size=N1, failed=tuple(failed))
+    if health.failed[domain] >= N1 - 1:
+        return  # failure would kill or clamp the domain
+    round_trip = health.apply(FailureEvent(domain=domain)).apply(
+        RecoveryEvent(domain=domain)
+    )
+    assert round_trip == health
+    assert plan_from_health(round_trip) == plan_from_health(health)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, N1 - 2), min_size=D, max_size=D),
+       st.integers(0, D - 1))
+def test_replica_addressed_fail_repair_restores_plan(failed, replica):
+    """Replica-addressed events resolve against the live packing: a failure
+    lands on the replica's worst domain and an immediate repair of that
+    replica undoes it at the PLAN level (health may migrate between equally
+    degraded domains, the packed plan may not)."""
+    health = ClusterHealth(domain_size=N1, failed=tuple(failed))
+    hurt = health.apply(FailureEvent(replica=replica))
+    if max(hurt.failed) >= N1:
+        return  # a dead domain has no NTP plan to compare
+    # the failure landed on exactly one domain; repair the replica that now
+    # serves it (one domain per replica here, so the repair hits it exactly)
+    (dom,) = [d for d in range(D) if hurt.failed[d] != health.failed[d]]
+    asg = hurt.assignments()
+    (victim,) = [r for r, a in enumerate(asg) if int(a.domain_ids[0]) == dom]
+    healed = hurt.apply(RecoveryEvent(replica=victim))
+    assert healed == health
+    assert plan_from_health(healed) == plan_from_health(health)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, N1), min_size=D, max_size=D),
+       st.integers(1, 3))
+def test_repair_saturates_at_healthy(failed, n_gpus):
+    """Surplus repairs are no-ops (the way up absorbs the clamped way down)."""
+    health = ClusterHealth(domain_size=N1, failed=tuple(failed))
+    for d in range(D):
+        healed = health
+        for _ in range(N1 + 2):
+            healed = healed.apply(RecoveryEvent(domain=d, n_gpus=n_gpus))
+        assert healed.failed[d] == 0
+        assert all(healed.failed[j] == health.failed[j]
+                   for j in range(D) if j != d)

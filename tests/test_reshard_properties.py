@@ -1,0 +1,132 @@
+"""Reshard-table properties (ISSUE 2 satellite), host-side: the collective
+`core.reshard.reshard` is a rank-local gather + one tiled all-to-all + a
+scatter, all driven by static tables — so its semantics can be emulated
+exactly in numpy (recv_r[j] = send_j[r]) and property-checked without a
+mesh. The live 8-device collective is covered by tests/dist/.
+
+Checked here, per plan and weight:
+* reshard(pre) ∘ reshard(post) is the identity on packed unit buffers;
+* `ntp_sync_gradient` (pre → psum(data) → post) equals the plain
+  `uniform_sync_gradient` DP all-reduce on a pristine plan;
+* zero-pad slots never leak: garbage planted in pad slots does not reach any
+  output, and output pad slots are always zero.
+"""
+import numpy as np
+import pytest
+
+from repro.core import nonuniform as nu
+from repro.core.nonuniform import FailurePlan
+
+PLANS = [
+    FailurePlan(n1=4, replica_tp=(4, 4)),
+    FailurePlan(n1=4, replica_tp=(3, 4)),
+    FailurePlan(n1=4, replica_tp=(2, 4)),
+    FailurePlan(n1=4, replica_tp=(1, 4)),
+    FailurePlan(n1=4, replica_tp=(2, 3)),
+    FailurePlan(n1=2, replica_tp=(1, 2, 2)),
+]
+KS = (4, 8, 11)
+
+
+def emulate_reshard(x_ranks: np.ndarray, tables: nu.StackedTables,
+                    replica: int) -> np.ndarray:
+    """Numpy twin of core.reshard.reshard for one replica: x_ranks is the
+    (n, U, ...) stack of every rank's local buffer."""
+    n, U = x_ranks.shape[:2]
+    send = np.asarray(tables.send_idx)[replica]   # (n, n, s_max)
+    recv = np.asarray(tables.recv_idx)[replica]   # (n, n, s_max)
+    stay = np.asarray(tables.stay_idx)[replica]   # (n, U)
+    pad = tables.buf
+    assert U == tables.buf, (U, tables.buf)
+
+    zero_row = np.zeros((n, 1) + x_ranks.shape[2:], x_ranks.dtype)
+    xp = np.concatenate([x_ranks, zero_row], axis=1)      # index U -> zeros
+    send_buf = np.stack([xp[r][send[r]] for r in range(n)])   # (n, n, s_max, ...)
+    # tiled all-to-all over the model axis: recv_r[j] = send_j[r]
+    recv_buf = np.stack([send_buf[:, r] for r in range(n)])   # (n, n, s_max, ...)
+
+    out = np.empty_like(x_ranks)
+    for r in range(n):
+        o = xp[r][stay[r]].copy()                         # stays (pad -> zero)
+        flat = recv_buf[r].reshape((-1,) + recv_buf.shape[3:])
+        slots = recv[r].reshape(-1)
+        keep = slots != pad                               # mode="drop"
+        o[slots[keep]] = flat[keep]
+        out[r] = o
+    return out
+
+
+def _rank_buffers(wp: nu.WeightPlan, w: np.ndarray, unit: int):
+    """(D, n1, buf, cols) per-rank packed buffers of canonical weight w."""
+    packed = nu.pack_global(w, wp, unit)
+    d, n1 = wp.comp_slots.shape[:2]
+    return packed.reshape(d, n1, wp.buf, -1)
+
+
+@pytest.mark.parametrize("plan", PLANS, ids=str)
+@pytest.mark.parametrize("k", KS)
+def test_pre_post_reshard_is_identity(plan, k):
+    if k < plan.n1:
+        pytest.skip("k >= n1 required")
+    wp = nu.weight_plan(k, plan)
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((k, 5)).astype(np.float32)
+    bufs = _rank_buffers(wp, w, 1)
+    for d in range(plan.d):
+        synced = emulate_reshard(bufs[d], wp.pre, d)
+        back = emulate_reshard(synced, wp.post, d)
+        assert np.array_equal(back, bufs[d]), (plan, k, d)
+
+
+@pytest.mark.parametrize("k", KS)
+def test_ntp_sync_equals_uniform_sync_on_pristine_plan(k):
+    """Healthy plan: pre/post tables degenerate to the identity, so the NTP
+    sync pipeline reduces to exactly the uniform DP all-reduce."""
+    plan = FailurePlan(n1=4, replica_tp=(4, 4, 4))
+    wp = nu.weight_plan(k, plan)
+    rng = np.random.default_rng(1)
+    grads = [rng.standard_normal((k, 3)).astype(np.float32)
+             for _ in range(plan.d)]
+    bufs = np.stack([_rank_buffers(wp, g, 1)[d]
+                     for d, g in enumerate(grads)])      # (D, n1, buf, 3)
+
+    uniform = bufs.sum(axis=0)                           # psum('data')
+
+    pre = np.stack([emulate_reshard(bufs[d], wp.pre, d)
+                    for d in range(plan.d)])
+    summed = pre.sum(axis=0)
+    ntp = np.stack([emulate_reshard(summed, wp.post, d)
+                    for d in range(plan.d)])
+    for d in range(plan.d):
+        assert np.array_equal(ntp[d], uniform), (k, d)
+
+
+@pytest.mark.parametrize("plan", PLANS, ids=str)
+def test_pad_slots_never_leak(plan):
+    """Plant NaN garbage in every pad slot of the input buffers: outputs must
+    be identical to the clean run, and output pad slots must be zero."""
+    k = 8
+    if k < plan.n1:
+        pytest.skip("k >= n1 required")
+    wp = nu.weight_plan(k, plan)
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((k, 4)).astype(np.float32)
+    bufs = _rank_buffers(wp, w, 1)
+
+    comp_pad = wp.comp_slots < 0                         # (D, n1, buf)
+    sync_pad = wp.sync_slots < 0
+    dirty = bufs.copy()
+    dirty[comp_pad] = np.nan
+
+    for d in range(plan.d):
+        clean_sync = emulate_reshard(bufs[d], wp.pre, d)
+        dirty_sync = emulate_reshard(dirty[d], wp.pre, d)
+        assert np.array_equal(clean_sync, dirty_sync), (plan, d)
+        assert (clean_sync[sync_pad[d]] == 0).all(), (plan, d)
+
+        clean_back = emulate_reshard(clean_sync, wp.post, d)
+        dirty_in = clean_sync.copy()
+        dirty_in[sync_pad[d]] = np.nan
+        dirty_back = emulate_reshard(dirty_in, wp.post, d)
+        assert np.array_equal(clean_back, dirty_back), (plan, d)
+        assert (clean_back[comp_pad[d]] == 0).all(), (plan, d)

@@ -1,16 +1,20 @@
-"""Runtime API tests: event/health -> plan bridging, Mode dispatch, and the
-packed-tree repack algebra (host-side; the live NTPSession transition runs
-in a multi-device subprocess, tests/dist/session_transition.py)."""
+"""Runtime API tests: event/health -> plan bridging, Mode dispatch, the
+packed-tree repack algebra, and the lifecycle-orchestrator surface (policy
+decisions + trace schedules) — all host-side; the live NTPSession lifecycle
+runs in multi-device subprocesses (tests/dist/session_transition.py,
+tests/dist/session_lifecycle.py)."""
 import numpy as np
 import pytest
 
 import jax
 
 from repro.core import ntp_train as nt
+from repro.core.failure_model import FailureTraceConfig
 from repro.core.nonuniform import FailurePlan
 from repro.optim import AdamWConfig, adamw, sgd
 from repro.runtime import (
-    ClusterHealth, DeadReplicaError, FailureEvent, Mode, plan_from_health,
+    ClusterHealth, DeadReplicaError, FailureEvent, Mode, RecoveryEvent,
+    plan_from_health, power_policy, schedule_from_trace,
 )
 
 
@@ -81,6 +85,152 @@ def test_health_from_plan_round_trip():
     h = ClusterHealth.from_plan(plan)
     assert h.failed == (1, 0)
     assert plan_from_health(h) == plan
+
+
+def test_recovery_event_validation_matches_failure_event():
+    with pytest.raises(ValueError):
+        RecoveryEvent()
+    with pytest.raises(ValueError):
+        RecoveryEvent(domain=0, replica=1)
+    with pytest.raises(ValueError):
+        RecoveryEvent(domain=0, n_gpus=0)
+
+
+def test_health_recovery_by_domain_and_replica():
+    h = ClusterHealth(domain_size=4, failed=(0, 2))
+    # domain-addressed repair
+    assert h.apply(RecoveryEvent(domain=1)).failed == (0, 1)
+    # replica-addressed: replica 0 serves the degraded domain 1 (packed
+    # lowest), so the repair lands there
+    assert h.apply(RecoveryEvent(replica=0)).failed == (0, 1)
+    # saturates at healthy; surplus repairs are no-ops
+    assert h.apply(RecoveryEvent(domain=1, n_gpus=99)).failed == (0, 0)
+    assert h.apply(RecoveryEvent(domain=0)).failed == (0, 2)
+
+
+def test_fail_repair_cycle_restores_plan():
+    h = ClusterHealth.pristine(2, 4)
+    hurt = h.apply(FailureEvent(replica=1)).apply(FailureEvent(domain=0))
+    assert plan_from_health(hurt).replica_tp == (3, 3)
+    healed = hurt.apply(RecoveryEvent(domain=0)).apply(RecoveryEvent(domain=1))
+    assert healed == h
+    assert plan_from_health(healed).healthy
+
+
+# ---------------------------------------------------------------------------
+# power policy (the NTP vs NTP-PW decision hook)
+
+def test_power_policy_table1_settings():
+    """The policy's verdict at the paper's TP32 geometry must agree with
+    table1_settings: TP30-PW keeps the full local batch within the 1.3× rack
+    cap; plain TP30 sheds one sample."""
+    plan = FailurePlan(n1=32, replica_tp=(30, 32))
+    pw = power_policy("ntp_pw").decide(plan, local_batch=8)
+    assert pw.method == "ntp_pw"
+    assert pw.local_batches == (8, 8)
+    assert 1.0 < pw.max_boost <= 1.3 + 1e-9
+    assert pw.rel_iter_time <= 1.005
+
+    ntp = power_policy("ntp").decide(plan, local_batch=8)
+    assert ntp.method == "ntp"
+    assert ntp.local_batches == (7, 8)
+    assert ntp.max_boost == 1.0
+
+
+def test_power_policy_beyond_cap_sheds_batch_but_never_below_ntp():
+    """Past the rack cap the boosted replica sheds samples, but never ends
+    up with fewer than the un-boosted ∝-TP share."""
+    plan = FailurePlan(n1=4, replica_tp=(2, 4))
+    pw = power_policy("ntp_pw").decide(plan, local_batch=4)
+    ntp = power_policy("ntp").decide(plan, local_batch=4)
+    assert pw.boost[0] == pytest.approx(1.3)
+    assert ntp.local_batches[0] <= pw.local_batches[0] < 4
+
+
+def test_power_policy_healthy_plan_is_uniform():
+    d = power_policy("ntp_pw").decide(FailurePlan(n1=4, replica_tp=(4, 4)),
+                                      local_batch=4)
+    assert d.method == "uniform"
+    assert d.boost == (1.0, 1.0) and d.rel_iter_time == 1.0
+
+
+def test_power_policy_rejects_unknown_name():
+    with pytest.raises(ValueError):
+        power_policy("dvfs")
+
+
+# ---------------------------------------------------------------------------
+# trace -> schedule bridge
+
+def test_schedule_from_trace_pairs_and_bounds():
+    cfg = FailureTraceConfig(n_gpus=8, domain_size=4, days=40.0,
+                             rate_multiplier=2000.0, seed=1,
+                             hw_recovery_days=(0.2, 0.4),
+                             sw_recovery_hours=2.0)
+    steps = 400
+    sched = schedule_from_trace(cfg, steps=steps)
+    assert sched, "expected events at this rate"
+    assert all(0 <= s.step < steps for s in sched)
+    assert all(s.event.domain in (0, 1) for s in sched)
+    assert [s.step for s in sched] == sorted(s.step for s in sched)
+    fails = sum(1 for s in sched if not isinstance(s.event, RecoveryEvent))
+    repairs = len(sched) - fails
+    # every repair matches an in-window failure; tail failures may be unhealed
+    assert 0 < repairs <= fails
+    # same-step tiebreak: repairs first (a repair can legalize a failure)
+    for a, b in zip(sched, sched[1:]):
+        if a.step == b.step:
+            assert not (isinstance(a.event, FailureEvent)
+                        and isinstance(b.event, RecoveryEvent)), (a, b)
+    # replaying against the ledger never under/overflows
+    h = ClusterHealth.pristine(2, 4)
+    for s in sched:
+        h = h.apply(s.event)
+        assert all(0 <= f <= 4 for f in h.failed)
+
+
+class _LedgerSession:
+    """Duck-typed stand-in for NTPSession: just the health/plan ledger, so
+    TraceRunner's event-application semantics test without a mesh."""
+
+    def __init__(self, d, n1):
+        self.health = ClusterHealth.pristine(d, n1)
+        self.plan = plan_from_health(self.health)
+
+    def apply(self, event):
+        new_health = self.health.apply(event)
+        new_plan = plan_from_health(new_health)  # may raise DeadReplicaError
+        self.health, self.plan = new_health, new_plan
+        return new_plan
+
+
+def test_trace_runner_absorbs_repairs_of_rejected_failures():
+    """A failure rejected with DeadReplicaError never touched the ledger, so
+    its paired repair must be absorbed — NOT applied — or the replayed TP
+    trajectory overstates surviving capacity."""
+    from repro.runtime import ScheduledEvent, TraceRunner
+
+    session = _LedgerSession(2, 2)
+    runner = TraceRunner(session, [
+        ScheduledEvent(0, FailureEvent(step=0, domain=0)),    # tp (1, 2)
+        ScheduledEvent(1, FailureEvent(step=1, domain=0)),    # tp 0: rejected
+        ScheduledEvent(2, RecoveryEvent(step=2, domain=0)),   # pair of the
+        ScheduledEvent(3, RecoveryEvent(step=3, domain=0)),   # rejected: absorb
+    ])
+    runner._apply_due(0)
+    assert session.plan.replica_tp == (1, 2)
+    runner._apply_due(1)
+    assert session.plan.replica_tp == (1, 2)          # rejected, unmutated
+    assert runner.transitions[-1]["kind"] == "rejected"
+    runner._apply_due(2)
+    # the dead GPU's repair heals the REAL failure; the orphaned repair of
+    # the rejected event (step 3) must then be a pure no-op
+    assert session.health.failed == (0, 0) or session.health.failed == (1, 0)
+    runner._apply_due(3)
+    assert session.health.failed == (0, 0)
+    assert session.plan.healthy
+    kinds = [t["kind"] for t in runner.transitions]
+    assert kinds.count("rejected") == 1 and kinds.count("absorbed") == 1, kinds
 
 
 # ---------------------------------------------------------------------------
