@@ -16,6 +16,7 @@ MODULES = [
     "fig8_reshard_overhead",
     "fig9_ntp_overhead",
     "fig10_blast_radius",
+    "fig_serving_goodput",
     "table1_power",
     "roofline",
     "fig11_model_validation",

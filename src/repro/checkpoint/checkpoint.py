@@ -3,6 +3,16 @@ atomically, restore with device_put back to the original shardings.
 
 (The paper's recovery story — §3.3 — restarts from a checkpoint with ranks
 re-packed; examples/train_ntp_failure.py uses exactly this path.)
+
+numpy's savez cannot round-trip ml_dtypes leaves (bf16, fp8, ...): they are
+widened to float32 on save, and the ORIGINAL dtype name is recorded next to
+the array (``__dtype__/<key>``) so `load_checkpoint` casts back — even when
+no target tree is supplied, or the target tree's leaves are float32 (a
+fresh f32-initialized session restoring a bf16 serving KV cache must get
+bf16 back, not silently doubled memory). Recorded dtypes win over the
+target tree's leaf dtype; callers wanting a different dtype cast after
+load. Checkpoints written before the records existed fall back to the
+target leaf dtype as before.
 """
 from __future__ import annotations
 
@@ -13,6 +23,8 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 import jax
+
+_DTYPE_KEY = "__dtype__/"
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -26,15 +38,16 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
-    def host(v):
+    flat = {}
+    for k, v in _flatten(tree).items():
+        if k.startswith(_DTYPE_KEY) or k == "__step__":
+            raise ValueError(f"reserved checkpoint key {k!r}")
         a = np.asarray(jax.device_get(v))
-        # numpy can't round-trip ml_dtypes (bf16 etc.) through savez: store
-        # as float32; load_checkpoint casts back to the target leaf dtype.
         if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+            # widen for savez; record the original so load casts back
+            flat[_DTYPE_KEY + k] = np.asarray(a.dtype.name)
             a = a.astype(np.float32)
-        return a
-
-    flat = {k: host(v) for k, v in _flatten(tree).items()}
+        flat[k] = a
     if step is not None:
         flat["__step__"] = np.asarray(step)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -48,12 +61,31 @@ def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
             os.unlink(tmp)
 
 
-def load_checkpoint(path: str, like_tree, shardings=None):
-    """Restore into the structure of ``like_tree``; optionally device_put with
-    a matching pytree of shardings. Returns (tree, step|None)."""
+def load_checkpoint(path: str, like_tree=None, shardings=None):
+    """Restore a checkpoint. With ``like_tree``: into its structure
+    (shapes asserted; recorded original dtypes win over the target leaf
+    dtype, which only fills in for pre-record checkpoints), optionally
+    device_put with a matching pytree of shardings. Without: returns the
+    flat ``{path-key: array}`` dict with original dtypes restored.
+    Returns (tree_or_flat_dict, step|None)."""
     with np.load(path) as data:
         flat = {k: data[k] for k in data.files}
     step = int(flat.pop("__step__")) if "__step__" in flat else None
+    dtypes = {
+        k[len(_DTYPE_KEY):]: str(flat.pop(k))
+        for k in [k for k in flat if k.startswith(_DTYPE_KEY)]
+    }
+
+    def restore(key, arr, like=None):
+        name = dtypes.get(key)
+        if name is None and like is not None:
+            name = like.dtype
+        if name is None:
+            return arr  # no-like path, no record: numpy as stored
+        return jax.numpy.asarray(arr).astype(jax.numpy.dtype(name))
+
+    if like_tree is None:
+        return {k: restore(k, v) for k, v in flat.items()}, step
 
     paths = jax.tree_util.tree_flatten_with_path(like_tree)[0]
     treedef = jax.tree_util.tree_structure(like_tree)
@@ -62,10 +94,8 @@ def load_checkpoint(path: str, like_tree, shardings=None):
         key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
         arr = flat[key]
         assert arr.shape == like.shape, (key, arr.shape, like.shape)
-        leaves.append(jax.numpy.asarray(arr).astype(like.dtype))
+        leaves.append(restore(key, arr, like))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
-    else:
-        tree = jax.tree.map(jax.numpy.asarray, tree)
     return tree, step

@@ -456,6 +456,27 @@ class Model:
         x, _, new_cache = self._trunk(params, x, positions, cache, pos, enc_out)
         return self._logits(params, x), new_cache
 
+    # ---- continuous-batching decode (repro.serve) ------------------------
+    def init_slot_cache(self, slots: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        """Slot-stacked cache for continuous batching: every leaf of the
+        single-sequence cache gains a LEADING slot axis, so each slot can sit
+        at its own decode position (`decode_slots` vmaps over it)."""
+        return jax.vmap(lambda _: self.init_cache(1, max_len, dtype))(
+            jnp.arange(slots)
+        )
+
+    def decode_slots(self, params, cache, tokens, pos):
+        """Per-slot one-token decode over an `init_slot_cache` cache:
+        ``tokens`` (slots,) int32 current token per slot, ``pos`` (slots,)
+        int32 per-slot write index — positions are ragged across slots.
+        Returns (logits (slots, vocab_padded), new_cache)."""
+
+        def one(c, t, p):
+            logits, nc = self.decode_step(params, c, t.reshape(1, 1), p)
+            return logits[0, 0], nc
+
+        return jax.vmap(one)(cache, tokens, pos)
+
 
 def build_model(cfg: ArchConfig, ctx: ShardCtx = NO_SHARD, *, param_dtype=jnp.float32,
                 remat: bool = True) -> Model:

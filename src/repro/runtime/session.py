@@ -306,7 +306,9 @@ class NTPSession:
 
     def restore(self, path: str) -> int:
         """Load a canonical checkpoint into the CURRENT plan's packing.
-        Returns the saved step."""
+        Returns the saved step. Leaves restore at the dtype they were SAVED
+        with (the checkpoint's recorded dtype wins over the live tree's —
+        repro/checkpoint/checkpoint.py); cast after restore to convert."""
         self._require_ntp("canonical checkpointing")
         like = {
             "params": self.canonical_params(),

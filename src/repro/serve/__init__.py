@@ -1,0 +1,15 @@
+"""Resilient NTP inference serving (DESIGN.md §2.5): continuous-batching
+engine + sharded-KV live reshard + SLO router behind a `ServeSession`
+façade parallel to `runtime.NTPSession` — a `FailureEvent` mid-decode
+reshards the KV cache to the reduced TP degree instead of dropping the
+in-flight requests; a `RecoveryEvent` repacks it back upward."""
+from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.kv_shard import (  # noqa: F401
+    ShardedKV, attend_from_sharded, attend_heads, gather_leaf,
+    head_layout, head_reshard_tables, reshard_leaf, shard_leaf, slots_at,
+)
+from repro.serve.router import (  # noqa: F401
+    SERVE_GEOM, Router, blast_radius_goodput, replica_serve_speed,
+    serving_goodput_trace,
+)
+from repro.serve.session import SERVE_POLICIES, ServeSession  # noqa: F401

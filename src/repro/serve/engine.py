@@ -1,0 +1,327 @@
+"""Continuous-batching serve engine for ONE NTP replica (DESIGN.md §2.5).
+
+Slot-based prefill/decode scheduling over the existing arch-stack
+transformers (`models.transformer.Model`): a fixed pool of KV-cache slots,
+each slot one in-flight request at its own position (`Model.decode_slots`
+vmaps the one-token decode over the slot axis). On a `FailureEvent` the
+cache is resharded mid-decode through `kv_shard.ShardedKV` — the
+head-redistribution all-to-all runs at the transition, and the decode loop
+works on the dense view in between (shard ∘ gather is the bit-exact
+identity, so nothing is lost by not round-tripping it per token).
+
+Degradation model (the serving twin of `core/ntp_train.py`'s local-batch
+rule): a replica at TP ``t < n1`` decodes slower by the same head-quantized
+`stage_slowdown` the training policies use, expressed here as a token-bucket
+``rel_speed`` — the engine only runs a decode step when enough speed credit
+has accrued, so wall-clock goodput shrinks exactly by the slowdown (or less,
+under an NTP-PW power boost). Its KV memory also shrinks with the surviving
+ranks, so slot capacity drops ∝ t/n1 and over-capacity requests are
+preempted (their generated prefix survives in the `Request`, and greedy
+decode makes the resumed stream identical to an uninterrupted one — exactly
+so with full-precision caches; a reduced-precision cache (bf16) can diverge
+on resume, because re-prefill attends freshly-computed full-precision K/V
+where the original decode read the quantized cache entries).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import build_model
+from repro.serve.kv_shard import ShardedKV, validate_kv_cache
+
+DECODER_KINDS = ("attn", "attn_sw", "attn_chunked")
+
+
+@dataclass
+class Request:
+    """One generation request. ``generated`` survives preemption: a resumed
+    request re-prefills prompt+generated and (greedy) continues the exact
+    same token stream."""
+
+    rid: int
+    prompt: np.ndarray                   # (L,) int32
+    max_new: int
+    arrival: float = 0.0                 # router ticks
+    deadline: Optional[float] = None     # SLO: completion-time bound (ticks)
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    finish_time: Optional[float] = None
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.generated)
+
+    def full_prompt(self) -> np.ndarray:
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int64),
+             np.asarray(self.generated, np.int64)]
+        ).astype(np.int32)
+
+
+class ServeEngine:
+    """Slot-scheduled continuous-batching engine for one serving replica."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        n1: int,
+        tp: Optional[int] = None,
+        slots: int = 8,
+        max_len: int = 96,
+        prefill_len: int = 32,
+        dtype=jnp.float32,
+        use_kernel: bool = False,
+        model=None,                     # share one Model across replicas
+        compiled=None,                  # (decode_slots, prefill, decode_step)
+    ):
+        kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
+        if not kinds <= set(DECODER_KINDS) or cfg.encoder is not None:
+            raise ValueError(
+                f"serve engine is decoder-only attention for now; {cfg.arch_id} "
+                f"has kinds {sorted(kinds)} (ssm/rglru/enc-dec caches have a "
+                "different NTP unit — open item)"
+            )
+        # ring caches (attn_sw/attn_chunked) only keep the trailing window:
+        # a prefill longer than the ring would leave pad K/V posing as valid
+        if "attn_sw" in kinds:
+            assert prefill_len <= cfg.window, (prefill_len, cfg.window)
+        if "attn_chunked" in kinds:
+            assert prefill_len <= cfg.chunk_size, (prefill_len, cfg.chunk_size)
+        assert prefill_len <= max_len
+
+        self.cfg = cfg
+        self.model = model if model is not None else build_model(cfg, remat=False)
+        self.params = params
+        self.n1 = n1
+        self._tp = n1 if tp is None else tp
+        self.slots, self.max_len, self.prefill_len = slots, max_len, prefill_len
+        self._dtype = dtype
+        self.use_kernel = use_kernel
+        # working state is the DENSE slot cache: shard ∘ gather is the
+        # bit-exact identity (tests/test_kv_shard_properties.py), so the
+        # rank-sharded form is materialized only at TP transitions, where
+        # the physical head all-to-all actually runs (apply_tp) — not
+        # round-tripped on every decoded token. On a real mesh the cache is
+        # resident sharded and the decode-time gather is the standard GQA
+        # KV all-gather.
+        self._cache = self.model.init_slot_cache(slots, max_len, dtype)
+        validate_kv_cache(self._cache)
+        self.last_reshard = {}
+        self.dead = False
+        self.rel_speed = 1.0                 # tokens per wall tick (<= 1)
+        self.power_boost = 1.0
+        self._credit = 0.0
+
+        self._rid = np.full(slots, -1, np.int64)
+        self._pos = np.zeros(slots, np.int64)
+        self._cur_tok = np.zeros(slots, np.int64)
+        self._admit_order = np.zeros(slots, np.int64)    # for preemption LIFO
+        self._admitted = 0
+        self._req: Dict[int, Request] = {}
+        self._finished: List[Request] = []
+
+        if compiled is not None:
+            # one jit cache for all replicas — identical programs, and
+            # jax.jit caches per wrapper instance, not per bound method
+            self._decode, self._prefill, self._step1 = compiled
+        else:
+            self._decode = jax.jit(self.model.decode_slots)
+            self._prefill = jax.jit(self.model.prefill)
+            self._step1 = jax.jit(self.model.decode_step)  # prefill overflow
+        self.stats = {"tokens": 0, "prefills": 0, "preemptions": 0,
+                      "reshards": 0, "reshard_bytes": 0}
+
+    # ------------------------------------------------------------ introspect
+
+    @property
+    def tp(self) -> int:
+        return self._tp
+
+    @property
+    def n_active(self) -> int:
+        return int((self._rid >= 0).sum())
+
+    @property
+    def capacity(self) -> int:
+        """Usable slots: per-rank KV memory is fixed, so total cache memory
+        (and with it the slot pool) shrinks ∝ surviving ranks."""
+        if self.dead:
+            return 0
+        return max(1, (self.slots * self._tp) // self.n1)
+
+    def can_admit(self) -> bool:
+        return (not self.dead) and self.n_active < self.capacity
+
+    @property
+    def in_flight(self) -> List[Request]:
+        return [self._req[r] for r in self._rid[self._rid >= 0]]
+
+    @property
+    def cache(self):
+        """The dense slot-stacked KV cache (leaves (slots, ..., T, kvh, hd))."""
+        return self._cache
+
+    # ---------------------------------------------------------------- admit
+
+    def admit(self, req: Request) -> bool:
+        """Prefill ``req`` (prompt + any pre-preemption prefix) into a free
+        slot. The prefill determines the request's next token, but it is
+        only EMITTED by a later credited tick — every generated token pays
+        the same ``rel_speed`` toll, so admission churn cannot dilute a
+        degraded replica's measured slowdown."""
+        if not self.can_admit():
+            return False
+        free = np.flatnonzero(self._rid < 0)
+        b = int(free[0])
+        toks = req.full_prompt()
+        n = len(toks)
+        assert 0 < n and n + req.remaining <= self.max_len, (n, req.remaining)
+
+        p = self.prefill_len
+        padded = np.zeros(p, np.int32)
+        head = toks[: min(n, p)]
+        padded[: len(head)] = head
+        cache1 = self.model.init_cache(1, self.max_len, self._dtype)
+        logits, cache1 = self._prefill(
+            self.params, jnp.asarray(padded[None]), cache1
+        )
+        if n <= p:
+            last_logits = logits[0, n - 1]
+            pos = n
+        else:
+            # resumed request longer than one prefill: feed the overflow
+            # teacher-forced through the decode path (rare; preemption only)
+            pos = p
+            for t in toks[p:]:
+                last, cache1 = self._step1(
+                    self.params, cache1, jnp.full((1, 1), t, jnp.int32),
+                    jnp.int32(pos),
+                )
+                pos += 1
+            last_logits = last[0, 0]
+        first = int(jnp.argmax(last_logits[: self.cfg.vocab_size]))
+
+        self._cache = jax.tree.map(
+            lambda full, one: full.at[b].set(one), self._cache, cache1
+        )
+        self._rid[b] = req.rid
+        self._pos[b] = pos
+        self._cur_tok[b] = first        # pending: emitted by the next tick
+        self._admit_order[b] = self._admitted
+        self._admitted += 1
+        self._req[req.rid] = req
+        self.stats["prefills"] += 1
+        return True
+
+    # ----------------------------------------------------------------- tick
+
+    def tick(self) -> List[Request]:
+        """One wall tick: iff enough speed credit accrued (a TP-degraded
+        replica skips ticks ∝ its slowdown), every active slot EMITS its
+        pending token and the batched decode computes the next one.
+        Returns the requests that finished."""
+        if self.dead or self.n_active == 0:
+            return []
+        self._credit += self.rel_speed
+        if self._credit < 1.0:
+            return []
+        self._credit -= 1.0
+
+        logits, self._cache = self._decode(
+            self.params, self._cache,
+            jnp.asarray(self._cur_tok, jnp.int32),
+            jnp.asarray(self._pos, jnp.int32),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1))
+        out, self._finished = [], []
+        for b in np.flatnonzero(self._rid >= 0):
+            req = self._req[int(self._rid[b])]
+            req.generated.append(int(self._cur_tok[b]))
+            self.stats["tokens"] += 1
+            if req.remaining <= 0:
+                self._finish(int(b))
+            else:
+                self._pos[b] += 1
+                self._cur_tok[b] = nxt[b]
+        out += self._finished
+        self._finished = []
+        return out
+
+    def _finish(self, b: int) -> None:
+        req = self._req.pop(int(self._rid[b]))
+        req.done = True
+        self._rid[b] = -1
+        self._finished.append(req)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def apply_tp(self, new_tp: int, *, rel_speed: float = 1.0,
+                 power_boost: float = 1.0) -> List[Request]:
+        """Consume a TP transition: reshard the live KV cache (or die/revive
+        on 0 <-> >0), update the speed model, and preempt whatever no longer
+        fits the shrunk slot pool. Returns the preempted requests (the
+        router requeues them; their generated prefix rides along)."""
+        preempted: List[Request] = []
+        if new_tp == 0:
+            if not self.dead:
+                preempted = self._preempt_all()
+                self.dead = True
+                self.last_reshard = {"tp_from": self._tp, "tp_to": 0,
+                                     "moved_heads_per_rank": 0,
+                                     "bytes_moved": 0}
+                self._tp = 0
+                self.rel_speed, self.power_boost = 0.0, 1.0
+            return preempted
+        if self.dead:
+            # revival: no cache state survived death — fresh zero buffers
+            self.dead = False
+            self._cache = jax.tree.map(jnp.zeros_like, self._cache)
+            self.last_reshard = {"tp_from": 0, "tp_to": new_tp,
+                                 "moved_heads_per_rank": 0, "bytes_moved": 0}
+        elif new_tp != self._tp:
+            # the physical move: shard into the OLD rank layout, run the
+            # head-redistribution all-to-all, keep the new dense view
+            skv = ShardedKV(self._cache, self.cfg.n_kv_heads, self.n1,
+                            tp=self._tp, use_kernel=self.use_kernel)
+            st = skv.apply_tp(new_tp)
+            self._cache = skv.gather()
+            self.last_reshard = st
+            self.stats["reshards"] += 1
+            self.stats["reshard_bytes"] += st["bytes_moved"]
+        self._tp = new_tp
+        self.rel_speed, self.power_boost = rel_speed, power_boost
+        while self.n_active > self.capacity:
+            preempted.append(self._preempt_one())
+        return preempted
+
+    def _preempt_one(self) -> Request:
+        """Preempt the most-recently-admitted active request (least sunk
+        prefill+decode work to redo)."""
+        active = np.flatnonzero(self._rid >= 0)
+        b = int(active[np.argmax(self._admit_order[active])])
+        req = self._req.pop(int(self._rid[b]))
+        req.preemptions += 1
+        self._rid[b] = -1
+        self._cache = jax.tree.map(
+            lambda x: x.at[b].set(jnp.zeros((), x.dtype)), self._cache
+        )
+        self.stats["preemptions"] += 1
+        return req
+
+    def _preempt_all(self) -> List[Request]:
+        out = [self._preempt_one() for _ in range(self.n_active)]
+        return out

@@ -1,0 +1,272 @@
+"""KV-cache sharding on the TP axis + live head-redistribution reshard —
+the serving analogue of `core/nonuniform.py` + `core/reshard.py`
+(DESIGN.md §2.5).
+
+Training NTP reshards *weights* between comp and sync layouts; weights are
+stateless with respect to requests, so a serving replica that loses a GPU
+could in principle re-pack them from a canonical copy (the paper's §3.3
+restart packing). The KV cache cannot: it is per-request state that took one
+forward pass per cached token to build, and dropping it means re-prefilling
+every in-flight request. This module makes the cache itself reshardable:
+
+* GQA **KV heads are the partition units** over the scale-up domain
+  (`n1` rank slots) — the same unit-choice principle as DESIGN.md §3.2;
+* a replica at TP degree ``t`` holds its heads contiguously balanced over
+  its first ``t`` live ranks (`head_layout`), expressed on the full
+  n1-wide axis so one buffer geometry serves every degree;
+* on a `FailureEvent` mid-decode, `ShardedKV.apply_tp` moves heads between
+  ranks with the SAME static-table all-to-all as the weight reshard
+  (`core.shard_mapping.reshard_tables`): rank-local gather of send buckets →
+  tiled all-to-all (recv_r[j] = send_j[r]) → scatter, with pad slot = buf
+  gathering a zero row / scatter-dropping. `RecoveryEvent` runs the same
+  move upward (repack onto the revived ranks).
+
+The collective is emulated rank-local on host (the numpy twin of
+`core.reshard.reshard`, exactly the semantics property-tested in
+`tests/test_reshard_properties.py`); on a real mesh the per-rank send-bucket
+gather is `kernels.reshard_pack` (``use_kernel=True`` runs that Pallas
+kernel here, in interpret mode on CPU) and the transpose is one
+`jax.lax.all_to_all` over the model axis.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shard_mapping as sm
+
+KV_LEAF_NAMES = ("k", "v")
+
+
+def validate_kv_cache(cache) -> None:
+    """Every leaf must be a ``k``/``v`` KV-cache tensor. Non-KV cache state
+    (ssm ``h``/``conv``) has a different NTP unit (channel block, not head)
+    and is not servable yet."""
+    for path, _ in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        name = getattr(path[-1], "key", None)
+        if name not in KV_LEAF_NAMES:
+            raise ValueError(
+                f"ShardedKV shards k/v leaves only; got {name!r} at {path} "
+                "(ssm/rglru state caches have a different NTP unit and are "
+                "not servable yet)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# layouts
+
+@lru_cache(maxsize=None)
+def head_layout(kvh: int, tp: int, n1: int) -> sm.Layout:
+    """Head -> rank placement of a replica serving at TP degree ``tp``:
+    contiguously balanced over the first ``tp`` live ranks, expressed on the
+    full ``n1``-wide domain axis (ranks >= tp are failed/idle and empty).
+    ``kvh < tp`` simply leaves some live ranks without a KV head (Megatron
+    GQA replicates their weight-side K/V; the cache itself is never
+    duplicated)."""
+    assert 1 <= tp <= n1, (tp, n1)
+    return sm.make_layout(sm.sync_assignment(kvh, tp), n1)
+
+
+def slots_at(layout: sm.Layout, buf: int) -> np.ndarray:
+    """(n, buf) head id per buffer slot, -1 pad (layout.slots widened to a
+    common ``buf`` so every TP degree shares one buffer geometry)."""
+    assert buf >= layout.max_count
+    out = np.full((layout.n, buf), -1, dtype=np.int64)
+    out[:, : layout.max_count] = layout.slots
+    return out
+
+
+@lru_cache(maxsize=None)
+def head_reshard_tables(kvh: int, tp_from: int, tp_to: int,
+                        n1: int) -> sm.ReshardTables:
+    """Static all-to-all tables moving every KV head from its ``tp_from``
+    placement to its ``tp_to`` placement (buf = kvh: the TP=1 worst case,
+    so no reallocation on any transition)."""
+    return sm.reshard_tables(
+        head_layout(kvh, tp_from, n1), head_layout(kvh, tp_to, n1), kvh
+    )
+
+
+# ---------------------------------------------------------------------------
+# leaf ops  (dense leaf: (..., T, kvh, hd) — head axis at -2, as produced by
+# models.attention.init_kv_cache under any stack of leading axes)
+
+def shard_leaf(dense, layout: sm.Layout, buf: int):
+    """(..., T, kvh, hd) -> (n1, buf, ..., T, hd); pad slots exact zeros."""
+    kvh = dense.shape[-2]
+    assert kvh == layout.k, (kvh, layout.k)
+    x = jnp.moveaxis(dense, -2, 0)                       # (kvh, ..., T, hd)
+    xp = jnp.concatenate(
+        [x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0
+    )                                                    # index kvh -> zeros
+    slots = slots_at(layout, buf)
+    idx = jnp.asarray(np.where(slots >= 0, slots, kvh))
+    return xp[idx]                                       # (n1, buf, ...)
+
+
+def gather_leaf(sharded, layout: sm.Layout):
+    """Inverse of `shard_leaf`: (n1, buf, ..., T, hd) -> (..., T, kvh, hd).
+    Only live (rank, slot) pairs are read — pad contents never leak."""
+    asg = jnp.asarray(layout.assignment)
+    slot = jnp.asarray(layout.local_slot)
+    x = sharded[asg, slot]                               # (kvh, ..., T, hd)
+    return jnp.moveaxis(x, 0, -2)
+
+
+def reshard_leaf(x, tables: sm.ReshardTables, *, use_kernel: bool = False):
+    """Head-redistribution all-to-all on one sharded leaf (n1, buf, *rest):
+    the KV analogue of `core.reshard.reshard`, with the replica's rank loop
+    unrolled host-side. ``use_kernel`` routes the per-rank send-bucket
+    gather through the `kernels.reshard_pack` Pallas kernel."""
+    n1, buf = x.shape[:2]
+    rest = x.shape[2:]
+    assert buf == tables.buf, (buf, tables.buf)
+    xp = jnp.concatenate(
+        [x, jnp.zeros((n1, 1) + rest, x.dtype)], axis=1
+    )                                                    # slot buf -> zeros
+    send_idx = jnp.asarray(tables.send_idx)              # (n, n, s_max)
+    if use_kernel:
+        from repro.kernels import ops
+
+        flat = xp.reshape(n1, buf + 1, -1)
+        send = jnp.stack(
+            [ops.reshard_pack(flat[r], send_idx[r]) for r in range(n1)]
+        ).reshape(n1, n1, tables.s_max, *rest)
+    else:
+        send = jax.vmap(lambda xr, ir: xr[ir])(xp, send_idx)
+    recv = jnp.swapaxes(send, 0, 1)                      # recv_r[j] = send_j[r]
+
+    out = jax.vmap(lambda xr, ir: xr[ir])(xp, jnp.asarray(tables.stay_idx))
+    flat_recv = recv.reshape(n1, n1 * tables.s_max, *rest)
+    recv_slots = jnp.asarray(tables.recv_idx).reshape(n1, -1)
+    return jax.vmap(
+        lambda o, s, v: o.at[s].set(v, mode="drop")      # pad (== buf) drops
+    )(out, recv_slots, flat_recv)
+
+
+# ---------------------------------------------------------------------------
+# attention from sharded buffers (rank-local math; the pad-leak oracle)
+
+def attend_heads(q, k, v, mask):
+    """Dense GQA attention core, f32: q (B, H, g, Sq, hd); k/v (B, T, H, hd);
+    mask (Sq, T) bool (True = attend). Per-head math is independent, which is
+    what makes the rank-local sharded evaluation below bit-identical."""
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bhgqd,bthd->bhgqt", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqt,bthd->bhgqd", p, v.astype(jnp.float32))
+
+
+def attend_from_sharded(q, sk, sv, layout: sm.Layout, mask):
+    """`attend_heads` evaluated rank-locally from sharded K/V buffers:
+    each rank attends only its local head slots; per-head outputs are
+    assembled by the head->rank map, so pad-slot contents (even NaN) can
+    never reach the output. q (B, kvh, g, Sq, hd); sk/sv (n1, buf, B, T, hd).
+    Returns (B, kvh, g, Sq, hd) f32, bit-equal to the dense evaluation."""
+    n1, buf = sk.shape[:2]
+    b, kvh, g, sq, hd = q.shape
+    t = sk.shape[-2]
+    slots = slots_at(layout, buf).reshape(-1)            # (n1*buf,)
+    q_sl = q[:, jnp.asarray(np.maximum(slots, 0))]       # (B, n1*buf, g, Sq, hd)
+    # (n1, buf, B, T, hd) -> (B, T, n1*buf, hd): slot axis plays "head"
+    k_sl = jnp.moveaxis(sk.reshape(n1 * buf, b, t, hd), 0, 2)
+    v_sl = jnp.moveaxis(sv.reshape(n1 * buf, b, t, hd), 0, 2)
+    out_sl = attend_heads(q_sl, k_sl, v_sl, mask)        # (B, n1*buf, g, Sq, hd)
+    head_to_flat = jnp.asarray(
+        layout.assignment * buf + layout.local_slot      # (kvh,)
+    )
+    return out_sl[:, head_to_flat]
+
+
+# ---------------------------------------------------------------------------
+# whole-cache container
+
+class ShardedKV:
+    """The sharded KV cache of ONE serving replica.
+
+    Owns every ``k``/``v`` leaf of a model cache pytree (any stack of
+    leading axes — `Model.init_slot_cache` puts the slot axis first) in
+    head-sharded ``(n1, buf, ..., T, hd)`` rank buffers, and reshards them
+    in place when the replica's TP degree changes (`apply_tp`, the
+    transition the engine runs mid-decode); `gather()`/`update()` convert
+    to/from the dense view (a bit-exact identity pair). Non-KV cache leaves
+    (ssm ``h``/``conv`` state) are rejected — their NTP unit is the channel
+    block, not the head (open item)."""
+
+    def __init__(self, cache, kvh: int, n1: int, *, tp: Optional[int] = None,
+                 use_kernel: bool = False):
+        self.kvh, self.n1 = kvh, n1
+        self.buf = kvh                                   # TP=1 worst case
+        self._tp = n1 if tp is None else tp
+        self.use_kernel = use_kernel
+        validate_kv_cache(cache)
+        self._tree = jax.tree.map(
+            lambda x: shard_leaf(x, self.layout, self.buf), cache
+        )
+        self.last_reshard: Dict[str, Any] = {}
+
+    # -------------------------------------------------------------- views
+
+    @property
+    def tp(self) -> int:
+        return self._tp
+
+    @property
+    def layout(self) -> sm.Layout:
+        return head_layout(self.kvh, self._tp, self.n1)
+
+    @property
+    def sharded(self):
+        """The raw (n1, buf, ...) rank buffers (tests / introspection)."""
+        return self._tree
+
+    def gather(self):
+        """Dense cache pytree view (..., T, kvh, hd) for the decode step."""
+        return jax.tree.map(lambda x: gather_leaf(x, self.layout), self._tree)
+
+    def update(self, cache) -> None:
+        """Re-scatter a dense cache (the decode step's output) into the
+        current rank layout."""
+        self._tree = jax.tree.map(
+            lambda x: shard_leaf(x, self.layout, self.buf), cache
+        )
+
+    # ------------------------------------------------------------- reshard
+
+    def apply_tp(self, new_tp: int) -> Dict[str, Any]:
+        """Reshard every leaf from the current layout to the ``new_tp``
+        layout (downward on failure, upward on recovery) and return the
+        traffic stats of the move."""
+        assert 1 <= new_tp <= self.n1, (new_tp, self.n1)
+        if new_tp == self._tp:
+            self.last_reshard = {"tp_from": self._tp, "tp_to": new_tp,
+                                 "moved_heads_per_rank": 0, "bytes_moved": 0}
+            return self.last_reshard
+        tables = head_reshard_tables(self.kvh, self._tp, new_tp, self.n1)
+        bytes_moved = 0
+        n_moved = int((np.asarray(tables.send_idx) != tables.pad).sum())
+        new_leaves: List = []
+        leaves, treedef = jax.tree_util.tree_flatten(self._tree)
+        for leaf in leaves:
+            new_leaves.append(
+                reshard_leaf(leaf, tables, use_kernel=self.use_kernel)
+            )
+            per_head = int(np.prod(leaf.shape[2:])) * leaf.dtype.itemsize
+            bytes_moved += n_moved * per_head
+        self._tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        self.last_reshard = {
+            "tp_from": self._tp,
+            "tp_to": new_tp,
+            "moved_heads_per_rank": int(tables.moved_units_per_rank().max()),
+            "bytes_moved": bytes_moved,
+        }
+        self._tp = new_tp
+        return self.last_reshard

@@ -1,0 +1,279 @@
+"""Request routing for NTP serving: SLO-aware admission + dispatch +
+per-replica goodput accounting (live), and the analytic serving-goodput
+model the benchmarks/golden tests pin (trace-driven, the serving twin of
+`core/policies.py`).
+
+The analytic half replays the SAME `core.failure_model.simulate_events`
+traces the training orchestrator replays: at each sampled instant the
+per-domain failed counts give every (domain-pinned) serving replica its
+weakest-stage TP, each policy maps that to a relative decode rate —
+``drop`` loses the whole replica (loss ∝ the replica's blast radius:
+domains_per_replica × domain_size GPUs per single failure), ``ntp`` serves
+on at 1/slowdown, ``ntp_pw`` boosts survivors through
+`policies.boosted_operating_point` — and goodput / SLO attainment follow.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.availability import ClusterSpec
+from repro.core.failure_model import FailureTraceConfig, simulate_events
+from repro.core.policies import (
+    WorkloadGeometry, boosted_operating_point, stage_slowdown,
+)
+from repro.core.power import PowerModel
+from repro.runtime.events import LifecycleEvent
+from repro.serve.engine import Request
+
+# Decode-time workload geometry: at long context the per-token KV read makes
+# attention (head-quantized over TP) the dominant cost, flipping training's
+# 2/3 MLP FLOP share — decode is attention-⅔ (same stage_slowdown form).
+SERVE_GEOM = WorkloadGeometry(n_heads=128, local_batch=8, mlp_flops_share=1 / 3)
+
+
+# ---------------------------------------------------------------------------
+# live router
+
+class Router:
+    """SLO-aware admission + dispatch over a `ServeSession`.
+
+    Admission control is predictive: a request with a deadline is rejected
+    up front when the backlog over the cluster's CURRENT aggregate decode
+    rate cannot finish it in time (shedding at the door beats missing SLOs
+    in flight). Preempted requests re-enter at the queue head."""
+
+    def __init__(self, session):
+        self.session = session
+        self.queue: deque = deque()
+        self.now = 0.0
+        self.submitted = 0
+        self.rejected = 0
+        self.completed: List[Request] = []
+        self._max_len = session.engines[0].max_len
+
+    # ------------------------------------------------------------ admission
+
+    def backlog_tokens(self) -> int:
+        q = sum(r.remaining for r in self.queue)
+        fl = sum(r.remaining for e in self.session.engines for r in e.in_flight)
+        return q + fl
+
+    def submit(self, req: Request) -> bool:
+        self.submitted += 1
+        req.arrival = self.now
+        if len(req.prompt) + req.max_new > self._max_len:
+            self.rejected += 1
+            return False
+        if req.deadline is not None:
+            rate = self.session.total_rate()
+            speed = max(
+                (e.rel_speed for e in self.session.engines if not e.dead),
+                default=0.0,
+            )
+            if rate <= 0 or speed <= 0:
+                self.rejected += 1
+                return False
+            # queue wait at aggregate rate + the request's own SERIAL decode
+            # (one slot decodes one token per credit-tick; extra slots don't
+            # parallelize a single request)
+            predicted = (self.now + self.backlog_tokens() / rate
+                         + req.remaining / speed)
+            if predicted > req.deadline:
+                self.rejected += 1
+                return False
+        self.queue.append(req)
+        return True
+
+    def requeue(self, reqs: Iterable[Request]) -> None:
+        """Preempted requests jump the queue (their KV was sacrificed once
+        already)."""
+        for r in reversed(list(reqs)):
+            if not r.done:
+                self.queue.appendleft(r)
+
+    # --------------------------------------------------------------- events
+
+    def apply(self, event: LifecycleEvent) -> None:
+        self.requeue(self.session.apply(event))
+
+    # ----------------------------------------------------------------- tick
+
+    def step(self) -> List[Request]:
+        """Dispatch whatever fits (fastest replicas first), run one wall
+        tick, account completions. Returns this tick's finished requests."""
+        engines = sorted(
+            self.session.engines, key=lambda e: -e.rel_speed * e.capacity
+        )
+        for e in engines:
+            while self.queue and e.can_admit():
+                if not e.admit(self.queue.popleft()):  # pragma: no cover
+                    break
+        done = self.session.tick()
+        self.now += 1.0
+        for r in done:
+            r.finish_time = self.now
+            self.completed.append(r)
+        return done
+
+    def drain(self, max_ticks: int = 10_000) -> None:
+        """Run until queue + slots are empty (or the tick budget runs out)."""
+        for _ in range(max_ticks):
+            if not self.queue and all(
+                e.n_active == 0 for e in self.session.engines
+            ):
+                return
+            self.step()
+        raise RuntimeError(f"drain did not converge in {max_ticks} ticks")
+
+    # ------------------------------------------------------------ accounting
+
+    def slo_attainment(self) -> float:
+        """Fraction of completed requests that met their deadline (no
+        deadline counts as met)."""
+        if not self.completed:
+            return 1.0
+        ok = sum(
+            1 for r in self.completed
+            if r.deadline is None or r.finish_time <= r.deadline
+        )
+        return ok / len(self.completed)
+
+    def goodput(self) -> Dict:
+        """Tokens/tick per replica and overall, plus SLO attainment."""
+        ticks = max(self.now, 1.0)
+        per = [e.stats["tokens"] / ticks for e in self.session.engines]
+        return {
+            "per_replica": per,
+            "tokens_per_tick": float(sum(per)),
+            "slo_attainment": self.slo_attainment(),
+            "completed": len(self.completed),
+            "rejected": self.rejected,
+            "preemptions": sum(
+                e.stats["preemptions"] for e in self.session.engines
+            ),
+        }
+
+
+# ---------------------------------------------------------------------------
+# analytic serving-goodput model
+
+def replica_serve_speed(
+    tp: int,
+    n1: int,
+    method: str,
+    *,
+    geom: WorkloadGeometry = SERVE_GEOM,
+    power: PowerModel = PowerModel(),
+) -> Tuple[float, float]:
+    """(relative decode rate, power boost) of one serving replica whose
+    weakest scale-up domain has ``tp`` of ``n1`` GPUs surviving."""
+    if tp <= 0:
+        return 0.0, 1.0
+    if tp >= n1:
+        return 1.0, 1.0
+    if method == "drop":
+        return 0.0, 1.0
+    slow = stage_slowdown(tp, n1, geom)
+    if method == "ntp":
+        return 1.0 / slow, 1.0
+    if method == "ntp_pw":
+        p, eff = boosted_operating_point(slow, power)
+        return 1.0 / eff, p
+    raise ValueError(method)
+
+
+def _cluster_point(
+    counts: np.ndarray,
+    spec: ClusterSpec,
+    method: str,
+    *,
+    slo_slowdown: float,
+    geom: WorkloadGeometry,
+    power: PowerModel,
+) -> Tuple[float, float]:
+    """(goodput, slo_attainment) of one failure sample. Replicas are pinned
+    to their ``domains_per_replica`` consecutive domains (no serving-time
+    repack — the KV state lives there); the weakest domain pins the
+    replica, exactly like a PP stage."""
+    dpr = spec.domains_per_replica
+    n_rep = len(counts) // dpr
+    worst = np.asarray(counts)[: n_rep * dpr].reshape(n_rep, dpr).max(axis=1)
+    tp = spec.domain_size - worst
+    speeds = np.array([
+        replica_serve_speed(int(t), spec.domain_size, method,
+                            geom=geom, power=power)[0]
+        for t in tp
+    ])
+    total = float(speeds.sum())
+    goodput = total / n_rep
+    if total <= 0.0:
+        return goodput, 0.0
+    # traffic routes ∝ capacity; a request meets its latency SLO iff its
+    # replica's per-token slowdown stays within the budget
+    ok = speeds >= 1.0 / slo_slowdown - 1e-9
+    return goodput, float(speeds[ok].sum() / total)
+
+
+def serving_goodput_trace(
+    spec: ClusterSpec,
+    trace_cfg: FailureTraceConfig,
+    methods: Sequence[str] = ("drop", "ntp", "ntp_pw"),
+    *,
+    slo_slowdown: float = 1.1,
+    sample_every_h: float = 6.0,
+    geom: WorkloadGeometry = SERVE_GEOM,
+    power: PowerModel = PowerModel(),
+) -> Dict[str, Dict[str, float]]:
+    """Trace-mean serving goodput + SLO attainment per policy over one
+    Llama3-calibrated failure/recovery trace (the serving fig4_end_to_end)."""
+    ev = simulate_events(trace_cfg)
+    n_dom = trace_cfg.n_gpus // trace_cfg.domain_size
+    times = np.arange(0.0, trace_cfg.days * 24.0, sample_every_h)
+    out: Dict[str, Dict[str, List[float]]] = {
+        m: {"goodput": [], "slo_attainment": []} for m in methods
+    }
+    for t in times:
+        counts = ev.failed_counts_at(t, n_dom, trace_cfg.domain_size)
+        for m in methods:
+            g, a = _cluster_point(
+                counts, spec, m, slo_slowdown=slo_slowdown, geom=geom,
+                power=power,
+            )
+            out[m]["goodput"].append(g)
+            out[m]["slo_attainment"].append(a)
+    return {
+        m: {k: float(np.mean(v)) for k, v in d.items()}
+        for m, d in out.items()
+    }
+
+
+def blast_radius_goodput(
+    base_spec: ClusterSpec,
+    trace_cfg: FailureTraceConfig,
+    radii: Sequence[int] = (1, 2, 4, 8),
+    methods: Sequence[str] = ("drop", "ntp_pw"),
+    *,
+    slo_slowdown: float = 1.1,
+    sample_every_h: float = 6.0,
+    geom: WorkloadGeometry = SERVE_GEOM,
+    power: PowerModel = PowerModel(),
+) -> Dict[int, Dict[str, float]]:
+    """Goodput vs the REPLICA blast radius (domains_per_replica): under
+    ``drop`` a single GPU failure forfeits domains_per_replica × domain_size
+    GPUs of serving capacity, so loss grows ∝ the radius; NTP policies
+    localize it to the failed domain's slowdown."""
+    out: Dict[int, Dict[str, float]] = {}
+    for dpr in radii:
+        spec = ClusterSpec(
+            n_gpus=base_spec.n_gpus, domain_size=base_spec.domain_size,
+            domains_per_replica=dpr,
+        )
+        res = serving_goodput_trace(
+            spec, trace_cfg, methods, slo_slowdown=slo_slowdown,
+            sample_every_h=sample_every_h, geom=geom, power=power,
+        )
+        out[dpr] = {m: res[m]["goodput"] for m in methods}
+    return out

@@ -1,0 +1,90 @@
+"""Checkpoint dtype round-trip (ISSUE 3 satellite): `save_checkpoint` widens
+ml_dtypes leaves (bf16, fp8) to f32 for numpy's savez, and must RECORD the
+original dtype so `load_checkpoint` casts back — even when the caller has no
+target tree at all, or a freshly-f32-initialized one (the bf16-serving-KV
+restore path `ServeSession.save/restore` rides on)."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.serve
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "f32": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "kv": {"k": jnp.full((2, 4), 1.5, jnp.bfloat16),
+               "v": jnp.full((2, 4), -0.25, jnp.bfloat16)},
+        "ints": np.arange(4, dtype=np.int64),
+    }
+
+
+def test_bf16_round_trips_through_f32_target_tree():
+    """The bug being fixed: restore used to inherit the TARGET tree's leaf
+    dtype, silently widening a bf16 checkpoint into an f32 session."""
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save_checkpoint(path, tree, step=3)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), jnp.float32)
+            if jnp.asarray(x).dtype == jnp.bfloat16 else
+            jax.ShapeDtypeStruct(np.shape(x), jnp.asarray(x).dtype),
+            tree,
+        )
+        got, step = load_checkpoint(path, like)
+        assert step == 3
+        assert got["kv"]["k"].dtype == jnp.bfloat16
+        assert got["kv"]["v"].dtype == jnp.bfloat16
+        assert got["f32"].dtype == jnp.float32
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            assert np.array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+
+
+def test_load_without_target_tree():
+    """No like-tree at all: the flat dict comes back with original dtypes."""
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save_checkpoint(path, tree, step=11)
+        flat, step = load_checkpoint(path)
+        assert step == 11
+        assert set(flat) == {"f32", "kv/k", "kv/v", "ints"}
+        assert flat["kv/k"].dtype == jnp.bfloat16
+        assert flat["ints"].dtype == jnp.int64
+        assert np.array_equal(np.asarray(flat["kv/v"], np.float32),
+                              np.full((2, 4), -0.25, np.float32))
+
+
+def test_legacy_checkpoint_falls_back_to_target_dtype():
+    """Checkpoints written before the dtype records existed (plain f32
+    arrays, no __dtype__/ keys) restore to the target leaf dtype as
+    before."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        np.savez(path, **{"a": np.ones((3,), np.float32),
+                          "__step__": np.asarray(7)})
+        like = {"a": jax.ShapeDtypeStruct((3,), jnp.bfloat16)}
+        got, step = load_checkpoint(path, like)
+        assert step == 7
+        assert got["a"].dtype == jnp.bfloat16
+
+
+def test_f8_round_trip():
+    f8 = jnp.float8_e4m3fn
+    tree = {"w": jnp.asarray(np.linspace(-2, 2, 8), f8)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save_checkpoint(path, tree)
+        got, _ = load_checkpoint(path, {"w": jax.ShapeDtypeStruct((8,), jnp.float32)})
+        assert got["w"].dtype == f8
+        assert np.array_equal(np.asarray(got["w"], np.float32),
+                              np.asarray(tree["w"], np.float32))

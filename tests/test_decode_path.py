@@ -1,0 +1,133 @@
+"""Decode-path correctness (ISSUE 3 satellite): incremental decode through
+the KV cache — prefill then one token at a time — must equal the
+full-sequence `attn_apply` oracle, for GQA and sliding-window/chunked
+configs, on BOTH the naive and the blockwise ("flash") prefill paths.
+`tests/test_kernels.py` only covers full-sequence attention; this is the
+path `repro.serve` lives on."""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.serve
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.common import NO_SHARD
+
+S, PREFILL, B = 32, 16, 2
+
+
+def _cfg(kvh: int, **kw) -> ArchConfig:
+    base = dict(
+        arch_id=f"decode-test-kv{kvh}", family="dense", citation="test",
+        n_layers=1, d_model=32, n_heads=4, n_kv_heads=kvh, head_dim=8,
+        d_ff=64, vocab_size=64, window=16, chunk_size=16,
+    )
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+CASES = [
+    ("attn", _cfg(2)),                       # GQA
+    ("attn", _cfg(4)),                       # MHA
+    ("attn", _cfg(1)),                       # MQA
+    ("attn", _cfg(2, qk_norm=True, attn_softcap=30.0)),
+    ("attn_sw", _cfg(2)),                    # sliding window (ring cache)
+    ("attn_chunked", _cfg(2)),               # chunked-local (ring cache)
+]
+
+
+def _incremental(cfg, p, x, kind, cache_len):
+    cache = attn_mod.init_kv_cache(cfg, B, cache_len, jnp.float32, kind=kind)
+    out_p, cache = attn_mod.attn_apply(
+        cfg, p, x[:, :PREFILL], kind=kind, ctx=NO_SHARD,
+        positions=jnp.arange(PREFILL, dtype=jnp.int32),
+        cache=cache, cache_pos=jnp.int32(0),
+    )
+    outs = [out_p]
+    for t in range(PREFILL, S):
+        o, cache = attn_mod.attn_apply(
+            cfg, p, x[:, t:t + 1], kind=kind, ctx=NO_SHARD,
+            positions=jnp.arange(t, t + 1, dtype=jnp.int32),
+            cache=cache, cache_pos=jnp.int32(t),
+        )
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("kind,cfg", CASES, ids=lambda c: getattr(c, "arch_id", c))
+def test_incremental_decode_matches_full_naive(kind, cfg):
+    rng = np.random.default_rng(0)
+    p = attn_mod.attn_init(cfg, jax.random.PRNGKey(1), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    full, _ = attn_mod.attn_apply(
+        cfg, p, x, kind=kind, ctx=NO_SHARD,
+        positions=jnp.arange(S, dtype=jnp.int32),
+    )
+    inc = _incremental(cfg, p, x, kind, S)
+    err = np.abs(np.asarray(full) - np.asarray(inc)).max()
+    assert err < 2e-5, (kind, cfg.arch_id, err)
+
+
+@pytest.mark.parametrize("kind,cfg", [
+    ("attn", _cfg(2)), ("attn_sw", _cfg(2)),
+], ids=["attn-gqa", "attn_sw-gqa"])
+def test_incremental_decode_matches_full_flash(kind, cfg, monkeypatch):
+    """Same oracle with the blockwise prefill engaged (threshold lowered so
+    both the full pass and the multi-token prefill take the flash path;
+    single-token decode stays naive by design)."""
+    monkeypatch.setattr(attn_mod, "FLASH_SEQ_THRESHOLD", 8)
+    monkeypatch.setattr(attn_mod, "FLASH_BLOCK_Q", 4)
+    monkeypatch.setattr(attn_mod, "FLASH_BLOCK_K", 8)
+    rng = np.random.default_rng(2)
+    p = attn_mod.attn_init(cfg, jax.random.PRNGKey(3), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    full, _ = attn_mod.attn_apply(
+        cfg, p, x, kind=kind, ctx=NO_SHARD,
+        positions=jnp.arange(S, dtype=jnp.int32),
+    )
+    inc = _incremental(cfg, p, x, kind, S)
+    err = np.abs(np.asarray(full) - np.asarray(inc)).max()
+    assert err < 2e-5, (kind, err)
+
+
+def test_padded_prefill_matches_exact_prefill():
+    """repro.serve prefills right-PADDED prompts (one jit signature): pad
+    positions write garbage K/V beyond the real length, but decode masking
+    (slot <= last, ring p >= 0) must keep it out until overwritten — the
+    generated stream must match an exact-length prefill's."""
+    cfg = _cfg(2)
+    for kind in ("attn", "attn_sw"):
+        rng = np.random.default_rng(4)
+        p = attn_mod.attn_init(cfg, jax.random.PRNGKey(5), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        n_real = 10  # real prompt length; PREFILL-long padded prefill
+
+        def decode_from(prefill_x, prefill_len):
+            cache = attn_mod.init_kv_cache(cfg, B, S, jnp.float32, kind=kind)
+            _, cache = attn_mod.attn_apply(
+                cfg, p, prefill_x, kind=kind, ctx=NO_SHARD,
+                positions=jnp.arange(prefill_len, dtype=jnp.int32),
+                cache=cache, cache_pos=jnp.int32(0),
+            )
+            outs = []
+            for t in range(n_real, S):
+                o, cache = attn_mod.attn_apply(
+                    cfg, p, x[:, t:t + 1], kind=kind, ctx=NO_SHARD,
+                    positions=jnp.arange(t, t + 1, dtype=jnp.int32),
+                    cache=cache, cache_pos=jnp.int32(t),
+                )
+                outs.append(o)
+            return jnp.concatenate(outs, axis=1)
+
+        exact = decode_from(x[:, :n_real], n_real)
+        padded_x = jnp.concatenate(
+            [x[:, :n_real],
+             jnp.full((B, PREFILL - n_real, cfg.d_model), 7.7, jnp.float32)],
+            axis=1,
+        )
+        padded = decode_from(padded_x, PREFILL)
+        err = np.abs(np.asarray(exact) - np.asarray(padded)).max()
+        assert err < 2e-5, (kind, err)

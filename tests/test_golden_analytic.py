@@ -28,10 +28,15 @@ def compute_golden():
         FailureTraceConfig, steady_state_failed_fraction,
     )
     from repro.core.policies import table1_settings, throughput_loss_curve
+    from repro.serve import serving_goodput_trace
 
     spec = ClusterSpec(n_gpus=4096, domain_size=32, domains_per_replica=4)
     curve = throughput_loss_curve(
         spec, [1e-3, 2e-3, 4e-3], samples=4, seed=0
+    )
+    serve_trace = FailureTraceConfig(
+        n_gpus=spec.n_gpus, domain_size=spec.domain_size, days=5.0,
+        rate_multiplier=50.0, seed=1,
     )
     return {
         "table1_settings": table1_settings(),
@@ -48,6 +53,15 @@ def compute_golden():
             "rate_3x": steady_state_failed_fraction(
                 FailureTraceConfig(rate_multiplier=3.0)
             ),
+        },
+        # ISSUE 3: the analytic serving-goodput curve (repro.serve.router) —
+        # trace-mean decode goodput + SLO attainment per policy on a small
+        # hot trace (50× rate so the 4096-GPU spec sees real degradation)
+        "serving_goodput": {
+            "spec": {"n_gpus": spec.n_gpus, "domain_size": spec.domain_size,
+                     "domains_per_replica": spec.domains_per_replica},
+            "trace": {"days": 5.0, "rate_multiplier": 50.0, "seed": 1},
+            "curves": serving_goodput_trace(spec, serve_trace),
         },
     }
 

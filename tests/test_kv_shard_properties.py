@@ -1,0 +1,150 @@
+"""Property tests for the serving KV-cache reshard (ISSUE 3 satellite),
+mirroring `tests/test_reshard_properties.py`'s treatment of the weight
+reshard: the head-redistribution all-to-all is static-table-driven, so its
+semantics are checked exactly host-side on random head layouts.
+
+* shard ∘ gather is the identity on dense cache contents;
+* any chain of TP transitions (degrade AND restore) preserves the gathered
+  cache bit-exactly, and returning to the starting degree restores the
+  sharded buffers bit-exactly (pre ∘ post identity);
+* pad slots stay exact zeros through every transition, and NaN garbage
+  planted in pad slots never reaches the attention output (rank-local
+  evaluation == dense evaluation, bitwise);
+* the Pallas `reshard_pack` send-bucket gather matches the jnp path.
+"""
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.serve
+
+pytest.importorskip("hypothesis", reason="dev dependency: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.serve import kv_shard as kvs
+
+HD = 4
+
+
+@st.composite
+def shard_case(draw):
+    n1 = draw(st.integers(1, 5))
+    kvh = draw(st.integers(1, 8))
+    tps = draw(st.lists(st.integers(1, n1), min_size=1, max_size=4))
+    seed = draw(st.integers(0, 2**16))
+    return n1, kvh, tps, seed
+
+
+def _dense(rng, kvh, b=2, t=3):
+    return jnp.asarray(rng.normal(size=(b, t, kvh, HD)), jnp.float32)
+
+
+def _pads(layout, buf):
+    return kvs.slots_at(layout, buf) < 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_case())
+def test_reshard_chain_preserves_cache_and_pads(case):
+    n1, kvh, tps, seed = case
+    rng = np.random.default_rng(seed)
+    dense = _dense(rng, kvh)
+
+    tp0 = n1
+    layout = kvs.head_layout(kvh, tp0, n1)
+    x0 = kvs.shard_leaf(dense, layout, kvh)
+    assert np.array_equal(np.asarray(kvs.gather_leaf(x0, layout)),
+                          np.asarray(dense))
+
+    x, tp = x0, tp0
+    for new_tp in tps + [tp0]:           # ... and back to the start
+        tables = kvs.head_reshard_tables(kvh, tp, new_tp, n1)
+        x = kvs.reshard_leaf(x, tables)
+        tp = new_tp
+        layout = kvs.head_layout(kvh, tp, n1)
+        # degrade/restore chains are content-identities on the dense view
+        assert np.array_equal(
+            np.asarray(kvs.gather_leaf(x, layout)), np.asarray(dense)
+        ), (n1, kvh, tps, tp)
+        # pad slots are exact zeros after every hop
+        assert (np.asarray(x)[_pads(layout, kvh)] == 0).all(), (n1, kvh, tp)
+    # pre ∘ post identity on the sharded buffers themselves
+    assert np.array_equal(np.asarray(x), np.asarray(x0)), (n1, kvh, tps)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_case())
+def test_pad_slots_never_leak_into_attention(case):
+    """NaN garbage planted in every pad slot of the sharded K/V buffers must
+    not perturb a single output bit: the rank-local evaluation
+    (`attend_from_sharded`) equals the dense `attend_heads` exactly."""
+    n1, kvh, tps, seed = case
+    tp = tps[0]
+    rng = np.random.default_rng(seed)
+    b, t, g, sq = 2, 4, 2, 4
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, sq, HD)), jnp.float32)
+    k = _dense(rng, kvh, b, t)
+    v = _dense(rng, kvh, b, t)
+    mask = jnp.tril(jnp.ones((sq, t), bool))
+
+    layout = kvs.head_layout(kvh, tp, n1)
+    pads = _pads(layout, kvh)
+    sk = np.array(kvs.shard_leaf(k, layout, kvh))
+    sv = np.array(kvs.shard_leaf(v, layout, kvh))
+    sk[pads] = np.nan
+    sv[pads] = np.nan
+
+    dense = np.asarray(kvs.attend_heads(q, k, v, mask))
+    shard = np.asarray(kvs.attend_from_sharded(
+        q, jnp.asarray(sk), jnp.asarray(sv), layout, mask
+    ))
+    assert np.isfinite(shard).all(), (n1, kvh, tp)
+    assert np.array_equal(dense, shard), (n1, kvh, tp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shard_case())
+def test_sharded_kv_container_roundtrip(case):
+    """`ShardedKV` over a model-shaped cache pytree: insert/gather/update/
+    apply_tp keep the dense view consistent."""
+    n1, kvh, tps, seed = case
+    rng = np.random.default_rng(seed)
+    cache = {
+        "layers": {"k": _dense(rng, kvh), "v": _dense(rng, kvh)},
+        "tail": ({"k": _dense(rng, kvh), "v": _dense(rng, kvh)},),
+    }
+    skv = kvs.ShardedKV(cache, kvh, n1)
+    for new_tp in tps:
+        st_ = skv.apply_tp(new_tp)
+        assert st_["tp_to"] == new_tp and skv.tp == new_tp
+    got = skv.gather()
+    for a, b in zip(
+        np.asarray(got["layers"]["k"]), np.asarray(cache["layers"]["k"])
+    ):
+        assert np.array_equal(a, b)
+    # update re-scatters into the CURRENT layout
+    bumped = {k2: (v2 if k2 != "tail" else v2) for k2, v2 in got.items()}
+    skv.update(bumped)
+    got2 = skv.gather()
+    assert np.array_equal(np.asarray(got2["tail"][0]["v"]),
+                          np.asarray(cache["tail"][0]["v"]))
+
+
+def test_reshard_kernel_path_matches_jnp():
+    """use_kernel=True routes the send-bucket gather through the Pallas
+    `kernels.reshard_pack` kernel (interpret mode on CPU) — same bits."""
+    rng = np.random.default_rng(7)
+    kvh, n1 = 6, 4
+    dense = _dense(rng, kvh)
+    layout = kvs.head_layout(kvh, n1, n1)
+    x = kvs.shard_leaf(dense, layout, kvh)
+    tables = kvs.head_reshard_tables(kvh, n1, 2, n1)
+    a = kvs.reshard_leaf(x, tables, use_kernel=False)
+    b = kvs.reshard_leaf(x, tables, use_kernel=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_kv_rejects_non_kv_leaves():
+    with pytest.raises(ValueError, match="k/v leaves only"):
+        kvs.ShardedKV({"h": jnp.zeros((2, 3, 4, HD))}, 4, 4)
