@@ -50,6 +50,32 @@ def comm_comp_ratio(hidden, seq, tp_red, tp=8, local_batch=1, unit=128):
     return t_reshard / t_bwd, t_reshard, t_bwd
 
 
+def transition_cost(hidden, tp_red, tp=8, unit=128):
+    """Fail→repair TRANSITION cost per layer: the retired dense host
+    round-trip (pack∘unpack touches the whole model) vs the unified
+    engine's direct packed→packed move (only units whose rank changes
+    travel — repro.reshard.transition). SPARe's point: at scale the
+    transition, not the steady state, pins fault-tolerant goodput."""
+    from repro.reshard import planner
+
+    d_ff = 4 * hidden
+    k_ff = d_ff // unit
+    unit_bytes = unit * hidden * 2 * 3           # gate+up+down rows, bf16
+    fplan = plan_from_health(ClusterHealth(
+        domain_size=tp, failed=(tp - tp_red, 0),
+    ))
+    n2 = fplan.n_sync
+    dense = 2 * k_ff * unit_bytes                # both replicas, full weight
+    direct = 0
+    for nr in fplan.replica_tp:                  # pristine -> degraded plan
+        plan = planner.transition_plan(
+            planner.comp_key(k_ff, tp, tp, tp),  # healthy comp == sync@tp
+            planner.comp_key(k_ff, tp, nr, n2),
+        )
+        direct += plan.n_moved * unit_bytes
+    return direct, dense
+
+
 def run():
     rows = []
     xs, ys = [], []
@@ -63,6 +89,28 @@ def run():
             "value": round(ratio, 4),
             "derived": f"bwd_slowdown={slowdown:.4f} (paper: ≤0.04)",
         })
+    # ISSUE 4: dense-roundtrip vs direct-transition cost of the fail/repair
+    # repack itself (per MLP layer, both replicas)
+    for hidden in (6144, 12288):
+        for tp_red in (7, 6, 4):
+            direct, dense = transition_cost(hidden, tp_red)
+            rows.append({
+                "name": f"fig8/transition_h{hidden}_tp{tp_red}",
+                "value": round(direct / dense, 4),
+                "derived": (f"direct={direct/1e6:.1f}MB vs "
+                            f"dense_roundtrip={dense/1e6:.1f}MB per layer"),
+            })
+    # the 480B simulation domain: even a single-GPU failure on a 32-wide
+    # domain re-balances most unit boundaries (n2 changes), yet the direct
+    # route still undercuts the host round-trip — and moves over ICI, not
+    # through host memory
+    direct, dense = transition_cost(20480, 31, tp=32)
+    rows.append({
+        "name": "fig8/transition_480b_tp31",
+        "value": round(direct / dense, 4),
+        "derived": (f"direct={direct/1e6:.1f}MB vs "
+                    f"dense_roundtrip={dense/1e6:.1f}MB per layer"),
+    })
     # the 480B simulation workload's ratio (paper: comfortably <1%)
     ratio, _, _ = comm_comp_ratio(20480, 16384, 30, tp=32, local_batch=8)
     rows.append({

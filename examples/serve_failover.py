@@ -1,11 +1,16 @@
-"""Serving failover demo (DESIGN.md §2.5): a stream of requests decodes
+"""Serving failover demo (DESIGN.md §2.5/§3.3): a stream of requests decodes
 through a ServeSession while its scale-up domain loses GPUs mid-decode and
-gets them back — the KV cache is resharded in place at every transition, so
-every in-flight request's greedy token stream is IDENTICAL to an
-uninterrupted run's (asserted below against a second, never-failed session).
+gets them back — per-request state is resharded in place at every
+transition, so every in-flight request's greedy token stream is IDENTICAL
+to an uninterrupted run's (asserted below against a second, never-failed
+session). ``--arch`` picks what that state is: GQA KV heads (attn), Mamba-2
+SSD recurrent state (mamba2: channel-block units), or RecurrentGemma's
+rgLRU gate blocks mixed with sliding-window KV (griffin) — all served by
+the same unified reshard engine.
 
   PYTHONPATH=src python examples/serve_failover.py --requests 24
-  PYTHONPATH=src python examples/serve_failover.py --requests 100   # CI smoke
+  PYTHONPATH=src python examples/serve_failover.py --requests 100  # CI smoke
+  PYTHONPATH=src python examples/serve_failover.py --arch mamba2 --requests 16
 """
 import argparse
 import time
@@ -13,6 +18,7 @@ import time
 import numpy as np
 import jax
 
+from repro.configs import get_arch, reduced
 from repro.configs.base import ArchConfig
 from repro.runtime import FailureEvent, RecoveryEvent
 from repro.serve import Request, Router, ServeSession
@@ -26,10 +32,23 @@ SMOKE_CFG = ArchConfig(
 )
 
 
-def run(events, requests, *, policy, seed):
+def arch_config(name: str) -> ArchConfig:
+    """The demo's serveable archs: the attention smoke config, plus the
+    real Mamba2/RecurrentGemma configs at `reduced()` smoke scale — the
+    recurrent-state families the unified reshard engine opened up."""
+    if name == "attn":
+        return SMOKE_CFG
+    if name == "mamba2":
+        return reduced(get_arch("mamba2-780m"))
+    if name == "griffin":
+        return reduced(get_arch("recurrentgemma-9b"))
+    raise ValueError(name)
+
+
+def run(cfg, events, requests, *, policy, seed, use_kernel=False):
     session = ServeSession.create(
-        SMOKE_CFG, replicas=1, n1=4, slots=8, max_len=64, prefill_len=16,
-        policy=policy, key=jax.random.PRNGKey(seed),
+        cfg, replicas=1, n1=4, slots=8, max_len=64, prefill_len=16,
+        policy=policy, key=jax.random.PRNGKey(seed), use_kernel=use_kernel,
     )
     router = Router(session)
     pending = {r.rid: r for r in requests}
@@ -46,7 +65,8 @@ def run(events, requests, *, policy, seed):
                 print(f"  tick {tick:4d}: {kind} -> TP {e.tp}, "
                       f"speed {e.rel_speed:.3f}, boost {e.power_boost:.2f}, "
                       f"capacity {e.capacity}, "
-                      f"reshard moved {e.last_reshard.get('bytes_moved', 0)} B")
+                      f"reshard moved {e.last_reshard.get('bytes_moved', 0)} B "
+                      f"in {e.last_reshard.get('messages', 0)} msgs")
         router.step()
         tick += 1
         if tick > 50_000:
@@ -56,11 +76,20 @@ def run(events, requests, *, policy, seed):
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=["attn", "mamba2", "griffin"],
+                    default="attn",
+                    help="what state reshards mid-decode: KV heads (attn), "
+                         "SSD channel blocks (mamba2), rgLRU gate blocks + "
+                         "KV heads (griffin)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--policy", choices=["ntp", "ntp_pw"], default="ntp_pw")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route send-bucket packing through the Pallas "
+                         "reshard_pack kernel")
     args = ap.parse_args()
+    cfg = arch_config(args.arch)
 
     def make_requests():
         rng = np.random.default_rng(args.seed)  # identical stream per run
@@ -69,7 +98,7 @@ def main():
             r = Request(
                 rid=i,
                 prompt=rng.integers(
-                    1, SMOKE_CFG.vocab_size, size=int(rng.integers(4, 15))
+                    1, cfg.vocab_size, size=int(rng.integers(4, 15))
                 ).astype(np.int32),
                 max_new=args.max_new,
             )
@@ -87,11 +116,13 @@ def main():
         (2 * n + 4, RecoveryEvent(domain=0)),  # TP 3 -> 4
     ]
 
-    print(f"failover run ({args.policy}, {args.requests} requests):")
+    print(f"failover run ({cfg.arch_id}, {args.policy}, "
+          f"{args.requests} requests):")
     t0 = time.time()
-    faulty = run(events, make_requests(), policy=args.policy, seed=args.seed)
+    faulty = run(cfg, events, make_requests(), policy=args.policy,
+                 seed=args.seed, use_kernel=args.use_kernel)
     print("reference run (no failures):")
-    ref = run([], make_requests(), policy=args.policy, seed=args.seed)
+    ref = run(cfg, [], make_requests(), policy=args.policy, seed=args.seed)
 
     got = {r.rid: list(r.generated) for r in faulty.completed}
     want = {r.rid: list(r.generated) for r in ref.completed}

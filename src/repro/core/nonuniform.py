@@ -107,15 +107,20 @@ def _stack(tabs, buf: int) -> StackedTables:
 
 @lru_cache(maxsize=None)
 def _weight_plan_cached(k: int, n1: int, replica_tp: Tuple[int, ...]) -> WeightPlan:
+    # layouts + tables come from the ONE Algorithm-1 planner (repro.reshard.
+    # planner): the same cached objects drive the in-step gradient reshard,
+    # the fail/repair packed→packed transitions, and the serving state moves
+    from repro.reshard import planner
+
     n_sync = min(replica_tp)
-    comps = [sm.comp_layout(k, nr, n_sync) for nr in replica_tp]
-    # degraded replicas live on the full n1-wide axis: re-express on n1 ranks
-    comps = [sm.make_layout(c.assignment, n1) for c in comps]
-    sync = sm.sync_layout(k, n1, n_sync)
+    sync_key = planner.sync_key(k, n1, n_sync)
+    comp_keys = [planner.comp_key(k, n1, nr, n_sync) for nr in replica_tp]
+    comps = [planner.layout(ck) for ck in comp_keys]
+    sync = planner.layout(sync_key)
     buf = max([sync.max_count] + [c.max_count for c in comps])
 
-    pre = [sm.reshard_tables(c, sync, buf) for c in comps]
-    post = [sm.reshard_tables(sync, c, buf) for c in comps]
+    pre = [planner.tables(ck, sync_key, buf) for ck in comp_keys]
+    post = [planner.tables(sync_key, ck, buf) for ck in comp_keys]
 
     def slots(layout):
         out = np.full((n1, buf), -1, dtype=np.int64)

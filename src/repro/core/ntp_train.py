@@ -202,12 +202,21 @@ def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan: nu.FailurePlan,
 def repack_params(cfg: NTPModelConfig, packed: Dict, old: nu.FailurePlan,
                   new: nu.FailurePlan, *, replica: int = 0) -> Dict:
     """Re-express a packed tree under a new failure plan (params or any tree
-    mirroring the param structure, e.g. AdamW moments). The canonical weights
-    are recovered from ``replica`` of the old layout — every replica holds the
-    same logical units after sync, so any index is equivalent."""
+    mirroring the param structure, e.g. AdamW moments) via the DIRECT
+    packed→packed transition (repro.reshard.transition): only units whose
+    rank changes move, in one fused bucket per (replica, src, dst) pair —
+    the dense ``pack(unpack(...))`` round-trip this replaced survives as the
+    test oracle (tests/test_transition_engine.py). ``replica`` is retired
+    (the direct route uses every replica's own buffers; after sync they all
+    hold the same logical units) and kept only for signature compatibility.
+    """
+    del replica
     if new == old:
         return packed
-    return pack_params(cfg, unpack_params(cfg, packed, old, replica), new)
+    from repro.reshard.transition import transition_params
+
+    tree, _ = transition_params(cfg, packed, old, new)
+    return tree
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,11 @@ synchronization", mapped NVLink→ICI. Gradient sync is then
 reshard(pre) → psum('data') → reshard(post), with the pre-reshard emitted
 per-bucket so XLA's latency-hiding scheduler can overlap it with the
 remaining backward computation (the paper's backward-hook overlap, §4.1).
+
+The tables come from the ONE Algorithm-1 planner (`repro.reshard.planner`,
+via `core.nonuniform.weight_plan`); this module is the planner's SPMD
+route — `repro.reshard.engine.reshard_ranks` is the host-unrolled twin
+with identical table semantics.
 """
 from __future__ import annotations
 
@@ -16,10 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.nonuniform import StackedTables, WeightPlan
-
-
-def _zero_pad_row(x):
-    return jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+from repro.reshard.engine import zero_pad_slot as _zero_pad_row
 
 
 def reshard(

@@ -1,13 +1,20 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True (this container is CPU-only; the kernels
-target TPU and are validated by executing the kernel body in interpret
-mode). Set REPRO_PALLAS_COMPILE=1 on a real TPU to run compiled.
+Execution mode is resolved PER CALL by `pallas_interpret`: the kernel
+modules themselves default to ``interpret=True`` (this container is
+CPU-only; the kernels target TPU and are validated by executing the kernel
+body in interpret mode), and callers thread compiled mode through either
+the ``interpret=`` keyword or the ``REPRO_PALLAS_COMPILE=1`` environment
+variable (set it — or pass ``--pallas-compile`` to the launchers — on a
+real TPU to run the compiled kernels). The env var is read dynamically, so
+flipping it mid-process takes effect on the next call; each mode jit-caches
+separately (``interpret`` is a static argname).
 """
 from __future__ import annotations
 
 import functools
 import os
+from typing import Optional
 
 import jax
 
@@ -16,34 +23,69 @@ from repro.kernels import reshard_pack as _rp
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def pallas_interpret(override: Optional[bool] = None) -> bool:
+    """The kernel execution mode: an explicit ``override`` wins, else the
+    ``REPRO_PALLAS_COMPILE`` env var decides (unset/0 → interpret)."""
+    if override is not None:
+        return bool(override)
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 @functools.partial(
     jax.jit, static_argnames=("kind", "window", "chunk", "softcap",
-                              "block_q", "block_k")
+                              "block_q", "block_k", "interpret")
 )
-def flash_attention(q, k, v, *, kind="causal", window=4096, chunk=8192,
-                    softcap=None, block_q=512, block_k=512):
+def _flash_attention(q, k, v, *, kind, window, chunk, softcap, block_q,
+                     block_k, interpret):
     return _fa.flash_attention(
         q, k, v, kind=kind, window=window, chunk=chunk, softcap=softcap,
-        block_q=block_q, block_k=block_k, interpret=_INTERPRET,
+        block_q=block_q, block_k=block_k, interpret=interpret,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "plus_one", "block_rows"))
-def rmsnorm(x, w, *, eps=1e-6, plus_one=False, block_rows=256):
+def flash_attention(q, k, v, *, kind="causal", window=4096, chunk=8192,
+                    softcap=None, block_q=512, block_k=512, interpret=None):
+    return _flash_attention(
+        q, k, v, kind=kind, window=window, chunk=chunk, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+        interpret=pallas_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "plus_one", "block_rows", "interpret")
+)
+def _rmsnorm(x, w, *, eps, plus_one, block_rows, interpret):
     return _rn.rmsnorm(
         x, w, eps=eps, plus_one=plus_one, block_rows=block_rows,
-        interpret=_INTERPRET,
+        interpret=interpret,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, dt, A, B, C, *, chunk=256):
-    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=_INTERPRET)
+def rmsnorm(x, w, *, eps=1e-6, plus_one=False, block_rows=256,
+            interpret=None):
+    return _rmsnorm(
+        x, w, eps=eps, plus_one=plus_one, block_rows=block_rows,
+        interpret=pallas_interpret(interpret),
+    )
 
 
-@jax.jit
-def reshard_pack(src, send_idx):
-    return _rp.reshard_pack(src, send_idx, interpret=_INTERPRET)
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_scan(x, dt, A, B, C, *, chunk, interpret):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=256, interpret=None):
+    return _ssd_scan(
+        x, dt, A, B, C, chunk=chunk, interpret=pallas_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _reshard_pack(src, send_idx, *, interpret):
+    return _rp.reshard_pack(src, send_idx, interpret=interpret)
+
+
+def reshard_pack(src, send_idx, *, interpret=None):
+    return _reshard_pack(src, send_idx, interpret=pallas_interpret(interpret))

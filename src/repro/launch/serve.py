@@ -56,7 +56,17 @@ def main() -> None:
     ap.add_argument("--max-ticks", type=int, default=5000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=25)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route reshard send-bucket packing through the "
+                         "Pallas reshard_pack kernel")
+    ap.add_argument("--pallas-compile", action="store_true",
+                    help="run Pallas kernels compiled (TPU) instead of "
+                         "interpret mode; sets REPRO_PALLAS_COMPILE=1")
     args = ap.parse_args()
+    if args.pallas_compile:
+        import os
+
+        os.environ["REPRO_PALLAS_COMPILE"] = "1"
 
     import numpy as np
     import jax
@@ -74,6 +84,7 @@ def main() -> None:
         cfg, replicas=args.replicas, n1=args.tp, slots=args.slots,
         max_len=args.max_len, prefill_len=args.prefill_len,
         policy=args.policy, key=jax.random.PRNGKey(args.seed),
+        use_kernel=args.use_kernel,
     )
     router = Router(session)
     n_par = sum(p.size for p in jax.tree.leaves(session.params))

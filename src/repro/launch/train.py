@@ -62,7 +62,12 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="fake CPU devices for a (2, n/2) test mesh")
+    ap.add_argument("--pallas-compile", action="store_true",
+                    help="run Pallas kernels compiled (TPU) instead of "
+                         "interpret mode; sets REPRO_PALLAS_COMPILE=1")
     args = ap.parse_args()
+    if args.pallas_compile:
+        os.environ["REPRO_PALLAS_COMPILE"] = "1"
     if args.arch is None and not args.ntp:
         ap.error("--arch is required unless --ntp is given")
     if args.ntp and args.dry_run:

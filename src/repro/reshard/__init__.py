@@ -1,0 +1,25 @@
+"""repro.reshard — the unified partition-unit reshard engine (DESIGN.md
+§3.3): one `UnitSpec` registry, one LRU-cached Algorithm-1 planner, one
+numpy twin with transfer accounting, one jnp/Pallas collective route, and
+the direct packed→packed transition that moves only the units the
+`transfer_matrix` says move."""
+from repro.reshard.engine import (  # noqa: F401
+    gather_send_buckets, reshard_group, reshard_ranks, zero_pad_slot,
+)
+from repro.reshard.planner import (  # noqa: F401
+    TransitionPlan, comp_key, layout, plan_cache_info, sync_key, tables,
+    transition_plan,
+)
+from repro.reshard.state import (  # noqa: F401
+    ShardedState, degree_layout, gather_state_leaf, shard_state_leaf,
+    widened_slots,
+)
+from repro.reshard.transition import (  # noqa: F401
+    expected_transfer, replica_transition_plans, transition_params,
+    transition_trees,
+)
+from repro.reshard.twin import TransferStats, apply_plan, emulate_tables  # noqa: F401
+from repro.reshard.units import (  # noqa: F401
+    UnitSpec, arch_unit_counts, cache_unit_resolver, ntp_unit_specs,
+    serve_unit_count,
+)

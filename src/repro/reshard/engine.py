@@ -1,0 +1,104 @@
+"""The jnp reshard route: static-table gather → all-to-all → scatter on
+``(n, buf, ...)`` rank-buffer stacks, shared by every caller that moves
+state between layouts with the replica's rank loop unrolled host-side
+(serving KV/recurrent caches, host-side transition emulation).
+
+The in-shard_map training collective (`core.reshard.reshard`) is the SPMD
+twin of `reshard_ranks`: identical table semantics, but each rank runs one
+slice and the transpose is a real `jax.lax.all_to_all`. Both consume the
+same planner tables and the same Pallas `reshard_pack` send-bucket route
+(``use_kernel=True``; kernel vs interpret mode is env/CLI driven — see
+`kernels.ops.pallas_interpret`).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shard_mapping as sm
+
+
+def zero_pad_slot(x, axis: int = 0):
+    """Append one zero slot along ``axis`` — the pad sentinel every table
+    gathers zeros from (index ``buf``)."""
+    shape = list(x.shape)
+    shape[axis] = 1
+    return jnp.concatenate([x, jnp.zeros(shape, x.dtype)], axis=axis)
+
+
+def gather_send_buckets(xp, send_idx, *, use_kernel: bool = False):
+    """Per-rank send-bucket gather: ``xp`` (n, buf+1, *rest) zero-padded
+    buffers, ``send_idx`` (n, n, s_max) → (n, n, s_max, *rest).
+    ``use_kernel`` routes each rank's gather through the Pallas
+    `kernels.reshard_pack` kernel (one VMEM pass per destination)."""
+    n = xp.shape[0]
+    bufp1 = xp.shape[1]
+    rest = xp.shape[2:]
+    s_max = send_idx.shape[-1]
+    if use_kernel:
+        from repro.kernels import ops
+
+        flat = xp.reshape(n, bufp1, -1)
+        return jnp.stack(
+            [ops.reshard_pack(flat[r], send_idx[r]) for r in range(n)]
+        ).reshape(n, n, s_max, *rest)
+    return jax.vmap(lambda xr, ir: xr[ir])(xp, send_idx)
+
+
+def reshard_ranks(x, tables: sm.ReshardTables, *, use_kernel: bool = False):
+    """One layout change on a rank-buffer stack ``x`` (n, buf, *rest):
+    gather send buckets → tiled all-to-all (host-unrolled transpose:
+    recv_r[j] = send_j[r]) → stays + scatter. Pad slots (== buf) gather
+    zeros and scatter-drop, so output pad slots are exact zeros."""
+    n, buf = x.shape[:2]
+    assert buf == tables.buf, (buf, tables.buf)
+    xp = zero_pad_slot(x, axis=1)
+    send = gather_send_buckets(
+        xp, jnp.asarray(tables.send_idx), use_kernel=use_kernel
+    )
+    recv = jnp.swapaxes(send, 0, 1)              # recv_r[j] = send_j[r]
+
+    out = jax.vmap(lambda xr, ir: xr[ir])(xp, jnp.asarray(tables.stay_idx))
+    flat_recv = recv.reshape(n, n * tables.s_max, *x.shape[2:])
+    recv_slots = jnp.asarray(tables.recv_idx).reshape(n, -1)
+    return jax.vmap(
+        lambda o, s, v: o.at[s].set(v, mode="drop")  # pad (== buf) drops
+    )(out, recv_slots, flat_recv)
+
+
+def reshard_group(
+    xs: Sequence, tables: sm.ReshardTables, *, use_kernel: bool = False
+) -> List:
+    """Fused multi-leaf reshard: every leaf shares one plan, so their unit
+    payloads are concatenated and the whole group moves through ONE
+    gather/all-to-all/scatter — one message per (src, dst) rank pair for
+    the group, instead of one per tensor."""
+    xs = list(xs)
+    if len(xs) == 1:
+        return [reshard_ranks(xs[0], tables, use_kernel=use_kernel)]
+    n, buf = xs[0].shape[:2]
+    if len({x.dtype for x in xs}) > 1:
+        # promotion must be value-exact: bf16/f16 → f32 round-trips are,
+        # int → float is NOT (>2^24 corrupts silently) — loud, not silent
+        assert all(jnp.issubdtype(x.dtype, jnp.floating) for x in xs), (
+            "mixed-dtype reshard group must be all-floating; give non-float "
+            "leaves their own group",
+            [x.dtype for x in xs],
+        )
+    dtype = jnp.result_type(*[x.dtype for x in xs])
+    flats, sizes = [], []
+    for x in xs:
+        assert x.shape[:2] == (n, buf), (x.shape, (n, buf))
+        flats.append(x.reshape(n, buf, -1).astype(dtype))
+        sizes.append(flats[-1].shape[-1])
+    fused = jnp.concatenate(flats, axis=-1)
+    out = reshard_ranks(fused, tables, use_kernel=use_kernel)
+    outs, off = [], 0
+    for x, e in zip(xs, sizes):
+        outs.append(
+            out[..., off:off + e].astype(x.dtype).reshape(x.shape)
+        )
+        off += e
+    return outs

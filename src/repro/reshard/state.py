@@ -1,0 +1,203 @@
+"""ShardedState: the sharded form of an arbitrary per-request state tree
+(KV cache, SSM h/conv, RG-LRU h/conv) over one scale-up domain, with live
+TP-transition resharding (DESIGN.md §3.3).
+
+Generalizes the KV-head container that `serve.kv_shard.ShardedKV` pioneered
+to EVERY registered `UnitSpec` family: each leaf's partition axis is split
+into its family's units, units are placed by the planner's degree layouts
+(``sync_key(k, n1, tp)`` — contiguously balanced over the first ``tp`` live
+ranks), and a TP change moves units between ranks with the same
+static-table all-to-all as the weight reshard, fused per unit family (one
+message per (src, dst) rank pair for all leaves sharing a plan, not one
+per tensor). Replicated tails (the SSM conv state's B/C columns) ride
+along dense — they exist on every rank and never move.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shard_mapping as sm
+from repro.reshard import engine, planner
+from repro.reshard.units import UnitSpec
+
+
+@lru_cache(maxsize=None)
+def degree_layout(k: int, tp: int, n1: int) -> sm.Layout:
+    """Unit→rank placement of a replica serving at TP degree ``tp``:
+    contiguously balanced over its first ``tp`` live ranks on the full
+    ``n1``-wide domain axis."""
+    assert 1 <= tp <= n1, (tp, n1)
+    return planner.layout(planner.sync_key(k, n1, tp))
+
+
+def widened_slots(layout: sm.Layout, buf: int) -> np.ndarray:
+    """(n, buf) unit id per buffer slot, -1 pad (layout.slots widened to a
+    common ``buf`` so every TP degree shares one buffer geometry)."""
+    assert buf >= layout.max_count
+    out = np.full((layout.n, buf), -1, dtype=np.int64)
+    out[:, : layout.max_count] = layout.slots
+    return out
+
+
+def _norm_axis(spec: UnitSpec, ndim: int) -> int:
+    ax = spec.axis if spec.axis >= 0 else spec.axis + ndim
+    assert 0 <= ax < ndim, (spec, ndim)
+    return ax
+
+
+def shard_state_leaf(dense, spec: UnitSpec, layout: sm.Layout, buf: int):
+    """Dense leaf → ((n1, buf, [unit,] *other) sharded part, dense tail).
+
+    The ``spec.axis`` slice ``[0, k·unit)`` moves into per-rank unit
+    buffers (pad slots exact zeros); the replicated ``tail`` channels stay
+    dense. The unit channel dim is kept only when ``unit > 1``."""
+    ax = _norm_axis(spec, dense.ndim)
+    span = spec.k * spec.unit
+    assert dense.shape[ax] == span + spec.tail, (dense.shape, ax, spec)
+    main = jax.lax.slice_in_dim(dense, 0, span, axis=ax)
+    tail = (
+        jax.lax.slice_in_dim(dense, span, span + spec.tail, axis=ax)
+        if spec.tail else None
+    )
+    x = jnp.moveaxis(main, ax, 0)                    # (k·unit, *other)
+    if spec.unit > 1:
+        x = x.reshape(spec.k, spec.unit, *x.shape[1:])
+    xp = engine.zero_pad_slot(x, axis=0)             # index k → zeros
+    slots = widened_slots(layout, buf)
+    idx = jnp.asarray(np.where(slots >= 0, slots, spec.k))
+    return xp[idx], tail                             # (n1, buf, ...)
+
+
+def gather_state_leaf(sharded, tail, spec: UnitSpec, layout: sm.Layout,
+                      ndim: int):
+    """Inverse of `shard_state_leaf`: only live (rank, slot) pairs are read
+    — pad contents never leak into the dense view."""
+    asg = jnp.asarray(layout.assignment)
+    slot = jnp.asarray(layout.local_slot)
+    x = sharded[asg, slot]                           # (k, [unit,] *other)
+    if spec.unit > 1:
+        x = x.reshape(spec.k * spec.unit, *x.shape[2:])
+    ax = _norm_axis(spec, ndim)
+    out = jnp.moveaxis(x, 0, ax)
+    if tail is not None:
+        out = jnp.concatenate([out, tail], axis=ax)
+    return out
+
+
+class ShardedState:
+    """The sharded per-request state of ONE serving replica.
+
+    Owns every unit-bearing leaf of a state pytree in rank buffers over an
+    ``n1``-wide scale-up domain and reshards them in place when the
+    replica's TP degree changes (`apply_tp` — the transition the serve
+    engine runs mid-decode). `gather()`/`update()` convert to/from the
+    dense view (a bit-exact identity pair). ``resolver`` maps a leaf path
+    to its `UnitSpec` (see `units.cache_unit_resolver`); every leaf must
+    resolve — state with no registered unit cannot survive a transition.
+    """
+
+    def __init__(self, tree, resolver: Callable, n1: int, *,
+                 tp: Optional[int] = None, use_kernel: bool = False):
+        self.n1 = n1
+        self._tp = n1 if tp is None else tp
+        self.use_kernel = use_kernel
+        leaves, self._treedef = jax.tree_util.tree_flatten_with_path(tree)
+        self._specs: List[UnitSpec] = [resolver(path) for path, _ in leaves]
+        self._ndims = [leaf.ndim for _, leaf in leaves]
+        self._shard(leaves)
+        self.last_reshard: Dict[str, Any] = {}
+
+    def _layout(self, spec: UnitSpec, tp: int) -> sm.Layout:
+        return degree_layout(spec.k, tp, self.n1)
+
+    def _shard(self, leaves) -> None:
+        self._bufs, self._tails = [], []
+        for spec, (_, leaf) in zip(self._specs, leaves):
+            b, t = shard_state_leaf(
+                leaf, spec, self._layout(spec, self._tp), spec.k
+            )
+            self._bufs.append(b)
+            self._tails.append(t)
+
+    # -------------------------------------------------------------- views
+
+    @property
+    def tp(self) -> int:
+        return self._tp
+
+    @property
+    def sharded(self) -> List:
+        """The raw (n1, buf, ...) rank buffers (tests / introspection)."""
+        return list(self._bufs)
+
+    def gather(self):
+        """Dense state pytree view for the decode step."""
+        dense = [
+            gather_state_leaf(b, t, spec, self._layout(spec, self._tp), nd)
+            for b, t, spec, nd in zip(
+                self._bufs, self._tails, self._specs, self._ndims
+            )
+        ]
+        return jax.tree_util.tree_unflatten(self._treedef, dense)
+
+    def update(self, tree) -> None:
+        """Re-scatter a dense state tree (the decode step's output) into
+        the current rank layout."""
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        assert treedef == self._treedef
+        self._shard(leaves)
+
+    # ------------------------------------------------------------- reshard
+
+    def apply_tp(self, new_tp: int) -> Dict[str, Any]:
+        """Reshard every leaf from the current layout to the ``new_tp``
+        layout (downward on failure, upward on recovery), fused per unit
+        family, and return the traffic stats of the move.
+        ``moved_units_per_rank`` counts unit INSTANCES (one per leaf
+        carrying the unit, summed over families) through the busiest rank —
+        the same accounting basis as ``bytes_moved``."""
+        assert 1 <= new_tp <= self.n1, (new_tp, self.n1)
+        stats = {
+            "tp_from": self._tp, "tp_to": new_tp,
+            "moved_units_per_rank": 0, "bytes_moved": 0, "messages": 0,
+        }
+        if new_tp == self._tp:
+            self.last_reshard = stats
+            return stats
+
+        groups: Dict[int, List[int]] = {}
+        for i, spec in enumerate(self._specs):
+            groups.setdefault(spec.k, []).append(i)
+        pairs = set()
+        per_rank = np.zeros(self.n1, dtype=np.int64)
+        for k, idxs in groups.items():
+            plan = planner.transition_plan(
+                planner.sync_key(k, self.n1, self._tp),
+                planner.sync_key(k, self.n1, new_tp),
+                k, k,
+            )
+            outs = engine.reshard_group(
+                [self._bufs[i] for i in idxs], plan.tables,
+                use_kernel=self.use_kernel,
+            )
+            for i, o in zip(idxs, outs):
+                unit_bytes = int(
+                    np.prod(self._bufs[i].shape[2:])
+                ) * self._bufs[i].dtype.itemsize
+                stats["bytes_moved"] += plan.n_moved * unit_bytes
+                self._bufs[i] = o
+            pairs.update(plan.pairs)   # families sharing a pair fuse
+            # every family's moves land on the same ranks in the same
+            # transition: per-rank traffic is the SUM over families
+            per_rank += plan.tables.moved_units_per_rank() * len(idxs)
+        stats["moved_units_per_rank"] = int(per_rank.max())
+        stats["messages"] = len(pairs)
+        self._tp = new_tp
+        self.last_reshard = stats
+        return stats

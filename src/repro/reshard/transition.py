@@ -1,0 +1,143 @@
+"""Direct packed→packed fail/repair transitions for the NTP training stack
+(DESIGN.md §3.3): re-express packed param/optimizer trees under a new
+`FailurePlan` WITHOUT the dense host round-trip.
+
+The retired path (`pack(unpack(...))`) rebuilt every weight densely from
+replica 0 — O(model) host traffic per transition. This engine asks the
+planner for each replica's comp→comp' `TransitionPlan` and applies it
+directly on the packed buffers: stays are rank-local slot renames, and only
+units whose rank changes travel, fused into ONE bucket per (replica, src,
+dst) triple across EVERY unit leaf of every tree handed in (params and both
+AdamW moments ride the same messages). The numpy twin's `TransferStats`
+ledger records exactly what moved; a transition where nothing moves is a
+plain reshape.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nonuniform as nu
+from repro.reshard import planner
+from repro.reshard.twin import TransferStats, apply_plan
+from repro.reshard.units import UnitSpec, ntp_unit_specs
+
+
+def _leaf_key(path) -> str:
+    return getattr(path[-1], "key", None)
+
+
+def replica_transition_plans(
+    k: int, old: nu.FailurePlan, new: nu.FailurePlan
+) -> List[planner.TransitionPlan]:
+    """Per-replica comp(old)→comp(new) plans for one k-unit weight family,
+    at the packed buffer widths of the two whole-mesh `WeightPlan`s."""
+    assert old.n1 == new.n1 and old.d == new.d, (old, new)
+    old_wp, new_wp = nu.weight_plan(k, old), nu.weight_plan(k, new)
+    return [
+        planner.transition_plan(
+            planner.comp_key(k, old.n1, old.replica_tp[d], old.n_sync),
+            planner.comp_key(k, new.n1, new.replica_tp[d], new.n_sync),
+            old_wp.buf,
+            new_wp.buf,
+        )
+        for d in range(old.d)
+    ]
+
+
+def transition_trees(
+    cfg,
+    trees: Sequence[Dict],
+    old: nu.FailurePlan,
+    new: nu.FailurePlan,
+) -> Tuple[List[Dict], TransferStats]:
+    """Re-express packed trees (params, AdamW m/v, …) under ``new``.
+
+    Every unit leaf across ALL ``trees`` joins the same per-(replica, src,
+    dst) buckets, so the whole transition issues one fused send per rank
+    pair per replica. Replicated leaves are copied through untouched (fresh
+    buffers — step inputs are donated). Returns the transitioned trees and
+    the fused `TransferStats`.
+    """
+    specs = ntp_unit_specs(cfg)
+    stats = TransferStats()
+    if new == old:
+        return [jax.tree.map(lambda x: jnp.array(x, copy=True), t)
+                for t in trees], stats
+
+    plans = {s.k: replica_transition_plans(s.k, old, new)
+             for s in set(specs.values())}
+    n1, d_axis = old.n1, old.d
+
+    # collect every unit leaf of every tree into its k-family group
+    flats = [jax.tree_util.tree_flatten_with_path(t) for t in trees]
+    groups: Dict[int, List[Tuple[int, int, np.ndarray]]] = {}
+    for ti, (leaves, _) in enumerate(flats):
+        for li, (path, leaf) in enumerate(leaves):
+            spec = specs.get(_leaf_key(path))
+            if spec is not None:
+                groups.setdefault(spec.k, []).append(
+                    (ti, li, np.asarray(leaf))
+                )
+
+    out_leaves = [[None] * len(leaves) for leaves, _ in flats]
+    for k, members in groups.items():
+        k_plans = plans[k]
+        src_buf = k_plans[0].src_buf
+        dst_buf = k_plans[0].dst_buf
+        views, shapes = [], []
+        for _, _, arr in members:
+            assert arr.shape[1] == n1 * src_buf, (arr.shape, n1, src_buf)
+            shapes.append(arr.shape[2:])
+            views.append(arr.reshape(d_axis, n1, src_buf, -1))
+        outs = [
+            np.zeros((d_axis, n1, dst_buf) + v.shape[3:], v.dtype)
+            for v in views
+        ]
+        for d in range(d_axis):
+            # pair_tag=(d,): buckets of DIFFERENT unit families targeting
+            # the same (replica, src, dst) fuse into one physical message
+            moved = apply_plan(
+                [v[d] for v in views], k_plans[d], stats=stats, pair_tag=(d,)
+            )
+            for o, m in zip(outs, moved):
+                o[d] = m
+        for (ti, li, _), o, unit_shape in zip(members, outs, shapes):
+            out_leaves[ti][li] = jnp.asarray(
+                o.reshape(d_axis, n1 * dst_buf, *unit_shape)
+            )
+
+    # replicated leaves: fresh copies, no layout change
+    for ti, (leaves, _) in enumerate(flats):
+        for li, (path, leaf) in enumerate(leaves):
+            if out_leaves[ti][li] is None:
+                out_leaves[ti][li] = jnp.array(leaf, copy=True)
+
+    return [
+        jax.tree_util.tree_unflatten(treedef, out_leaves[ti])
+        for ti, (_, treedef) in enumerate(flats)
+    ], stats
+
+
+def transition_params(
+    cfg, packed: Dict, old: nu.FailurePlan, new: nu.FailurePlan
+) -> Tuple[Dict, TransferStats]:
+    """Single-tree convenience wrapper over `transition_trees`."""
+    (tree,), stats = transition_trees(cfg, [packed], old, new)
+    return tree, stats
+
+
+def expected_transfer(
+    cfg, old: nu.FailurePlan, new: nu.FailurePlan
+) -> Dict[str, np.ndarray]:
+    """Per-family (n, n) unit transfer matrices summed over replicas — the
+    ground truth `transition_trees`' accounting must reproduce."""
+    out: Dict[str, np.ndarray] = {}
+    for name, spec in ntp_unit_specs(cfg).items():
+        mats = [p.transfer for p in replica_transition_plans(spec.k, old, new)]
+        out[name] = np.sum(mats, axis=0)
+    return out

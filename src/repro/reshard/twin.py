@@ -1,0 +1,128 @@
+"""The numpy twin of the reshard engine: exact host-side emulation of the
+static-table all-to-all plus the transfer accounting the tests and the
+transition engine's invariants hang off (DESIGN.md §3.3).
+
+Two routes, both bit-exact against the jnp engine:
+
+* `emulate_tables` — the padded-message emulation (gather send buckets,
+  transpose, scatter), semantically identical to `engine.reshard_ranks`;
+* `apply_plan` — the DIRECT route a packed→packed transition takes: stays
+  are rank-local slot renames, movers travel in one fused bucket per
+  (src, dst) rank pair. `apply_plan` ASSERTS the central invariant — only
+  units whose src rank differs from their dst rank ever enter a bucket —
+  and returns a `TransferStats` accounting of exactly what moved.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import shard_mapping as sm
+from repro.reshard.planner import TransitionPlan
+
+
+@dataclass
+class TransferStats:
+    """What one transition physically moved (the numpy twin's ledger)."""
+
+    moved_units: int = 0      # units that changed ranks (network traffic)
+    stayed_units: int = 0     # units renamed rank-locally (no traffic)
+    messages: int = 0         # fused (src, dst) sends actually issued
+    bytes_moved: int = 0      # payload bytes across all messages
+    dense_bytes: int = 0      # what the dense host round-trip would touch
+    per_pair: Dict[Tuple[int, ...], int] = field(default_factory=dict)
+
+    def merge(self, other: "TransferStats") -> "TransferStats":
+        self.moved_units += other.moved_units
+        self.stayed_units += other.stayed_units
+        self.bytes_moved += other.bytes_moved
+        self.dense_bytes += other.dense_bytes
+        for k, v in other.per_pair.items():
+            if k not in self.per_pair:
+                self.messages += 1    # shared tagged pairs fuse into one send
+            self.per_pair[k] = self.per_pair.get(k, 0) + v
+        return self
+
+    def as_dict(self) -> Dict:
+        return {
+            "moved_units": self.moved_units,
+            "stayed_units": self.stayed_units,
+            "messages": self.messages,
+            "bytes_moved": self.bytes_moved,
+            "dense_bytes": self.dense_bytes,
+        }
+
+
+def emulate_tables(x_ranks: np.ndarray, tables: sm.ReshardTables) -> np.ndarray:
+    """Message-table twin of `engine.reshard_ranks` on one (n, buf, ...)
+    rank-buffer stack (recv_r[j] = send_j[r]; pad gathers zeros / drops)."""
+    n, buf = x_ranks.shape[:2]
+    assert buf == tables.buf, (buf, tables.buf)
+    send, recv = tables.send_idx, tables.recv_idx
+    zero = np.zeros((n, 1) + x_ranks.shape[2:], x_ranks.dtype)
+    xp = np.concatenate([x_ranks, zero], axis=1)
+    send_buf = np.stack([xp[r][send[r]] for r in range(n)])
+    recv_buf = np.stack([send_buf[:, r] for r in range(n)])
+
+    out = np.empty_like(x_ranks)
+    for r in range(n):
+        o = xp[r][tables.stay_idx[r]].copy()
+        flat = recv_buf[r].reshape((-1,) + recv_buf.shape[3:])
+        slots = recv[r].reshape(-1)
+        keep = slots != tables.pad
+        o[slots[keep]] = flat[keep]
+        out[r] = o
+    return out
+
+
+def apply_plan(
+    bufs: List[np.ndarray],
+    plan: TransitionPlan,
+    *,
+    stats: TransferStats | None = None,
+    pair_tag: Tuple = (),
+) -> List[np.ndarray]:
+    """Direct packed→packed transition of a GROUP of leaves sharing one
+    plan: ``bufs`` is a list of (n, src_buf, *payload) rank-buffer stacks;
+    returns the (n, dst_buf, *payload) stacks under the destination layout.
+
+    Stays never leave their rank; movers are gathered into ONE fused bucket
+    per (src, dst) pair across every leaf in the group — the bucket list is
+    built explicitly so the accounting (and the tests) can assert that only
+    ``src_rank != dst_rank`` units generate traffic. ``pair_tag`` prefixes
+    the ``per_pair`` ledger keys (callers tag the replica so buckets of
+    DIFFERENT unit families can later merge into one physical message per
+    (replica, src, dst) — see `transition.transition_trees`).
+    """
+    n = plan.n
+    outs = [
+        np.zeros((n, plan.dst_buf) + b.shape[2:], b.dtype) for b in bufs
+    ]
+    for b, o in zip(bufs, outs):
+        assert b.shape[:2] == (n, plan.src_buf), (b.shape, plan.src_buf)
+        # stays: rank-local slot renames, zero network traffic
+        o[plan.stay_rank, plan.stay_dst_slot] = b[plan.stay_rank,
+                                                  plan.stay_src_slot]
+
+    st = stats if stats is not None else TransferStats()
+    st.stayed_units += plan.n_stay * len(bufs)
+    st.dense_bytes += sum(int(b.nbytes) for b in bufs)
+    src, dst = plan.move_src_rank, plan.move_dst_rank
+    assert (src != dst).all(), "a stay leaked into the move set"
+    for s, d in plan.pairs:
+        sel = (src == s) & (dst == d)
+        # ONE fused message for the whole group: every leaf's movers for
+        # this (src, dst) pair ride together
+        payload = [b[s, plan.move_src_slot[sel]] for b in bufs]
+        n_units = int(sel.sum())
+        key = pair_tag + (s, d)
+        if key not in st.per_pair:
+            st.messages += 1          # families sharing a tagged pair fuse
+        st.moved_units += n_units * len(bufs)
+        st.bytes_moved += sum(int(p.nbytes) for p in payload)
+        st.per_pair[key] = st.per_pair.get(key, 0) + n_units
+        for o, p in zip(outs, payload):
+            o[d, plan.move_dst_slot[sel]] = p
+    return outs

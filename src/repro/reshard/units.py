@@ -1,0 +1,152 @@
+"""UnitSpec registry: every NTP partition-unit family in one place
+(DESIGN.md §3.2/§3.3).
+
+A `UnitSpec` says how one leaf of a state tree splits into Algorithm-1
+partition units along its partition axis:
+
+| kind           | unit                              | used by                 |
+|----------------|-----------------------------------|-------------------------|
+| ``rows128``    | 128-row weight block              | dense MLP weights       |
+| ``expert``     | whole expert                      | MoE FFN weights         |
+| ``kv_group``   | GQA kv-group (train weight unit)  | attention weights       |
+| ``kv_head``    | GQA KV head                       | serving KV cache        |
+| ``ssm_head``   | SSD head (``head_dim`` channels)  | Mamba-2 h/conv state    |
+| ``rglru_block``| Griffin gate block (``block_width``) | RG-LRU h/conv state  |
+
+Training weights are already unit-buffered when they reach the engine, so
+their specs only carry ``kind``/``k``; serving state trees are dense, so
+cache specs additionally carry the leaf geometry: the ``axis`` holding the
+units, ``unit`` channels per unit along it, and a replicated ``tail`` (the
+SSM conv state carries its B/C columns on every rank — they never move).
+
+`cache_unit_resolver(cfg)` maps a cache-tree leaf path to its spec by
+reading the block kind out of ``cfg.layer_pattern`` (cache trees mirror the
+pattern: ``cache["layers"][i]`` / ``cache["tail"][i]`` belong to
+``layer_pattern[i]``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+from repro.configs.base import ATTN_KINDS, ArchConfig
+
+STATE_LEAF_NAMES = ("k", "v", "h", "conv")
+
+
+@dataclass(frozen=True)
+class UnitSpec:
+    """One partition-unit family on one leaf."""
+
+    kind: str
+    k: int            # number of partition units
+    axis: int = 0     # leaf axis carrying the units (negative = from end)
+    unit: int = 1     # channels per unit along that axis
+    tail: int = 0     # trailing replicated channels (never resharded)
+
+    def __post_init__(self):
+        assert self.k >= 1, self
+
+
+# ---------------------------------------------------------------------------
+# training weight units (NTP prototype: packed unit buffers)
+
+def ntp_unit_specs(cfg) -> Dict[str, UnitSpec]:
+    """Leaf-name → UnitSpec for the NTP prototype's packed param/opt trees
+    (``cfg``: `core.ntp_train.NTPModelConfig`, duck-typed to avoid an import
+    cycle). Leaves not named here are replicated (norms, embed, router)."""
+    mlp_kind = "expert" if cfg.is_moe else "rows128"
+    attn = UnitSpec("kv_group", cfg.n_kv_groups)
+    mlp = UnitSpec(mlp_kind, cfg.k_ff)
+    return {"wq": attn, "wk": attn, "wv": attn, "wo": attn, "A": mlp, "B": mlp}
+
+
+# ---------------------------------------------------------------------------
+# serving state units (arch-stack cache trees)
+
+def _kind_state_specs(cfg: ArchConfig, kind: str) -> Dict[str, UnitSpec]:
+    """State-leaf specs of one block kind (leaf shapes as produced by
+    `models.transformer.init_block_cache` under any stack of leading axes)."""
+    if kind in ATTN_KINDS:
+        # k/v: (..., T, kvh, hd) — head axis at -2
+        kv = UnitSpec("kv_head", cfg.n_kv_heads, axis=-2)
+        return {"k": kv, "v": kv}
+    if kind == "ssm":
+        s = cfg.ssm
+        nh, hp = s.n_heads(cfg.d_model), s.head_dim
+        return {
+            # h: (..., nh, hp, ds) — SSD-head axis at -3
+            "h": UnitSpec("ssm_head", nh, axis=-3),
+            # conv: (..., K-1, di + 2·ds) — di = nh·hp sharded channels,
+            # the B/C tail replicated on every rank
+            "conv": UnitSpec("ssm_head", nh, axis=-1, unit=hp,
+                             tail=2 * s.d_state),
+        }
+    if kind == "rglru":
+        g = cfg.rglru
+        di, w = g.d_inner(cfg.d_model), g.block_width
+        nb = di // w
+        return {
+            "h": UnitSpec("rglru_block", nb, axis=-1, unit=w),
+            "conv": UnitSpec("rglru_block", nb, axis=-1, unit=w),
+        }
+    raise ValueError(f"no state units for block kind {kind!r}")
+
+
+def arch_unit_counts(cfg: ArchConfig) -> Dict[str, int]:
+    """Partition-unit count per state family present in ``cfg``'s pattern."""
+    out: Dict[str, int] = {}
+    for kind in dict.fromkeys(cfg.layer_pattern):
+        for spec in _kind_state_specs(cfg, kind).values():
+            out[spec.kind] = spec.k
+    return out
+
+
+def serve_unit_count(cfg: ArchConfig) -> int:
+    """The quantization granularity serving slowdown models use: the
+    COARSEST (smallest-k) unit family in the pattern pins the imbalance."""
+    return max(1, min(arch_unit_counts(cfg).values()))
+
+
+def cache_unit_resolver(cfg: ArchConfig) -> Callable:
+    """Path → Optional[UnitSpec] resolver for ``cfg``'s cache trees.
+
+    Cache trees mirror the layer pattern (`Model.init_cache`):
+    ``cache["layers"]``/``cache["tail"]`` are tuples whose i-th element
+    holds the state of block kind ``layer_pattern[i]``. Unknown leaf names
+    raise — silently skipping a state leaf would strand it at the old
+    layout through a TP transition.
+    """
+    per_kind = {
+        kind: _kind_state_specs(cfg, kind)
+        for kind in dict.fromkeys(cfg.layer_pattern)
+    }
+
+    def resolve(path) -> Optional[UnitSpec]:
+        names = [getattr(p, "key", None) for p in path]
+        idxs = [getattr(p, "idx", None) for p in path]
+        leaf_name = names[-1]
+        if leaf_name not in STATE_LEAF_NAMES:
+            raise ValueError(
+                f"unknown state leaf {leaf_name!r} at {path}: no UnitSpec "
+                "registered — register one in repro.reshard.units before "
+                "serving this state through TP transitions"
+            )
+        # the SequenceKey right after 'layers'/'tail' is the pattern index
+        pat = None
+        for i, nm in enumerate(names):
+            if nm in ("layers", "tail") and i + 1 < len(path):
+                pat = idxs[i + 1]
+                break
+        if pat is None:
+            raise ValueError(f"cannot locate layer-pattern index in {path}")
+        kind = cfg.layer_pattern[int(pat) % len(cfg.layer_pattern)]
+        return per_kind[kind].get(leaf_name) or _bad_leaf(kind, leaf_name, path)
+
+    return resolve
+
+
+def _bad_leaf(kind, leaf_name, path):
+    raise ValueError(
+        f"block kind {kind!r} has no state leaf {leaf_name!r} (at {path})"
+    )

@@ -5,7 +5,7 @@ from repro.core.nonuniform import FailurePlan  # noqa: F401
 from repro.core.ntp_train import Mode, NTPModelConfig  # noqa: F401
 from repro.runtime.events import (  # noqa: F401
     ClusterHealth, DeadReplicaError, FailureEvent, LifecycleEvent,
-    RecoveryEvent, plan_from_health,
+    RecoveryEvent, plan_from_health, resolve_serving_domain,
 )
 from repro.runtime.orchestrator import (  # noqa: F401
     PowerDecision, PowerPolicy, ScheduledEvent, TraceRunner, power_policy,

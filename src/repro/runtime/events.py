@@ -139,6 +139,29 @@ class ClusterHealth:
         return replace(self, failed=tuple(failed))
 
 
+def resolve_serving_domain(event: LifecycleEvent, n_domains: int) -> LifecycleEvent:
+    """Normalize an event for DOMAIN-PINNED serving replicas (DESIGN.md
+    §2.5): serving replicas are never repacked across domains (the KV state
+    pins them), so ``replica=r`` aliases ``domain=r`` 1:1. Returns a
+    domain-addressed event of the same type; raises `ValueError` naming the
+    offending id when it is outside ``[0, n_domains)``.
+
+    This is THE one place serving addressing is validated — call sites
+    (`serve.session.ServeSession.apply`) must not re-implement the aliasing.
+    """
+    if event.domain is None:
+        event = type(event)(step=event.step, domain=event.replica,
+                            n_gpus=event.n_gpus)
+    if not 0 <= event.domain < n_domains:
+        kind = type(event).__name__
+        raise ValueError(
+            f"{kind} addresses domain {event.domain}, but this serving "
+            f"session has {n_domains} domain-pinned replicas "
+            f"(valid ids: 0..{n_domains - 1})"
+        )
+    return event
+
+
 def plan_from_health(health: ClusterHealth, *, spares: int = 0) -> FailurePlan:
     """Bridge `pack_replicas` output into a `FailurePlan`.
 

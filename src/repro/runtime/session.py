@@ -21,9 +21,11 @@ Session lifecycle::
         metrics = session.step(batch)                        # loss, grad_norm
     session.save("ckpt.npz")                                 # canonical layout
 
-`apply()` transitions FailurePlan -> FailurePlan' by repacking params AND
-optimizer state through the pack/unpack machinery — the checkpoint-free
-equivalent of the paper's restart, with no caller-visible host round-trip.
+`apply()` transitions FailurePlan -> FailurePlan' by moving params AND
+optimizer state through the unified reshard engine's direct packed→packed
+transition (repro.reshard, DESIGN.md §3.3) — the checkpoint-free equivalent
+of the paper's restart; only units whose rank changes move, fused into one
+bucketed send per rank pair (`session.last_transition` has the ledger).
 It runs in BOTH directions: a `FailureEvent` lowers a replica's TP, a
 `RecoveryEvent` raises it back toward full (DESIGN.md §2.4). An optional
 `PowerPolicy` (runtime/orchestrator.py) is consulted on every transition to
@@ -93,6 +95,7 @@ class NTPSession:
         self._policy = power_policy
         self._spares = spares
         self._decision = None
+        self.last_transition = None   # TransferStats of the latest repack
         d, n1 = mesh.shape["data"], mesh.shape["model"]
 
         if health is None:
@@ -176,6 +179,7 @@ class NTPSession:
         self._policy = None
         self._spares = 0
         self._decision = None
+        self.last_transition = None
         return self
 
     # ------------------------------------------------------------- introspect
@@ -281,10 +285,7 @@ class NTPSession:
             return self._plan
 
         old_plan = self._plan
-        self._params = nt.repack_params(
-            self._cfg, jax.device_get(self._params), old_plan, new_plan
-        )
-        self._opt = self._repack_opt(jax.device_get(self._opt), old_plan, new_plan)
+        self._transition(old_plan, new_plan)
         self._plan = new_plan
         if self._mode is Mode.UNIFORM and not new_plan.healthy:
             self._mode = Mode.NTP  # uniform jobs degrade into NTP, not death
@@ -354,14 +355,22 @@ class NTPSession:
             ),
         )
 
-    def _repack_opt(self, opt: Dict, old: FailurePlan, new: FailurePlan) -> Dict:
-        return {
-            k: (
-                nt.repack_params(self._cfg, v, old, new)
-                if k in self._optimizer.param_like else v
-            )
-            for k, v in opt.items()
-        }
+    def _transition(self, old: FailurePlan, new: FailurePlan) -> None:
+        """One fused packed→packed transition for params AND every
+        param-like optimizer leaf tree (AdamW m/v/master): all of them ride
+        the same per-(replica, src, dst) buckets, so the whole fail/repair
+        move is one bucketed send per rank pair — O(moved units), not
+        O(model), host traffic (repro.reshard.transition). The transfer
+        accounting is kept in `last_transition`."""
+        from repro.reshard.transition import transition_trees
+
+        opt = jax.device_get(self._opt)
+        opt_keys = [k for k in self._optimizer.param_like if k in opt]
+        trees = [jax.device_get(self._params)] + [opt[k] for k in opt_keys]
+        moved, stats = transition_trees(self._cfg, trees, old, new)
+        self._params = moved[0]
+        self._opt = dict(opt, **dict(zip(opt_keys, moved[1:])))
+        self.last_transition = stats
 
     def _canonical_opt(self) -> Dict:
         opt = jax.device_get(self._opt)

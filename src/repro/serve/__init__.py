@@ -1,8 +1,11 @@
 """Resilient NTP inference serving (DESIGN.md §2.5): continuous-batching
-engine + sharded-KV live reshard + SLO router behind a `ServeSession`
-façade parallel to `runtime.NTPSession` — a `FailureEvent` mid-decode
-reshards the KV cache to the reduced TP degree instead of dropping the
-in-flight requests; a `RecoveryEvent` repacks it back upward."""
+engine + live per-request-state reshard + SLO router behind a
+`ServeSession` façade parallel to `runtime.NTPSession` — a `FailureEvent`
+mid-decode reshards the KV cache AND recurrent state (SSM/rgLRU channel
+blocks, via the unified engine's `repro.reshard.ShardedState`) to the
+reduced TP degree instead of dropping the in-flight requests; a
+`RecoveryEvent` repacks it back upward."""
+from repro.reshard.state import ShardedState  # noqa: F401
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
 from repro.serve.kv_shard import (  # noqa: F401
     ShardedKV, attend_from_sharded, attend_heads, gather_leaf,

@@ -4,10 +4,12 @@ Slot-based prefill/decode scheduling over the existing arch-stack
 transformers (`models.transformer.Model`): a fixed pool of KV-cache slots,
 each slot one in-flight request at its own position (`Model.decode_slots`
 vmaps the one-token decode over the slot axis). On a `FailureEvent` the
-cache is resharded mid-decode through `kv_shard.ShardedKV` — the
-head-redistribution all-to-all runs at the transition, and the decode loop
-works on the dense view in between (shard ∘ gather is the bit-exact
-identity, so nothing is lost by not round-tripping it per token).
+cache is resharded mid-decode through the unified engine's
+`repro.reshard.ShardedState` — KV heads, SSD channel blocks and rgLRU gate
+blocks move in one fused unit-redistribution all-to-all at the transition,
+and the decode loop works on the dense view in between (shard ∘ gather is
+the bit-exact identity, so nothing is lost by not round-tripping it per
+token).
 
 Degradation model (the serving twin of `core/ntp_train.py`'s local-batch
 rule): a replica at TP ``t < n1`` decodes slower by the same head-quantized
@@ -34,9 +36,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import build_model
-from repro.serve.kv_shard import ShardedKV, validate_kv_cache
+from repro.reshard.state import ShardedState
+from repro.reshard.units import cache_unit_resolver
 
-DECODER_KINDS = ("attn", "attn_sw", "attn_chunked")
+# every kind with a registered state UnitSpec serves through fail→repair:
+# attention (KV-head units), Mamba-2 SSD (SSD-head channel blocks) and
+# RG-LRU (Griffin gate blocks) — DESIGN.md §3.3
+DECODER_KINDS = ("attn", "attn_sw", "attn_chunked", "ssm", "rglru")
+RECURRENT_KINDS = ("ssm", "rglru")
 
 
 @dataclass
@@ -91,9 +98,9 @@ class ServeEngine:
         kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
         if not kinds <= set(DECODER_KINDS) or cfg.encoder is not None:
             raise ValueError(
-                f"serve engine is decoder-only attention for now; {cfg.arch_id} "
-                f"has kinds {sorted(kinds)} (ssm/rglru/enc-dec caches have a "
-                "different NTP unit — open item)"
+                f"serve engine is decoder-only for now; {cfg.arch_id} "
+                f"has kinds {sorted(kinds)} (enc-dec caches have no "
+                "registered NTP unit — open item)"
             )
         # ring caches (attn_sw/attn_chunked) only keep the trailing window:
         # a prefill longer than the ring would leave pad K/V posing as valid
@@ -102,6 +109,10 @@ class ServeEngine:
         if "attn_chunked" in kinds:
             assert prefill_len <= cfg.chunk_size, (prefill_len, cfg.chunk_size)
         assert prefill_len <= max_len
+        # recurrent state is CUMULATIVE: a zero-padded prefill would fold
+        # pad tokens into h/conv, so these configs admit token-by-token
+        # (exact recurrent semantics, length-stable jit) — see `admit`
+        self._recurrent = bool(kinds & set(RECURRENT_KINDS))
 
         self.cfg = cfg
         self.model = model if model is not None else build_model(cfg, remat=False)
@@ -119,7 +130,11 @@ class ServeEngine:
         # resident sharded and the decode-time gather is the standard GQA
         # KV all-gather.
         self._cache = self.model.init_slot_cache(slots, max_len, dtype)
-        validate_kv_cache(self._cache)
+        # resolve every state leaf to its partition-unit family up front —
+        # a leaf with no UnitSpec could not survive a TP transition
+        self._unit_resolver = cache_unit_resolver(cfg)
+        for path, _ in jax.tree_util.tree_flatten_with_path(self._cache)[0]:
+            self._unit_resolver(path)
         self.last_reshard = {}
         self.dead = False
         self.rel_speed = 1.0                 # tokens per wall tick (<= 1)
@@ -191,28 +206,45 @@ class ServeEngine:
         n = len(toks)
         assert 0 < n and n + req.remaining <= self.max_len, (n, req.remaining)
 
-        p = self.prefill_len
-        padded = np.zeros(p, np.int32)
-        head = toks[: min(n, p)]
-        padded[: len(head)] = head
         cache1 = self.model.init_cache(1, self.max_len, self._dtype)
-        logits, cache1 = self._prefill(
-            self.params, jnp.asarray(padded[None]), cache1
-        )
-        if n <= p:
-            last_logits = logits[0, n - 1]
-            pos = n
-        else:
-            # resumed request longer than one prefill: feed the overflow
-            # teacher-forced through the decode path (rare; preemption only)
-            pos = p
-            for t in toks[p:]:
+        if self._recurrent:
+            # recurrent state accumulates over EVERY prefilled position, so
+            # pad tokens are not inert — feed the prompt token-by-token
+            # (prefill of length 1, then teacher-forced decode): exactly the
+            # recurrent update semantics, with length-stable jit programs
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray(toks[:1][None]), cache1
+            )
+            last_logits, pos = logits[0, 0], 1
+            for t in toks[1:]:
                 last, cache1 = self._step1(
                     self.params, cache1, jnp.full((1, 1), t, jnp.int32),
                     jnp.int32(pos),
                 )
                 pos += 1
-            last_logits = last[0, 0]
+                last_logits = last[0, 0]
+        else:
+            p = self.prefill_len
+            padded = np.zeros(p, np.int32)
+            head = toks[: min(n, p)]
+            padded[: len(head)] = head
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray(padded[None]), cache1
+            )
+            if n <= p:
+                last_logits = logits[0, n - 1]
+                pos = n
+            else:
+                # resumed request longer than one prefill: feed the overflow
+                # teacher-forced through the decode path (preemption only)
+                pos = p
+                for t in toks[p:]:
+                    last, cache1 = self._step1(
+                        self.params, cache1, jnp.full((1, 1), t, jnp.int32),
+                        jnp.int32(pos),
+                    )
+                    pos += 1
+                last_logits = last[0, 0]
         first = int(jnp.argmax(last_logits[: self.cfg.vocab_size]))
 
         self._cache = jax.tree.map(
@@ -281,7 +313,7 @@ class ServeEngine:
                 preempted = self._preempt_all()
                 self.dead = True
                 self.last_reshard = {"tp_from": self._tp, "tp_to": 0,
-                                     "moved_heads_per_rank": 0,
+                                     "moved_units_per_rank": 0,
                                      "bytes_moved": 0}
                 self._tp = 0
                 self.rel_speed, self.power_boost = 0.0, 1.0
@@ -291,14 +323,16 @@ class ServeEngine:
             self.dead = False
             self._cache = jax.tree.map(jnp.zeros_like, self._cache)
             self.last_reshard = {"tp_from": 0, "tp_to": new_tp,
-                                 "moved_heads_per_rank": 0, "bytes_moved": 0}
+                                 "moved_units_per_rank": 0, "bytes_moved": 0}
         elif new_tp != self._tp:
             # the physical move: shard into the OLD rank layout, run the
-            # head-redistribution all-to-all, keep the new dense view
-            skv = ShardedKV(self._cache, self.cfg.n_kv_heads, self.n1,
-                            tp=self._tp, use_kernel=self.use_kernel)
-            st = skv.apply_tp(new_tp)
-            self._cache = skv.gather()
+            # unit-redistribution all-to-all (KV heads, SSD channel blocks
+            # and rgLRU gate blocks all ride the same fused messages), keep
+            # the new dense view
+            state = ShardedState(self._cache, self._unit_resolver, self.n1,
+                                 tp=self._tp, use_kernel=self.use_kernel)
+            st = state.apply_tp(new_tp)
+            self._cache = state.gather()
             self.last_reshard = st
             self.stats["reshards"] += 1
             self.stats["reshard_bytes"] += st["bytes_moved"]

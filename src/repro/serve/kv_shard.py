@@ -1,37 +1,25 @@
 """KV-cache sharding on the TP axis + live head-redistribution reshard —
-the serving analogue of `core/nonuniform.py` + `core/reshard.py`
-(DESIGN.md §2.5).
+now a thin attention-specific layer over the unified reshard engine
+(`repro.reshard`, DESIGN.md §3.3; the head-granular mechanics this module
+pioneered in PR 3 are the engine's `UnitSpec("kv_head", …)` family).
 
-Training NTP reshards *weights* between comp and sync layouts; weights are
-stateless with respect to requests, so a serving replica that loses a GPU
-could in principle re-pack them from a canonical copy (the paper's §3.3
-restart packing). The KV cache cannot: it is per-request state that took one
-forward pass per cached token to build, and dropping it means re-prefilling
-every in-flight request. This module makes the cache itself reshardable:
+GQA **KV heads are the partition units** over the scale-up domain: a
+replica at TP degree ``t`` holds its heads contiguously balanced over its
+first ``t`` live ranks (`head_layout` == the planner's ``sync`` degree
+layout), and a TP transition moves heads between ranks with the SAME
+Algorithm-1 static-table all-to-all as the weight reshard
+(`planner.transition_plan` → `engine.reshard_ranks`; ``use_kernel=True``
+routes the send-bucket gather through the Pallas `kernels.reshard_pack`).
 
-* GQA **KV heads are the partition units** over the scale-up domain
-  (`n1` rank slots) — the same unit-choice principle as DESIGN.md §3.2;
-* a replica at TP degree ``t`` holds its heads contiguously balanced over
-  its first ``t`` live ranks (`head_layout`), expressed on the full
-  n1-wide axis so one buffer geometry serves every degree;
-* on a `FailureEvent` mid-decode, `ShardedKV.apply_tp` moves heads between
-  ranks with the SAME static-table all-to-all as the weight reshard
-  (`core.shard_mapping.reshard_tables`): rank-local gather of send buckets →
-  tiled all-to-all (recv_r[j] = send_j[r]) → scatter, with pad slot = buf
-  gathering a zero row / scatter-dropping. `RecoveryEvent` runs the same
-  move upward (repack onto the revived ranks).
-
-The collective is emulated rank-local on host (the numpy twin of
-`core.reshard.reshard`, exactly the semantics property-tested in
-`tests/test_reshard_properties.py`); on a real mesh the per-rank send-bucket
-gather is `kernels.reshard_pack` (``use_kernel=True`` runs that Pallas
-kernel here, in interpret mode on CPU) and the transpose is one
-`jax.lax.all_to_all` over the model axis.
+`ShardedKV` remains the KV-only container (k/v leaves, head axis at -2);
+recurrent caches (SSM h/conv, RG-LRU h/conv) are served by the generic
+`repro.reshard.ShardedState` with their channel-block UnitSpecs — see
+`serve/engine.py`, which uses `ShardedState` for every architecture.
 """
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -39,46 +27,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import shard_mapping as sm
+from repro.reshard import engine as rse
+from repro.reshard import planner
+from repro.reshard.state import ShardedState, degree_layout, widened_slots
+from repro.reshard.units import UnitSpec
 
 KV_LEAF_NAMES = ("k", "v")
 
 
 def validate_kv_cache(cache) -> None:
-    """Every leaf must be a ``k``/``v`` KV-cache tensor. Non-KV cache state
-    (ssm ``h``/``conv``) has a different NTP unit (channel block, not head)
-    and is not servable yet."""
+    """Every leaf must be a ``k``/``v`` KV-cache tensor. Non-KV state
+    (ssm/rglru ``h``/``conv``) has a channel-block NTP unit — serve it
+    through the generic `repro.reshard.ShardedState` instead."""
     for path, _ in jax.tree_util.tree_flatten_with_path(cache)[0]:
         name = getattr(path[-1], "key", None)
         if name not in KV_LEAF_NAMES:
             raise ValueError(
                 f"ShardedKV shards k/v leaves only; got {name!r} at {path} "
-                "(ssm/rglru state caches have a different NTP unit and are "
-                "not servable yet)"
+                "(ssm/rglru state caches have channel-block units — use "
+                "repro.reshard.ShardedState with units.cache_unit_resolver)"
             )
 
 
 # ---------------------------------------------------------------------------
-# layouts
+# layouts (planner-backed)
 
-@lru_cache(maxsize=None)
 def head_layout(kvh: int, tp: int, n1: int) -> sm.Layout:
-    """Head -> rank placement of a replica serving at TP degree ``tp``:
-    contiguously balanced over the first ``tp`` live ranks, expressed on the
-    full ``n1``-wide domain axis (ranks >= tp are failed/idle and empty).
+    """Head → rank placement of a replica serving at TP degree ``tp``:
+    the planner's degree layout (contiguously balanced over the first
+    ``tp`` live ranks, expressed on the full ``n1``-wide domain axis).
     ``kvh < tp`` simply leaves some live ranks without a KV head (Megatron
     GQA replicates their weight-side K/V; the cache itself is never
     duplicated)."""
-    assert 1 <= tp <= n1, (tp, n1)
-    return sm.make_layout(sm.sync_assignment(kvh, tp), n1)
+    return degree_layout(kvh, tp, n1)
 
 
 def slots_at(layout: sm.Layout, buf: int) -> np.ndarray:
-    """(n, buf) head id per buffer slot, -1 pad (layout.slots widened to a
-    common ``buf`` so every TP degree shares one buffer geometry)."""
-    assert buf >= layout.max_count
-    out = np.full((layout.n, buf), -1, dtype=np.int64)
-    out[:, : layout.max_count] = layout.slots
-    return out
+    """(n, buf) head id per buffer slot, -1 pad (`reshard.widened_slots`)."""
+    return widened_slots(layout, buf)
 
 
 @lru_cache(maxsize=None)
@@ -87,8 +73,10 @@ def head_reshard_tables(kvh: int, tp_from: int, tp_to: int,
     """Static all-to-all tables moving every KV head from its ``tp_from``
     placement to its ``tp_to`` placement (buf = kvh: the TP=1 worst case,
     so no reallocation on any transition)."""
-    return sm.reshard_tables(
-        head_layout(kvh, tp_from, n1), head_layout(kvh, tp_to, n1), kvh
+    return planner.tables(
+        planner.sync_key(kvh, n1, tp_from),
+        planner.sync_key(kvh, n1, tp_to),
+        kvh,
     )
 
 
@@ -96,15 +84,20 @@ def head_reshard_tables(kvh: int, tp_from: int, tp_to: int,
 # leaf ops  (dense leaf: (..., T, kvh, hd) — head axis at -2, as produced by
 # models.attention.init_kv_cache under any stack of leading axes)
 
+_KV_AXIS = -2
+
+
+def _kv_spec(kvh: int) -> UnitSpec:
+    return UnitSpec("kv_head", kvh, axis=_KV_AXIS)
+
+
 def shard_leaf(dense, layout: sm.Layout, buf: int):
     """(..., T, kvh, hd) -> (n1, buf, ..., T, hd); pad slots exact zeros."""
-    kvh = dense.shape[-2]
+    kvh = dense.shape[_KV_AXIS]
     assert kvh == layout.k, (kvh, layout.k)
-    x = jnp.moveaxis(dense, -2, 0)                       # (kvh, ..., T, hd)
-    xp = jnp.concatenate(
-        [x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0
-    )                                                    # index kvh -> zeros
-    slots = slots_at(layout, buf)
+    x = jnp.moveaxis(dense, _KV_AXIS, 0)                 # (kvh, ..., T, hd)
+    xp = rse.zero_pad_slot(x, axis=0)                    # index kvh -> zeros
+    slots = widened_slots(layout, buf)
     idx = jnp.asarray(np.where(slots >= 0, slots, kvh))
     return xp[idx]                                       # (n1, buf, ...)
 
@@ -115,38 +108,14 @@ def gather_leaf(sharded, layout: sm.Layout):
     asg = jnp.asarray(layout.assignment)
     slot = jnp.asarray(layout.local_slot)
     x = sharded[asg, slot]                               # (kvh, ..., T, hd)
-    return jnp.moveaxis(x, 0, -2)
+    return jnp.moveaxis(x, 0, _KV_AXIS)
 
 
 def reshard_leaf(x, tables: sm.ReshardTables, *, use_kernel: bool = False):
     """Head-redistribution all-to-all on one sharded leaf (n1, buf, *rest):
-    the KV analogue of `core.reshard.reshard`, with the replica's rank loop
-    unrolled host-side. ``use_kernel`` routes the per-rank send-bucket
-    gather through the `kernels.reshard_pack` Pallas kernel."""
-    n1, buf = x.shape[:2]
-    rest = x.shape[2:]
-    assert buf == tables.buf, (buf, tables.buf)
-    xp = jnp.concatenate(
-        [x, jnp.zeros((n1, 1) + rest, x.dtype)], axis=1
-    )                                                    # slot buf -> zeros
-    send_idx = jnp.asarray(tables.send_idx)              # (n, n, s_max)
-    if use_kernel:
-        from repro.kernels import ops
-
-        flat = xp.reshape(n1, buf + 1, -1)
-        send = jnp.stack(
-            [ops.reshard_pack(flat[r], send_idx[r]) for r in range(n1)]
-        ).reshape(n1, n1, tables.s_max, *rest)
-    else:
-        send = jax.vmap(lambda xr, ir: xr[ir])(xp, send_idx)
-    recv = jnp.swapaxes(send, 0, 1)                      # recv_r[j] = send_j[r]
-
-    out = jax.vmap(lambda xr, ir: xr[ir])(xp, jnp.asarray(tables.stay_idx))
-    flat_recv = recv.reshape(n1, n1 * tables.s_max, *rest)
-    recv_slots = jnp.asarray(tables.recv_idx).reshape(n1, -1)
-    return jax.vmap(
-        lambda o, s, v: o.at[s].set(v, mode="drop")      # pad (== buf) drops
-    )(out, recv_slots, flat_recv)
+    the engine's `reshard_ranks` (rank loop unrolled host-side;
+    ``use_kernel`` routes the send-bucket gather through Pallas)."""
+    return rse.reshard_ranks(x, tables, use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +143,7 @@ def attend_from_sharded(q, sk, sv, layout: sm.Layout, mask):
     n1, buf = sk.shape[:2]
     b, kvh, g, sq, hd = q.shape
     t = sk.shape[-2]
-    slots = slots_at(layout, buf).reshape(-1)            # (n1*buf,)
+    slots = widened_slots(layout, buf).reshape(-1)        # (n1*buf,)
     q_sl = q[:, jnp.asarray(np.maximum(slots, 0))]       # (B, n1*buf, g, Sq, hd)
     # (n1, buf, B, T, hd) -> (B, T, n1*buf, hd): slot axis plays "head"
     k_sl = jnp.moveaxis(sk.reshape(n1 * buf, b, t, hd), 0, 2)
@@ -189,84 +158,31 @@ def attend_from_sharded(q, sk, sv, layout: sm.Layout, mask):
 # ---------------------------------------------------------------------------
 # whole-cache container
 
-class ShardedKV:
-    """The sharded KV cache of ONE serving replica.
-
-    Owns every ``k``/``v`` leaf of a model cache pytree (any stack of
-    leading axes — `Model.init_slot_cache` puts the slot axis first) in
-    head-sharded ``(n1, buf, ..., T, hd)`` rank buffers, and reshards them
-    in place when the replica's TP degree changes (`apply_tp`, the
-    transition the engine runs mid-decode); `gather()`/`update()` convert
-    to/from the dense view (a bit-exact identity pair). Non-KV cache leaves
-    (ssm ``h``/``conv`` state) are rejected — their NTP unit is the channel
-    block, not the head (open item)."""
+class ShardedKV(ShardedState):
+    """The sharded KV cache of ONE serving replica — the attention-only
+    specialization of `repro.reshard.ShardedState` (every leaf a ``k``/``v``
+    tensor with GQA-head units at axis -2, buf = kvh so every TP degree
+    shares one geometry). Kept for the KV-specific validation/ergonomics;
+    caches that also carry recurrent state go through `ShardedState` with
+    `units.cache_unit_resolver`."""
 
     def __init__(self, cache, kvh: int, n1: int, *, tp: Optional[int] = None,
                  use_kernel: bool = False):
-        self.kvh, self.n1 = kvh, n1
-        self.buf = kvh                                   # TP=1 worst case
-        self._tp = n1 if tp is None else tp
-        self.use_kernel = use_kernel
         validate_kv_cache(cache)
-        self._tree = jax.tree.map(
-            lambda x: shard_leaf(x, self.layout, self.buf), cache
+        self.kvh = kvh
+        self.buf = kvh                                   # TP=1 worst case
+        spec = _kv_spec(kvh)
+        super().__init__(
+            cache, lambda path: spec, n1, tp=tp, use_kernel=use_kernel
         )
-        self.last_reshard: Dict[str, Any] = {}
-
-    # -------------------------------------------------------------- views
-
-    @property
-    def tp(self) -> int:
-        return self._tp
 
     @property
     def layout(self) -> sm.Layout:
-        return head_layout(self.kvh, self._tp, self.n1)
-
-    @property
-    def sharded(self):
-        """The raw (n1, buf, ...) rank buffers (tests / introspection)."""
-        return self._tree
-
-    def gather(self):
-        """Dense cache pytree view (..., T, kvh, hd) for the decode step."""
-        return jax.tree.map(lambda x: gather_leaf(x, self.layout), self._tree)
-
-    def update(self, cache) -> None:
-        """Re-scatter a dense cache (the decode step's output) into the
-        current rank layout."""
-        self._tree = jax.tree.map(
-            lambda x: shard_leaf(x, self.layout, self.buf), cache
-        )
-
-    # ------------------------------------------------------------- reshard
+        return head_layout(self.kvh, self.tp, self.n1)
 
     def apply_tp(self, new_tp: int) -> Dict[str, Any]:
-        """Reshard every leaf from the current layout to the ``new_tp``
-        layout (downward on failure, upward on recovery) and return the
-        traffic stats of the move."""
-        assert 1 <= new_tp <= self.n1, (new_tp, self.n1)
-        if new_tp == self._tp:
-            self.last_reshard = {"tp_from": self._tp, "tp_to": new_tp,
-                                 "moved_heads_per_rank": 0, "bytes_moved": 0}
-            return self.last_reshard
-        tables = head_reshard_tables(self.kvh, self._tp, new_tp, self.n1)
-        bytes_moved = 0
-        n_moved = int((np.asarray(tables.send_idx) != tables.pad).sum())
-        new_leaves: List = []
-        leaves, treedef = jax.tree_util.tree_flatten(self._tree)
-        for leaf in leaves:
-            new_leaves.append(
-                reshard_leaf(leaf, tables, use_kernel=self.use_kernel)
-            )
-            per_head = int(np.prod(leaf.shape[2:])) * leaf.dtype.itemsize
-            bytes_moved += n_moved * per_head
-        self._tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
-        self.last_reshard = {
-            "tp_from": self._tp,
-            "tp_to": new_tp,
-            "moved_heads_per_rank": int(tables.moved_units_per_rank().max()),
-            "bytes_moved": bytes_moved,
-        }
-        self._tp = new_tp
-        return self.last_reshard
+        stats = super().apply_tp(new_tp)
+        # legacy key: PR-3 call sites/logs count "heads", the engine "units"
+        stats["moved_heads_per_rank"] = stats["moved_units_per_rank"]
+        self.last_reshard = stats
+        return stats

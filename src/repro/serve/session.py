@@ -8,9 +8,10 @@ and the fault-tolerance policy deciding what a degraded replica does:
 * ``drop``   — the baseline: any failure kills the whole replica (all
   in-flight requests preempted, cache lost); it returns only when its
   domain is fully repaired. The serving twin of training DP_DROP.
-* ``ntp``    — the replica keeps serving at reduced TP: KV cache resharded
-  in place (`kv_shard`), decode slowed by the head-quantized
-  `stage_slowdown`, slot pool shrunk ∝ surviving ranks.
+* ``ntp``    — the replica keeps serving at reduced TP: per-request state
+  (KV cache and/or SSM/rgLRU recurrent state) resharded in place through
+  the unified engine (`repro.reshard.ShardedState`), decode slowed by the
+  unit-quantized `stage_slowdown`, slot pool shrunk ∝ surviving ranks.
 * ``ntp_pw`` — NTP plus the paper's §3.2 power boost: survivors run up to
   the rack cap (`policies.boosted_operating_point`), erasing most or all of
   the slowdown at full slot shrinkage only.
@@ -74,16 +75,17 @@ class ServeSession:
         self._cfg = cfg
         self._policy = policy
         self._power = power_model
-        # attention quantizes at kv-head granularity (the serving analogue
-        # of NTPSession._decide's n_kv_groups geometry), with the analytic
-        # model's decode-time FLOP split — same blend as SERVE_GEOM, only
-        # the head count comes from the live model
+        # decode quantizes at the model's COARSEST partition-unit family
+        # (KV heads / SSD heads / rgLRU blocks — reshard.units), with the
+        # analytic model's decode-time FLOP split — same blend as
+        # SERVE_GEOM, only the unit count comes from the live model
         from dataclasses import replace as _replace
 
+        from repro.reshard.units import serve_unit_count
         from repro.serve.router import SERVE_GEOM
 
         self._geom = geom or _replace(
-            SERVE_GEOM, n_heads=cfg.n_kv_heads, local_batch=slots
+            SERVE_GEOM, n_heads=serve_unit_count(cfg), local_batch=slots
         )
         model = build_model(cfg, remat=False)
         if params is None:
@@ -172,15 +174,12 @@ class ServeSession:
         `orchestrator.TraceRunner`'s debt) — otherwise a fully-dead replica
         would revive while its trace still has every GPU down, inflating
         live goodput relative to the analytic replay of the same trace."""
-        from repro.runtime.events import RecoveryEvent
+        from repro.runtime.events import RecoveryEvent, resolve_serving_domain
 
-        if event.domain is None:
-            # serving replicas are domain-pinned 1:1 — replica IS domain
-            event = type(event)(step=event.step, domain=event.replica,
-                                n_gpus=event.n_gpus)
+        # domain-pinned addressing (replica= aliases domain 1:1) is
+        # validated/normalized ONCE, in runtime.events
+        event = resolve_serving_domain(event, self._health.n_domains)
         dom = event.domain
-        if not 0 <= dom < self._health.n_domains:
-            raise ValueError(f"no domain {dom}")
         if isinstance(event, RecoveryEvent):
             debt = self._repair_debt.get(dom, 0)
             absorbed = min(debt, event.n_gpus)

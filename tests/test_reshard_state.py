@@ -1,0 +1,143 @@
+"""Generic `ShardedState` over recurrent caches (ISSUE 4): the channel-block
+UnitSpecs (SSD heads, rgLRU gate blocks) make SSM/Griffin state reshardable
+with the same invariants the KV property suite pins for heads — shard∘gather
+identity, TP-chain content preservation, pad hygiene, replicated-tail
+(SSM conv B/C columns) integrity, and kernel-route parity."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RGLRUSpec, SSMSpec
+from repro.models.transformer import build_model
+from repro.reshard import (
+    ShardedState, UnitSpec, arch_unit_counts, cache_unit_resolver,
+    serve_unit_count,
+)
+
+SSM_CFG = ArchConfig(
+    arch_id="reshard-state-ssm", family="ssm", citation="test",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0,
+    vocab_size=64, layer_pattern=("ssm",),
+    ssm=SSMSpec(d_state=16, head_dim=16, expand=2, d_conv=4, chunk=16),
+    use_rope=False, tie_embeddings=True,
+)
+GRIFFIN_CFG = ArchConfig(
+    arch_id="reshard-state-griffin", family="hybrid", citation="test",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=64, layer_pattern=("rglru", "rglru", "attn_sw"), window=32,
+    rglru=RGLRUSpec(d_conv=4, block_width=16), tie_embeddings=True,
+)
+N1 = 4
+
+
+def _rand_cache(cfg, slots=3, max_len=16, seed=0):
+    m = build_model(cfg, remat=False)
+    cache = m.init_slot_cache(slots, max_len, jnp.float32)
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), cache
+    )
+
+
+def _trees_equal(a, b):
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))), a, b
+    )))
+
+
+def test_unit_counts_and_geometry():
+    assert arch_unit_counts(SSM_CFG) == {"ssm_head": 8}       # d_inner 128 / 16
+    assert serve_unit_count(SSM_CFG) == 8
+    counts = arch_unit_counts(GRIFFIN_CFG)
+    assert counts == {"rglru_block": 4, "kv_head": 2}         # di 64 / 16
+    assert serve_unit_count(GRIFFIN_CFG) == 2                 # coarsest pins it
+
+
+@pytest.mark.parametrize("cfg", [SSM_CFG, GRIFFIN_CFG],
+                         ids=lambda c: c.arch_id)
+def test_shard_gather_identity(cfg):
+    cache = _rand_cache(cfg)
+    state = ShardedState(cache, cache_unit_resolver(cfg), N1)
+    assert _trees_equal(cache, state.gather())
+
+
+@pytest.mark.parametrize("cfg", [SSM_CFG, GRIFFIN_CFG],
+                         ids=lambda c: c.arch_id)
+@pytest.mark.parametrize("chain", [(3, 1, 2, 4), (2, 4), (1, 3, 1, 4)])
+def test_tp_chain_preserves_state(cfg, chain):
+    cache = _rand_cache(cfg, seed=hash(chain) % 2 ** 16)
+    state = ShardedState(cache, cache_unit_resolver(cfg), N1)
+    for tp in chain:
+        st = state.apply_tp(tp)
+        assert st["tp_to"] == tp and state.tp == tp
+        assert _trees_equal(cache, state.gather()), (cfg.arch_id, chain, tp)
+    if chain[-1] != N1:
+        state.apply_tp(N1)
+    assert _trees_equal(cache, state.gather())
+
+
+def test_transition_accounting_and_fusion():
+    cache = _rand_cache(GRIFFIN_CFG)
+    state = ShardedState(cache, cache_unit_resolver(GRIFFIN_CFG), N1)
+    st = state.apply_tp(2)
+    assert st["bytes_moved"] > 0
+    # fused: one message per (src, dst) pair across BOTH unit families
+    # (rglru blocks and kv heads), never one per tensor
+    n_leaves = len(jax.tree.leaves(cache))
+    assert 0 < st["messages"] < n_leaves
+    st2 = state.apply_tp(2)
+    assert st2["bytes_moved"] == 0 and st2["messages"] == 0
+
+
+def test_ssm_conv_tail_never_moves():
+    """The conv state's trailing 2·d_state B/C columns are replicated — a
+    TP transition must neither move nor corrupt them, even when NaN'd
+    (they are outside the unit span, so the engine never touches them)."""
+    cache = _rand_cache(SSM_CFG)
+    s = SSM_CFG.ssm
+    tail = 2 * s.d_state
+
+    def poison(path, x):
+        name = getattr(path[-1], "key", None)
+        if name == "conv":
+            return x.at[..., -tail:].set(jnp.nan)
+        return x
+
+    poisoned = jax.tree_util.tree_map_with_path(poison, cache)
+    state = ShardedState(poisoned, cache_unit_resolver(SSM_CFG), N1)
+    state.apply_tp(2)
+    state.apply_tp(3)
+    got = state.gather()
+    flat = jax.tree_util.tree_flatten_with_path(got)[0]
+    for path, leaf in flat:
+        if getattr(path[-1], "key", None) == "conv":
+            assert bool(jnp.isnan(leaf[..., -tail:]).all())   # tail intact
+            assert bool(jnp.isfinite(leaf[..., :-tail]).all())  # units clean
+
+
+def test_kernel_route_parity_on_recurrent_state():
+    cache = _rand_cache(SSM_CFG, seed=9)
+    a = ShardedState(cache, cache_unit_resolver(SSM_CFG), N1)
+    b = ShardedState(cache, cache_unit_resolver(SSM_CFG), N1, use_kernel=True)
+    for tp in (2, 3):
+        a.apply_tp(tp)
+        b.apply_tp(tp)
+    assert _trees_equal(a.gather(), b.gather())
+
+
+def test_resolver_rejects_unknown_state_leaves():
+    res = cache_unit_resolver(SSM_CFG)
+    bogus = {"layers": ({"mystery": jnp.zeros((2, 3))},)}
+    flat = jax.tree_util.tree_flatten_with_path(bogus)[0]
+    with pytest.raises(ValueError, match="no UnitSpec"):
+        res(flat[0][0])
+
+
+def test_unit_spec_geometry_validated():
+    cache = {"layers": ({"h": jnp.zeros((2, 5))},)}   # 5 ≠ k·unit + tail
+    bad = UnitSpec("rglru_block", 2, axis=-1, unit=2)
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    with pytest.raises(AssertionError):
+        ShardedState(cache, lambda p: bad, N1)

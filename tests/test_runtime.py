@@ -14,8 +14,28 @@ from repro.core.nonuniform import FailurePlan
 from repro.optim import AdamWConfig, adamw, sgd
 from repro.runtime import (
     ClusterHealth, DeadReplicaError, FailureEvent, Mode, RecoveryEvent,
-    plan_from_health, power_policy, schedule_from_trace,
+    plan_from_health, power_policy, resolve_serving_domain,
+    schedule_from_trace,
 )
+
+
+# ---------------------------------------------------------------------------
+# serving event addressing (ISSUE 4 satellite: validated ONCE, here)
+
+def test_resolve_serving_domain_aliases_replica_one_to_one():
+    ev = resolve_serving_domain(FailureEvent(replica=2, n_gpus=3), 4)
+    assert isinstance(ev, FailureEvent)
+    assert ev.domain == 2 and ev.replica is None and ev.n_gpus == 3
+    rv = resolve_serving_domain(RecoveryEvent(domain=1), 4)
+    assert isinstance(rv, RecoveryEvent) and rv.domain == 1
+
+
+@pytest.mark.parametrize("bad", [-1, 4, 99])
+@pytest.mark.parametrize("field", ["domain", "replica"])
+def test_resolve_serving_domain_rejects_out_of_range(bad, field):
+    ev = FailureEvent(**{field: bad})
+    with pytest.raises(ValueError, match=rf"domain {bad}.*valid ids: 0\.\.3"):
+        resolve_serving_domain(ev, 4)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,24 @@ def _cfg(pattern=("attn",), kvh=4, **kw):
 CFG_FULL = _cfg()                       # MHA-granular full attention
 CFG_GQA_SW = _cfg(("attn_sw", "attn"), kvh=2)   # GQA + sliding-window mix
 
+# recurrent-state archs (ISSUE 4): SSD heads / rgLRU gate blocks are the
+# partition units — served through the generic reshard.ShardedState
+from repro.configs.base import RGLRUSpec, SSMSpec  # noqa: E402
+
+CFG_SSM = ArchConfig(
+    arch_id="serve-test-ssm", family="ssm", citation="test",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0,
+    vocab_size=128, layer_pattern=("ssm",),
+    ssm=SSMSpec(d_state=16, head_dim=16, expand=2, d_conv=4, chunk=16),
+    use_rope=False, tie_embeddings=True,
+)
+CFG_GRIFFIN = ArchConfig(
+    arch_id="serve-test-griffin", family="hybrid", citation="test",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=128, layer_pattern=("rglru", "rglru", "attn_sw"), window=64,
+    rglru=RGLRUSpec(d_conv=4, block_width=16), tie_embeddings=True,
+)
+
 
 def _requests(n, rng, *, max_new=8, lo=4, hi=14, stagger=2):
     out = []
@@ -89,7 +107,8 @@ def test_continuous_batching_completes_and_reuses_slots():
 # ---------------------------------------------------------------------------
 # the acceptance criterion: mid-decode failure == uninterrupted reference
 
-@pytest.mark.parametrize("cfg", [CFG_FULL, CFG_GQA_SW], ids=lambda c: c.arch_id)
+@pytest.mark.parametrize("cfg", [CFG_FULL, CFG_GQA_SW, CFG_SSM],
+                         ids=lambda c: c.arch_id)
 @pytest.mark.parametrize("policy", ["ntp", "ntp_pw"])
 def test_mid_decode_failure_token_equivalence(cfg, policy):
     """FailureEvents injected between decode steps (TP 4→3→2, then repairs
@@ -111,6 +130,27 @@ def test_mid_decode_failure_token_equivalence(cfg, policy):
     assert set(got) == set(want) and len(got) == 8
     for rid in want:
         assert got[rid] == want[rid], (rid, got[rid], want[rid])
+
+
+def test_griffin_failover_and_preemption_token_equivalence():
+    """Mixed rgLRU + sliding-window attention (RecurrentGemma pattern):
+    gate blocks AND KV heads reshard through fail→repair in the same fused
+    transition; a TP-1 squeeze forces preemption, and the recurrent
+    re-prefill resumes bit-identically (f32 state)."""
+    rng = np.random.default_rng(7)
+    events = [
+        (2, FailureEvent(domain=0)),
+        (6, FailureEvent(domain=0, n_gpus=2)),      # TP 1: capacity squeeze
+        (14, RecoveryEvent(domain=0, n_gpus=2)),
+        (18, RecoveryEvent(domain=0)),
+    ]
+    _, faulty = _run(CFG_GRIFFIN, events, _requests(6, rng), policy="ntp")
+    rng = np.random.default_rng(7)
+    _, ref = _run(CFG_GRIFFIN, [], _requests(6, rng), policy="ntp")
+    got = {r.rid: list(r.generated) for r in faulty.completed}
+    want = {r.rid: list(r.generated) for r in ref.completed}
+    assert got == want and len(got) == 6
+    assert faulty.goodput()["preemptions"] >= 1
 
 
 def test_tokens_match_raw_dense_model():

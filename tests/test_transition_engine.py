@@ -1,0 +1,174 @@
+"""Unified reshard engine (ISSUE 4): the DIRECT packed→packed transition
+must be bit-exact against the retired dense round-trip — which survives
+here, composed from `pack_params ∘ unpack_params`, as the oracle — for
+params AND AdamW-moment-shaped trees across random fail/repair chains; and
+its numpy-twin transfer accounting must prove that ONLY units whose src
+rank differs from their dst rank generate traffic, fused into one message
+per (replica, src, dst) pair."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntp_train as nt
+from repro.core.nonuniform import FailurePlan
+from repro.reshard import (
+    expected_transfer, ntp_unit_specs, plan_cache_info,
+    replica_transition_plans, transition_plan, transition_trees,
+)
+
+CFG = nt.NTPModelConfig(d_model=32, n_kv_groups=4, q_per_kv=1, head_dim=8,
+                        d_ff=256, unit_rows=32, n_layers=2, vocab=64)
+CFG_MOE = nt.NTPModelConfig(d_model=32, n_kv_groups=4, q_per_kv=1, head_dim=8,
+                            d_ff=64, unit_rows=32, n_layers=1, vocab=64,
+                            n_experts=8, top_k=2)
+
+
+def _dense_roundtrip_oracle(cfg, packed, old, new):
+    """The retired transition path, kept as the test oracle: recover the
+    canonical tree from replica 0 of the old packing, re-pack under new."""
+    return nt.pack_params(cfg, nt.unpack_params(cfg, packed, old), new)
+
+
+def _random_tree(cfg, seed):
+    """A params-shaped tree of random values (stands in for params or an
+    AdamW moment — both transit identically)."""
+    return nt.init_canonical(cfg, jax.random.PRNGKey(seed))
+
+
+def _assert_trees_equal(a, b, ctx):
+    for pa, (la, lb) in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0],
+        zip(jax.tree.leaves(a), jax.tree.leaves(b)),
+    ):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), (pa[0], ctx)
+
+
+def _check_chain(cfg, plans, seed=0):
+    """Walk a fail/repair chain, asserting direct == oracle at EVERY hop
+    for a params tree and two moment trees riding the same fused buckets."""
+    trees = [nt.pack_params(cfg, _random_tree(cfg, seed + i), plans[0])
+             for i in range(3)]
+    for old, new in zip(plans, plans[1:]):
+        moved, stats = transition_trees(cfg, trees, old, new)
+        for t, m in zip(trees, moved):
+            _assert_trees_equal(
+                _dense_roundtrip_oracle(cfg, t, old, new), m, (old, new)
+            )
+        _check_accounting(cfg, stats, old, new, n_trees=len(trees))
+        trees = moved
+
+
+def _check_accounting(cfg, stats, old, new, *, n_trees):
+    """The numpy twin's ledger must match the transfer matrices exactly:
+    every bucketed unit has src_rank != dst_rank (apply_plan asserts the
+    set is pure), totals match the off-diagonals, and buckets fuse to one
+    message per (replica, src, dst) pair."""
+    specs = ntp_unit_specs(cfg)
+    leaves_per_family = {"kv_group": 4 * cfg.n_layers}
+    mlp_kind = "expert" if cfg.is_moe else "rows128"
+    leaves_per_family[mlp_kind] = 2 * cfg.n_layers
+    if old == new:
+        assert stats.moved_units == 0 and stats.messages == 0
+        return
+    want_moved = 0
+    want_pairs = set()
+    for spec in set(specs.values()):
+        for d, plan in enumerate(replica_transition_plans(spec.k, old, new)):
+            off = plan.transfer - np.diag(np.diag(plan.transfer))
+            want_moved += int(off.sum()) * leaves_per_family[spec.kind] * n_trees
+            want_pairs |= {(d,) + p for p in plan.pairs}
+    assert stats.moved_units == want_moved, (old, new)
+    assert stats.messages == len(want_pairs) == len(stats.per_pair)
+    assert set(stats.per_pair) == want_pairs
+    # and the family-level view agrees with expected_transfer
+    exp = expected_transfer(cfg, old, new)
+    per_leaf = {
+        name: int((m - np.diag(np.diag(m))).sum()) for name, m in exp.items()
+    }
+    n_leaf_copies = {"wq": 1, "wk": 1, "wv": 1, "wo": 1, "A": 1, "B": 1}
+    total = sum(per_leaf[n] * n_leaf_copies[n] for n in per_leaf)
+    assert want_moved == total * cfg.n_layers * n_trees
+
+
+CHAINS = [
+    [(4, 4), (3, 4), (2, 4), (3, 4), (4, 4)],              # fail→fail→repair→repair
+    [(4, 4, 4), (4, 4, 4), (2, 3, 4), (1, 4, 4), (4, 4, 4)],
+    [(2, 2), (1, 2), (2, 2)],
+]
+
+
+@pytest.mark.parametrize("chain", CHAINS, ids=lambda c: "→".join(map(str, c)))
+def test_direct_transition_equals_dense_roundtrip(chain):
+    n1 = max(chain[0])
+    plans = [FailurePlan(n1=n1, replica_tp=tp) for tp in chain]
+    _check_chain(CFG, plans)
+
+
+def test_direct_transition_moe_expert_units():
+    plans = [FailurePlan(n1=4, replica_tp=tp)
+             for tp in [(4, 4), (2, 4), (4, 4)]]
+    _check_chain(CFG_MOE, plans)
+
+
+def test_identity_transition_is_copy_not_alias():
+    plan = FailurePlan(n1=4, replica_tp=(3, 4))
+    packed = nt.pack_params(CFG, _random_tree(CFG, 0), plan)
+    (out,), stats = transition_trees(CFG, [packed], plan, plan)
+    _assert_trees_equal(packed, out, "identity")
+    assert stats.moved_units == 0 and stats.messages == 0
+    # donated-step-input safety: fresh buffers, never aliases
+    for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(out)):
+        assert a is not b
+
+
+def test_planner_lru_cache_reuses_plans():
+    a = transition_plan(("comp", 8, 4, 4, 3), ("comp", 8, 4, 3, 3), 3, 3)
+    b = transition_plan(("comp", 8, 4, 4, 3), ("comp", 8, 4, 3, 3), 3, 3)
+    assert a is b
+    assert plan_cache_info()["transition_plan"]["hits"] >= 1
+
+
+def test_stays_never_travel():
+    """Every per_pair key is (replica, src, dst) with src != dst — the
+    direct route cannot put a staying unit on the network."""
+    old = FailurePlan(n1=4, replica_tp=(4, 4))
+    new = FailurePlan(n1=4, replica_tp=(2, 4))
+    packed = nt.pack_params(CFG, _random_tree(CFG, 1), old)
+    _, stats = transition_trees(CFG, [packed], old, new)
+    assert stats.per_pair and all(s != r for _, s, r in stats.per_pair)
+    assert stats.moved_units > 0
+    # O(moved units), not O(model): strictly less host traffic than the
+    # dense round-trip's full-tree touch
+    assert stats.bytes_moved < stats.dense_bytes
+
+
+# ---------------------------------------------------------------------------
+# the hypothesis property (CI: pip install -e .[dev])
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def _chain_case(draw):
+        n1 = draw(st.integers(2, 4))
+        d = draw(st.integers(2, 3))
+        hops = draw(st.integers(1, 4))
+        chain = [(n1,) * d]
+        for _ in range(hops):
+            chain.append(tuple(
+                draw(st.integers(1, n1)) for _ in range(d)
+            ))
+        seed = draw(st.integers(0, 2 ** 16))
+        return n1, chain, seed
+
+    @settings(max_examples=25, deadline=None)
+    @given(_chain_case())
+    def test_random_chain_direct_equals_oracle(case):
+        n1, chain, seed = case
+        plans = [FailurePlan(n1=n1, replica_tp=tp) for tp in chain]
+        _check_chain(CFG, plans, seed=seed)
+
+except ImportError:  # pragma: no cover — dev dependency
+    pass
