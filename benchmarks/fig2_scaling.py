@@ -1,6 +1,12 @@
 """Fig. 2: effect of scale-up-domain size / TP cap on per-GPU throughput
-when scaling the 480B workload (analytic perf model)."""
-from repro.core.perf_model import Hardware, Workload, best_config
+when scaling the 480B workload (analytic perf model), plus the
+measured-vs-analytic cross-check of the live runtime's slowest-stage
+slowdown rule against `perf_model.staged_iteration_time` (DESIGN.md §2.6)."""
+from repro.core.perf_model import (
+    Hardware, Parallel, Workload, best_config, iteration_time,
+    staged_iteration_time,
+)
+from repro.core.policies import WorkloadGeometry, staged_rel_iter_times
 
 
 def run():
@@ -22,4 +28,36 @@ def run():
                            f"bubble={r['pp_bubble']/r['total']:.2f} "
                            "(paper: NVL8 vs NVL32 gap grows with scale)",
             })
+
+    # ---- staged cross-check: runtime slowdown rule vs analytic perf model.
+    # A TP32×PP8 replica with ONE stage at reduced TP: the runtime predicts
+    # rel iter time from `staged_rel_iter_times` (head-quantized slowdown,
+    # full batch kept — the step-metrics number); the perf model predicts it
+    # as staged_iteration_time/healthy (flops+comm terms). Both implement
+    # the slowest-stage gating, so they must agree to model error (<~10%).
+    xcheck_gpus = 32_768
+    hw = Hardware(domain_size=32)
+    par = Parallel(tp=32, pp=8, dp=xcheck_gpus // (32 * 8))
+    geom = WorkloadGeometry(n_heads=128, local_batch=8)
+    healthy = iteration_time(hw, wl, par)["total"]
+    for tp_red in (30, 28):
+        stage_tps = (tp_red,) + (32,) * (par.pp - 1)
+        stage_rels = staged_rel_iter_times(
+            [list(stage_tps)], 32, geom,
+            local_batches=[geom.local_batch], local_batch=geom.local_batch,
+        )
+        runtime_rel = max(stage_rels)
+        analytic_rel = staged_iteration_time(hw, wl, par, stage_tps)["total"] / healthy
+        rows.append({
+            "name": f"fig2/xcheck/tp{tp_red}of32_pp8/runtime_rel",
+            "value": round(runtime_rel, 4),
+            "derived": f"per-stage rels {[round(r, 3) for r in stage_rels]} "
+                       "(slowest stage gates)",
+        })
+        rows.append({
+            "name": f"fig2/xcheck/tp{tp_red}of32_pp8/analytic_rel",
+            "value": round(analytic_rel, 4),
+            "derived": f"staged_iteration_time(min={tp_red})/healthy; "
+                       f"gap vs runtime {abs(analytic_rel - runtime_rel):.4f}",
+        })
     return rows

@@ -7,7 +7,13 @@ import numpy as np
 
 from repro.core.availability import ClusterSpec
 from repro.core.failure_model import FailureTraceConfig, simulate_events
-from repro.core.policies import cluster_throughput
+from repro.core.perf_model import (
+    Hardware, Parallel, Workload, iteration_time, staged_iteration_time,
+)
+from repro.core.policies import (
+    WorkloadGeometry, cluster_throughput, staged_rel_iter_times,
+)
+from repro.core.resource_manager import pack_replicas
 
 SAMPLE_EVERY_H = 6.0
 
@@ -44,4 +50,46 @@ def run():
             "value": round(goodputs["ntp_pw"] - goodputs["dpdrop"], 5),
             "derived": "goodput NTP-PW recovers over DP-DROP on the same trace",
         })
+
+        # ---- measured-vs-analytic cross-check (DESIGN.md §2.6): treat each
+        # replica's 8 domains as its 8 PP stages (exactly the live runtime's
+        # per-(replica, stage) health). At every sample, take the WORST
+        # replica's stage TPs and predict its relative iteration time at
+        # FULL batch two ways: the runtime's slowest-stage slowdown rule
+        # (staged_rel_iter_times — the step-metrics number) and the perf
+        # model's staged_iteration_time breakdown. Trace-means must track.
+        hw = Hardware(domain_size=spec.domain_size)
+        wl = Workload()
+        dpr = spec.domains_per_replica
+        n_rep = cfg.n_domains // dpr
+        par = Parallel(tp=spec.domain_size, pp=dpr, dp=n_rep)
+        geom = WorkloadGeometry(n_heads=128, local_batch=8)
+        healthy = iteration_time(hw, wl, par)["total"]
+        runtime_rels, analytic_rels = [], []
+        for counts in counts_t:
+            asg = pack_replicas(counts, spec.domain_size, dpr)
+            worst = min(asg, key=lambda a: a.tp)
+            stage_tps = tuple(
+                int(spec.domain_size - f) for f in worst.failed
+            )
+            if min(stage_tps) == 0:
+                continue  # dead replica: outside the NTP regime
+            rels = staged_rel_iter_times(
+                [stage_tps], spec.domain_size, geom,
+                local_batches=[geom.local_batch],
+                local_batch=geom.local_batch,
+            )
+            runtime_rels.append(max(rels))
+            analytic_rels.append(
+                staged_iteration_time(hw, wl, par, stage_tps)["total"] / healthy
+            )
+        for name, vals in (("runtime_rel", runtime_rels),
+                           ("analytic_rel", analytic_rels)):
+            rows.append({
+                "name": f"fig4e2e/rate{mult:g}x/xcheck/{name}",
+                "value": round(float(np.mean(vals)), 5),
+                "derived": "trace-mean worst-replica rel iter time at full "
+                           f"batch ({len(vals)} samples; slowest of "
+                           f"{dpr} stages gates)",
+            })
     return rows

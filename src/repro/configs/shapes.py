@@ -1,8 +1,13 @@
-"""Assigned input shapes (public-pool brief)."""
+"""Assigned input shapes (public-pool brief), plus the pipeline-stage
+geometry helpers shared by the live runtime (`core/ntp_train`,
+`runtime/session`) and the analytic config search (`core/perf_model`):
+stage boundaries are DATA derived here, in one place, so the executable
+stage-partitioned model and the perf model's candidate-PP enumeration can
+never disagree about which PP degrees exist."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)
@@ -11,6 +16,49 @@ class ShapeSpec:
     seq_len: int
     global_batch: int
     kind: str  # 'train' | 'prefill' | 'decode'
+
+
+# ---------------------------------------------------------------------------
+# pipeline-stage geometry (DESIGN.md §2.6)
+
+#: PP degrees the runtime's stage-sequential step supports (powers of two —
+#: the same ladder the paper's Fig. 2 search walks). `candidate_pp` filters
+#: this by the model's layer count; `core.perf_model.best_config` derives its
+#: search space from it instead of a private hard-coded tuple.
+SUPPORTED_PP: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+
+def stage_boundaries(n_layers: int, pp: int) -> Tuple[int, ...]:
+    """Contiguous layer→stage split: ``pp + 1`` boundaries; stage ``s`` owns
+    layers ``[b[s], b[s+1])``. Balanced: the first ``n_layers % pp`` stages
+    take one extra layer (ceil/floor), so no stage is ever empty."""
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
+    if pp > n_layers:
+        raise ValueError(
+            f"pp={pp} exceeds n_layers={n_layers}: a pipeline stage with no "
+            "layers has nothing to compute"
+        )
+    base, extra = divmod(n_layers, pp)
+    bounds = [0]
+    for s in range(pp):
+        bounds.append(bounds[-1] + base + (1 if s < extra else 0))
+    return tuple(bounds)
+
+
+def layer_stages(n_layers: int, pp: int) -> Tuple[int, ...]:
+    """Owning stage per layer (inverse view of `stage_boundaries`)."""
+    bounds = stage_boundaries(n_layers, pp)
+    out = []
+    for s in range(pp):
+        out.extend([s] * (bounds[s + 1] - bounds[s]))
+    return tuple(out)
+
+
+def candidate_pp(n_layers: int, max_pp: int = SUPPORTED_PP[-1]) -> Tuple[int, ...]:
+    """The runtime-supported PP degrees feasible for ``n_layers`` (every
+    stage must own >= 1 layer) up to ``max_pp``."""
+    return tuple(p for p in SUPPORTED_PP if p <= min(n_layers, max_pp))
 
 
 SHAPES: Dict[str, ShapeSpec] = {

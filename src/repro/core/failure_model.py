@@ -58,10 +58,17 @@ class TraceEvents:
 
     def failed_counts_at(self, t_h: float, n_domains: int,
                          domain_size: int) -> np.ndarray:
-        """Concurrently-failed GPUs per domain at time ``t_h`` (clipped to
-        the domain size: a domain cannot lose more GPUs than it has)."""
+        """Concurrently-failed GPUs per domain at time ``t_h``.
+
+        Counts DISTINCT live-failed GPU ids: arrivals are sampled
+        independently of GPU state, so a second failure can land on a GPU
+        whose first failure interval is still open — one dead GPU, two live
+        intervals. Counting intervals would double-count it (and could push
+        a domain past its size); counting distinct ids cannot, but the clip
+        stays as a belt against malformed traces."""
         live = (self.start_h <= t_h) & (self.end_h > t_h)
-        counts = np.bincount(self.domain[live], minlength=n_domains)
+        uniq = np.unique(self.gpu[live])
+        counts = np.bincount(uniq // domain_size, minlength=n_domains)
         return np.minimum(counts, domain_size)
 
 

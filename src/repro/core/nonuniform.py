@@ -61,6 +61,82 @@ class FailurePlan:
 
 
 @dataclass(frozen=True)
+class StagedPlan:
+    """Per-(replica, stage) health of one DP×PP×TP job (DESIGN.md §2.6).
+
+    ``stages[s]`` is the `FailurePlan` of pipeline stage ``s`` over the D
+    replicas: stage s of replica d runs at ``stages[s].replica_tp[d]``. Every
+    stage shares the mesh geometry (same n1, same D); only its failure state
+    differs. A pp=1 job is exactly ``StagedPlan((plan,))`` and degenerates to
+    the plain `FailurePlan` code path everywhere.
+    """
+
+    stages: Tuple[FailurePlan, ...]
+
+    def __post_init__(self):
+        assert len(self.stages) >= 1
+        n1, d = self.stages[0].n1, self.stages[0].d
+        assert all(p.n1 == n1 and p.d == d for p in self.stages), self.stages
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n1(self) -> int:
+        return self.stages[0].n1
+
+    @property
+    def d(self) -> int:
+        return self.stages[0].d
+
+    @property
+    def healthy(self) -> bool:
+        return all(p.healthy for p in self.stages)
+
+    @property
+    def stage_tp(self) -> Tuple[Tuple[int, ...], ...]:
+        """stage_tp[d][s] — surviving TP of replica d's stage s."""
+        return tuple(
+            tuple(p.replica_tp[d] for p in self.stages) for d in range(self.d)
+        )
+
+    @property
+    def effective(self) -> FailurePlan:
+        """The slowest-stage reduction: replica d's usable rate is gated by
+        its worst stage (1F1B — every microbatch crosses every stage), so
+        batch-fraction and slowdown math consume a plain `FailurePlan` whose
+        replica_tp is the per-replica min over stages."""
+        return FailurePlan(
+            n1=self.n1,
+            replica_tp=tuple(
+                min(p.replica_tp[d] for p in self.stages)
+                for d in range(self.d)
+            ),
+        )
+
+    @property
+    def replica_tp(self) -> Tuple[int, ...]:
+        """EFFECTIVE per-replica TP (min over stages — the degree that gates
+        batch fraction and iteration time); per-stage degrees are in
+        `stage_tp`/`stages`. Lets plan consumers that only care about the
+        operating point (TraceRunner history, goodput) read staged and
+        unstaged plans uniformly."""
+        return self.effective.replica_tp
+
+    def replace_stage(self, s: int, plan: FailurePlan) -> "StagedPlan":
+        assert 0 <= s < self.pp
+        return StagedPlan(self.stages[:s] + (plan,) + self.stages[s + 1:])
+
+
+def as_staged(plan) -> StagedPlan:
+    """Coerce a `FailurePlan` (pp=1) or `StagedPlan` to the staged view."""
+    if isinstance(plan, StagedPlan):
+        return plan
+    return StagedPlan((plan,))
+
+
+@dataclass(frozen=True)
 class StackedTables:
     """Per-replica reshard tables stacked over the data axis (jnp arrays),
     indexed inside shard_map by (axis_index('data'), axis_index('model'))."""

@@ -126,6 +126,22 @@ def _plans(cfg: NTPModelConfig, fplan: nu.FailurePlan):
     }
 
 
+def _layer_plans(cfg: NTPModelConfig, fplan):
+    """Per-layer {attn, mlp} weight plans. A plain `FailurePlan` (pp=1)
+    gives every layer the same plan (the `lru_cache`d objects, so this is
+    free); a `StagedPlan` gives each layer its OWN stage's plan — stage
+    boundaries come from `configs.shapes.stage_boundaries` (DESIGN.md §2.6),
+    so a layer's buffers are packed for exactly the scale-up domain that
+    computes it."""
+    staged = nu.as_staged(fplan)
+    if staged.pp == 1:
+        return [_plans(cfg, staged.stages[0])] * cfg.n_layers
+    from repro.configs.shapes import layer_stages
+
+    per_stage = [_plans(cfg, p) for p in staged.stages]
+    return [per_stage[s] for s in layer_stages(cfg.n_layers, staged.pp)]
+
+
 def _pack_unit(w, wp: nu.WeightPlan):
     """Canonical unit-major weight (k, *unit_shape) -> (D, n1*buf, *unit)."""
     k = w.shape[0]
@@ -141,15 +157,17 @@ def _copy(x):
     return jnp.array(x, copy=True)
 
 
-def pack_params(cfg: NTPModelConfig, canonical: Dict, fplan: nu.FailurePlan) -> Dict:
-    plans = _plans(cfg, fplan)
+def pack_params(cfg: NTPModelConfig, canonical: Dict, fplan) -> Dict:
+    """Canonical -> packed unit buffers under ``fplan`` (a `FailurePlan`, or
+    a `StagedPlan` whose stages pack their own layers independently)."""
+    lplans = _layer_plans(cfg, fplan)
     out = {
         "embed": _copy(canonical["embed"]),
         "head": _copy(canonical["head"]),
         "final_norm": _copy(canonical["final_norm"]),
         "layers": [],
     }
-    for lp in canonical["layers"]:
+    for lp, plans in zip(canonical["layers"], lplans):
         out["layers"].append(
             {
                 "ln1": _copy(lp["ln1"]),
@@ -166,9 +184,9 @@ def pack_params(cfg: NTPModelConfig, canonical: Dict, fplan: nu.FailurePlan) -> 
     return out
 
 
-def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan: nu.FailurePlan,
+def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan,
                   replica: int = 0) -> Dict:
-    plans = _plans(cfg, fplan)
+    lplans = _layer_plans(cfg, fplan)
 
     def unp(w, wp):
         arr = np.asarray(w)
@@ -182,7 +200,7 @@ def unpack_params(cfg: NTPModelConfig, packed: Dict, fplan: nu.FailurePlan,
         "final_norm": _copy(packed["final_norm"]),
         "layers": [],
     }
-    for lp in packed["layers"]:
+    for lp, plans in zip(packed["layers"], lplans):
         out["layers"].append(
             {
                 "ln1": _copy(lp["ln1"]),
@@ -213,6 +231,13 @@ def repack_params(cfg: NTPModelConfig, packed: Dict, old: nu.FailurePlan,
     del replica
     if new == old:
         return packed
+    if isinstance(old, nu.StagedPlan) or isinstance(new, nu.StagedPlan):
+        from repro.reshard.transition import transition_staged_trees
+
+        (tree,), _ = transition_staged_trees(
+            cfg, [packed], nu.as_staged(old), nu.as_staged(new)
+        )
+        return tree
     from repro.reshard.transition import transition_params
 
     tree, _ = transition_params(cfg, packed, old, new)
@@ -278,18 +303,26 @@ def _moe_local(lp, h, unit_ids, cfg: NTPModelConfig, model_axis="model"):
     return _psum(z, model_axis)
 
 
-def _forward_local(cfg: NTPModelConfig, params, tokens, sample_mask,
-                   moe_unit_ids=None, axes=("data", "model")):
-    """tokens: (B, S+1) local; sample_mask: (B,) bool. Returns global loss.
-    moe_unit_ids: (U,) this rank's global expert id per slot (MoE mode).
-    axes=(None, None) runs the dense single-logical-copy reference."""
-    data_axis, model_axis = axes
+def _forward_totals(cfg: NTPModelConfig, params, tokens, sample_mask,
+                    moe_unit_ids=None, model_axis="model"):
+    """One forward over all layers; returns the LOCAL (pre-data-psum)
+    (token-loss total, token count) pair so callers can accumulate across
+    microbatches before normalizing (the stage-sequential 1F1B emulation).
+
+    The layer loop IS the pipeline: layers are visited in stage order and the
+    residual stream `x` is the activation handed from stage s to stage s+1
+    (in this emulation every rank plays each stage in turn, so the hand-off
+    is a no-op data dependency rather than a ppermute; DESIGN.md §2.6).
+    ``moe_unit_ids`` is either one (U,) slot-id array shared by every layer
+    (uniform plan) or a per-layer sequence (staged plans differ by stage)."""
     inp, tgt = tokens[:, :-1], tokens[:, 1:]
     x = params["embed"][inp]
-    for lp in params["layers"]:
+    per_layer = isinstance(moe_unit_ids, (list, tuple))
+    for i, lp in enumerate(params["layers"]):
+        uids = moe_unit_ids[i] if per_layer else moe_unit_ids
         x = x + _attn_local(lp, _rms(x, lp["ln1"]), cfg, model_axis)
         if cfg.is_moe:
-            x = x + _moe_local(lp, _rms(x, lp["ln2"]), moe_unit_ids, cfg, model_axis)
+            x = x + _moe_local(lp, _rms(x, lp["ln2"]), uids, cfg, model_axis)
         else:
             x = x + _mlp_local(lp, _rms(x, lp["ln2"]), model_axis)
     logits = jnp.einsum("bsd,dv->bsv", _rms(x, params["final_norm"]), params["head"])
@@ -297,8 +330,19 @@ def _forward_local(cfg: NTPModelConfig, params, tokens, sample_mask,
     lse = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
     tok_loss = (lse - ll) * sample_mask[:, None]
-    total = _psum(tok_loss.sum(), data_axis)
-    count = _psum((sample_mask[:, None] * jnp.ones_like(tok_loss)).sum(), data_axis)
+    return tok_loss.sum(), (sample_mask[:, None] * jnp.ones_like(tok_loss)).sum()
+
+
+def _forward_local(cfg: NTPModelConfig, params, tokens, sample_mask,
+                   moe_unit_ids=None, axes=("data", "model")):
+    """tokens: (B, S+1) local; sample_mask: (B,) bool. Returns global loss.
+    moe_unit_ids: (U,) this rank's global expert id per slot (MoE mode).
+    axes=(None, None) runs the dense single-logical-copy reference."""
+    data_axis, model_axis = axes
+    total, count = _forward_totals(cfg, params, tokens, sample_mask,
+                                   moe_unit_ids, model_axis)
+    total = _psum(total, data_axis)
+    count = _psum(count, data_axis)
     return total / jnp.maximum(count, 1.0)
 
 
@@ -322,13 +366,63 @@ def make_reference_loss(cfg: NTPModelConfig):
 
 UNIT_KEYS = ("wq", "wk", "wv", "wo", "A", "B")
 
+_UNIT_SPEC = P("data", "model")
+_REP_SPEC = P()
+
+
+def _path_key(path):
+    return path[-1].key if hasattr(path[-1], "key") else None
+
+
+def _tree_specs(params):
+    """shard_map specs: unit buffers split over (data, model), everything
+    else replicated. Shared by the uniform and staged step builders."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: (
+            _UNIT_SPEC if _path_key(path) in UNIT_KEYS else _REP_SPEC
+        ),
+        params,
+    )
+
+
+def _squeeze_unit(path, x):
+    return x.reshape(x.shape[1:]) if _path_key(path) in UNIT_KEYS else x
+
+
+def _norm_weights(params, d_axis: int):
+    # packed unit buffers hold D identical copies of every synced unit
+    # gradient: weight them 1/D so the global grad norm (clipping + the
+    # grad_norm metric) equals the canonical-training norm exactly
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: 1.0 / d_axis if _path_key(path) in UNIT_KEYS else 1.0,
+        params,
+    )
+
+
+def _validated_local_batches(local_batches, default_plan, mode, local_batch,
+                             d_axis: int) -> np.ndarray:
+    """The per-replica usable-sample table: the caller's override (bounds-
+    checked) or the mode's default rule on ``default_plan``."""
+    if local_batches is None:
+        return default_local_batches(default_plan, mode, local_batch)
+    lb = np.asarray(local_batches, dtype=np.int64)
+    assert lb.shape == (d_axis,), (lb.shape, d_axis)
+    assert ((lb >= 0) & (lb <= local_batch)).all(), (
+        f"local_batches {lb} outside [0, {local_batch}]"
+    )
+    return lb
+
 
 def default_local_batches(
-    fplan: nu.FailurePlan, mode: Union[Mode, str], local_batch: int
+    fplan, mode: Union[Mode, str], local_batch: int
 ) -> np.ndarray:
     """Per-replica usable local batch implied by the mode alone: UNIFORM
     keeps the full batch, NTP shrinks ∝ surviving TP (paper §3.1), DP_DROP
-    zeroes every replica containing a failure."""
+    zeroes every replica containing a failure. A `StagedPlan` is reduced by
+    its slowest stage (`StagedPlan.effective`): 1F1B runs every microbatch
+    through every stage, so the most-degraded stage gates the replica."""
+    if isinstance(fplan, nu.StagedPlan):
+        fplan = fplan.effective
     mode = Mode.coerce(mode)
     if mode is Mode.NTP:
         return fplan.local_batch_fraction(local_batch)
@@ -341,13 +435,14 @@ def default_local_batches(
 
 def make_ntp_train_step(
     cfg: NTPModelConfig,
-    fplan: nu.FailurePlan,
+    fplan,
     mesh,
     *,
     mode: Union[Mode, str] = Mode.NTP,
     local_batch: int = 4,
     optimizer: Optional[Optimizer] = None,
     local_batches=None,
+    microbatches: int = 1,
 ):
     """Returns ``step`` with the same contract as train/steps.py:
 
@@ -362,45 +457,36 @@ def make_ntp_train_step(
     ``local_batches``: optional per-replica usable-sample override (NTP-PW —
     a power-boosted degraded replica keeps MORE than its ∝-TP share, up to
     the full local batch; core/power.py + runtime/orchestrator.py decide).
-    Defaults to the mode's own rule (`default_local_batches`)."""
+    Defaults to the mode's own rule (`default_local_batches`).
+
+    ``fplan`` may be a `StagedPlan` (nonuniform PP, DESIGN.md §2.6): each
+    layer's gradients sync under its OWN stage's reshard plan (stage-local
+    traffic), and the forward runs stage-sequentially over ``microbatches``
+    chunks (the 1F1B emulation; bubble cost is analytic — `core.perf_model`).
+    A pp=1 `StagedPlan` (and ``microbatches=1``) takes the EXACT uniform-plan
+    code path below, so the single-stage step is bit-identical to what this
+    builder produced before stages existed."""
+    if isinstance(fplan, nu.StagedPlan) and fplan.pp == 1:
+        fplan = fplan.stages[0]
+    if isinstance(fplan, nu.StagedPlan) or microbatches > 1:
+        return _make_staged_train_step(
+            cfg, nu.as_staged(fplan), mesh, mode=mode, local_batch=local_batch,
+            optimizer=optimizer, local_batches=local_batches,
+            microbatches=microbatches,
+        )
     mode = Mode.coerce(mode)
     optimizer = optimizer or sgd(1e-2)
     plans = _plans(cfg, fplan)
     d_axis = fplan.d
-
-    if local_batches is None:
-        lb = default_local_batches(fplan, mode, local_batch)
-    else:
-        lb = np.asarray(local_batches, dtype=np.int64)
-        assert lb.shape == (d_axis,), (lb.shape, d_axis)
-        assert ((lb >= 0) & (lb <= local_batch)).all(), (
-            f"local_batches {lb} outside [0, {local_batch}]"
-        )
+    lb = _validated_local_batches(local_batches, fplan, mode, local_batch,
+                                  d_axis)
     lb_table = jnp.asarray(lb, jnp.int32)
-
-    unit_spec = P("data", "model")
-    rep_spec = P()
-
-    def pspec(path_key):
-        return unit_spec if path_key in UNIT_KEYS else rep_spec
-
-    def tree_specs(params):
-        return jax.tree_util.tree_map_with_path(
-            lambda path, _: pspec(path[-1].key if hasattr(path[-1], "key") else None),
-            params,
-        )
-
-    def _key(path):
-        return path[-1].key if hasattr(path[-1], "key") else None
-
-    def _squeeze(path, x):
-        return x.reshape(x.shape[1:]) if _key(path) in UNIT_KEYS else x
 
     def global_loss(params, batch):
         """Scalar loss via shard_map; AD happens OUTSIDE the shard_map so
         jax seeds exactly one cotangent (grad-inside would seed one per rank
         and over-count every replicated path)."""
-        specs = tree_specs(params)
+        specs = _tree_specs(params)
 
         moe_slots = (
             jnp.asarray(plans["mlp"].comp_slots, jnp.int32)
@@ -413,7 +499,7 @@ def make_ntp_train_step(
             sample_mask = (
                 jnp.arange(tokens_local.shape[0]) < lb_table[dd]
             ).astype(jnp.float32)
-            p_sq = jax.tree_util.tree_map_with_path(_squeeze, p_local)
+            p_sq = jax.tree_util.tree_map_with_path(_squeeze_unit, p_local)
             uids = moe_slots[dd, rr] if moe_slots is not None else None
             return _forward_local(cfg, p_sq, tokens_local, sample_mask, uids)
 
@@ -425,11 +511,11 @@ def make_ntp_train_step(
     def sync_grads(grads):
         """NTP gradient synchronization (paper §3.1/§4.1) on the global
         unit-buffered grads: reshard -> psum('data') -> reshard, per weight."""
-        specs = tree_specs(grads)
+        specs = _tree_specs(grads)
 
         def body(g_local):
             def sync(path, g):
-                key = _key(path)
+                key = _path_key(path)
                 if key not in UNIT_KEYS:
                     # replicated params: AD through shard_map already summed
                     # every rank's contribution — complete as-is.
@@ -451,21 +537,147 @@ def make_ntp_train_step(
             check_vma=False,
         )(grads)
 
-    def norm_weights(params):
-        # packed unit buffers hold D identical copies of every synced unit
-        # gradient: weight them 1/D so the global grad norm (clipping + the
-        # grad_norm metric) equals the canonical-training norm exactly
-        return jax.tree_util.tree_map_with_path(
-            lambda path, _: 1.0 / d_axis if _key(path) in UNIT_KEYS else 1.0,
-            params,
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(global_loss)(params, batch)
+        grads = sync_grads(grads)
+        new_params, new_state, metrics = optimizer.update(
+            grads, opt_state, params, norm_weights=_norm_weights(grads, d_axis)
         )
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return step
+
+
+def _make_staged_train_step(
+    cfg: NTPModelConfig,
+    staged: nu.StagedPlan,
+    mesh,
+    *,
+    mode: Union[Mode, str] = Mode.NTP,
+    local_batch: int = 4,
+    optimizer: Optional[Optimizer] = None,
+    local_batches=None,
+    microbatches: int = 1,
+):
+    """Stage-aware twin of `make_ntp_train_step` (DESIGN.md §2.6): the model
+    is partitioned into ``staged.pp`` contiguous layer groups (boundaries
+    from `configs.shapes.stage_boundaries`), each packed and synced under its
+    own stage `FailurePlan`. The forward is microbatched stage-sequential —
+    every microbatch walks the stages in order, activations handed along the
+    layer loop (on this emulation every rank plays each stage in turn); the
+    1F1B bubble ((pp-1)/m) is accounted analytically by `core.perf_model`,
+    not by wall clock. Gradient sync is STAGE-LOCAL: layer grads reshard
+    under their own stage's plan, so a failure in stage s moves no bytes for
+    any other stage."""
+    from repro.configs.shapes import layer_stages
+
+    mode = Mode.coerce(mode)
+    optimizer = optimizer or sgd(1e-2)
+    stage_of = layer_stages(cfg.n_layers, staged.pp)
+    stage_plans = [_plans(cfg, p) for p in staged.stages]
+    eff = staged.effective
+    d_axis = staged.d
+
+    if not 1 <= microbatches <= local_batch:
+        raise ValueError(
+            f"microbatches={microbatches} outside [1, local_batch={local_batch}]"
+        )
+    if local_batch % microbatches:
+        raise ValueError(
+            f"local_batch={local_batch} not divisible by "
+            f"microbatches={microbatches}"
+        )
+    lb = _validated_local_batches(local_batches, eff, mode, local_batch,
+                                  d_axis)
+    lb_table = jnp.asarray(lb, jnp.int32)
+
+    def _layer_idx(path):
+        # params["layers"][i][key] paths carry the layer index one hop up
+        for e in reversed(path):
+            if hasattr(e, "idx"):
+                return e.idx
+        return None
+
+    def global_loss(params, batch):
+        """Scalar loss via shard_map (AD outside, exactly as the uniform
+        builder). Microbatch totals/counts accumulate BEFORE the data psum
+        and the final normalization, so the loss value is the same full-batch
+        mean the dense reference computes."""
+        specs = _tree_specs(params)
+
+        moe_slots = (
+            [jnp.asarray(sp["mlp"].comp_slots, jnp.int32) for sp in stage_plans]
+            if cfg.is_moe else None
+        )
+
+        def body(p_local, tokens_local):
+            dd = jax.lax.axis_index("data")
+            rr = jax.lax.axis_index("model")
+            p_sq = jax.tree_util.tree_map_with_path(_squeeze_unit, p_local)
+            uids = (
+                [moe_slots[s][dd, rr] for s in stage_of]
+                if moe_slots is not None else None
+            )
+            mb = tokens_local.shape[0] // microbatches
+            total = jnp.float32(0.0)
+            count = jnp.float32(0.0)
+            for j in range(microbatches):
+                toks = tokens_local[j * mb:(j + 1) * mb]
+                mask = (
+                    (j * mb + jnp.arange(mb)) < lb_table[dd]
+                ).astype(jnp.float32)
+                t, c = _forward_totals(cfg, p_sq, toks, mask, uids)
+                total = total + t
+                count = count + c
+            total = jax.lax.psum(total, "data")
+            count = jax.lax.psum(count, "data")
+            return total / jnp.maximum(count, 1.0)
+
+        return shard_map(
+            body, mesh=mesh, in_specs=(specs, P("data", None)),
+            out_specs=P(), check_vma=False,
+        )(params, batch)
+
+    def sync_grads(grads):
+        """Stage-local NTP gradient sync: each layer's unit grads reshard →
+        psum('data') → reshard under its OWN stage's plan; a healthy stage
+        takes the plain psum fast path even while another stage is degraded
+        (no cross-stage traffic — the sync collective never mixes stages)."""
+        specs = _tree_specs(grads)
+
+        def body(g_local):
+            def sync(path, g):
+                key = _path_key(path)
+                if key not in UNIT_KEYS:
+                    return g
+                s = stage_of[_layer_idx(path)]
+                sp = stage_plans[s]
+                wp = sp["attn"] if key in ("wq", "wk", "wv", "wo") else sp["mlp"]
+                splan = staged.stages[s]
+                g = g.reshape(g.shape[1:])  # drop replica dim
+                orig_shape = g.shape
+                if mode is Mode.NTP and not splan.healthy:
+                    g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
+                    g = g.reshape(orig_shape)
+                else:
+                    g = jax.lax.psum(g, "data")
+                return g.reshape((1,) + g.shape)
+
+            return jax.tree_util.tree_map_with_path(sync, g_local)
+
+        return shard_map(
+            body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+            check_vma=False,
+        )(grads)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(global_loss)(params, batch)
         grads = sync_grads(grads)
         new_params, new_state, metrics = optimizer.update(
-            grads, opt_state, params, norm_weights=norm_weights(grads)
+            grads, opt_state, params, norm_weights=_norm_weights(grads, d_axis)
         )
         metrics = dict(metrics, loss=loss)
         return new_params, new_state, metrics

@@ -113,21 +113,49 @@ def iteration_time(
     }
 
 
+def staged_iteration_time(
+    hw: Hardware,
+    wl: Workload,
+    par: Parallel,
+    stage_tps,
+    **kw,
+) -> Dict[str, float]:
+    """`iteration_time` under per-stage reduced TP degrees (nonuniform PP,
+    DESIGN.md §2.6): 1F1B runs every microbatch through every stage, so the
+    replica is gated by its SLOWEST stage — the breakdown is exactly
+    ``iteration_time(tp_reduced=min(stage_tps))``. This is the analytic twin
+    of the live runtime's per-stage ``rel_iter_time`` metric (max over
+    stages of `policies.staged_rel_iter_times`)."""
+    stage_tps = tuple(stage_tps)
+    assert len(stage_tps) == par.pp, (stage_tps, par.pp)
+    assert all(1 <= t <= par.tp for t in stage_tps), stage_tps
+    tp_red = min(stage_tps)
+    return iteration_time(
+        hw, wl, par, tp_reduced=(None if tp_red == par.tp else tp_red), **kw
+    )
+
+
 def best_config(
     hw: Hardware, wl: Workload, n_gpus: int, *, tp_limit: Optional[int] = None,
     min_pp: int = 1,
 ) -> Dict:
     """Exhaustive hybrid-parallel search (paper Fig. 2b): best per-GPU
-    throughput subject to a TP-degree cap (TP ≤ scale-up domain)."""
+    throughput subject to a TP-degree cap (TP ≤ scale-up domain). Candidate
+    PP degrees come from the runtime's supported ladder
+    (`configs.shapes.candidate_pp` — every stage must own a layer), so the
+    search space and the executable stage-partitioned step cannot drift
+    apart."""
+    from repro.configs.shapes import candidate_pp
+
     best = None
     tp_max = min(tp_limit or hw.domain_size, hw.domain_size)
     tp = 1
     while tp <= tp_max:
-        for pp in (1, 2, 4, 8, 16, 32):
-            if n_gpus % (tp * pp):
-                pp_ok = False
+        for pp in candidate_pp(wl.n_layers):
+            if pp < min_pp or n_gpus % (tp * pp):
+                continue
             dp = n_gpus // (tp * pp)
-            if dp < 1 or n_gpus % (tp * pp):
+            if dp < 1:
                 continue
             # memory feasibility: params+grads+opt (16 bytes/param ZeRO over
             # dp) + activations must fit 180GB-class HBM per the paper's B200

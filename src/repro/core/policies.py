@@ -37,6 +37,46 @@ def stage_slowdown(tp_red: int, tp_full: int, geom: WorkloadGeometry) -> float:
     return float(geom.mlp_flops_share * even + (1 - geom.mlp_flops_share) * heads)
 
 
+def staged_rel_iter_times(
+    stage_tp,
+    tp_full: int,
+    geom: WorkloadGeometry,
+    *,
+    local_batches,
+    local_batch: int,
+    boosts=None,
+    power: PowerModel = PowerModel(),
+):
+    """Per-STAGE predicted relative iteration time of a DP×PP×TP job
+    (DESIGN.md §2.6): ``stage_tp[d][s]`` is replica d's surviving TP in
+    pipeline stage s. Stage s's relative busy time is
+
+        rel_s = max_d  slowdown(tp[d][s]) / speedup(boost_d) · lb_d / LB
+
+    with the power boost applied only where the stage is actually degraded
+    (the repurposed budget lives in the degraded domain's rack). The job's
+    relative iteration time is ``max_s rel_s`` — the slowest stage gates the
+    pipeline, exactly `perf_model.staged_iteration_time`'s reduction — and
+    equals `PowerDecision.rel_iter_time` computed on the plan's effective
+    (min-over-stages) TP."""
+    d_axis = len(stage_tp)
+    pp = len(stage_tp[0])
+    if boosts is None:
+        boosts = (1.0,) * d_axis
+    rels = []
+    for s in range(pp):
+        r_s = 0.0
+        for d in range(d_axis):
+            tp = stage_tp[d][s]
+            if tp == tp_full:
+                eff = 1.0
+            else:
+                eff = stage_slowdown(tp, tp_full, geom) / power.speedup(boosts[d])
+            r_s = max(r_s, eff * local_batches[d] / local_batch)
+        rels.append(float(r_s))
+    return tuple(rels)
+
+
 def boosted_operating_point(slow: float, power: PowerModel):
     """NTP-PW operating point for one stage at slowdown ``slow`` (Table 1
     convention, shared with the runtime PowerPolicy): boost just enough to

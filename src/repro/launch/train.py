@@ -28,10 +28,20 @@ def main() -> None:
                     help="arch config id (required unless --ntp)")
     ap.add_argument("--ntp", action="store_true",
                     help="train the NTP prototype via the runtime session")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages for the NTP prototype (stage-"
+                         "partitioned layers, per-(replica, stage) health; "
+                         "a failure degrades only its stage — DESIGN.md §2.6)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="1F1B microbatch chunks per step (NTP mode; must "
+                         "divide --batch)")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a GPU failure before this step (NTP mode)")
     ap.add_argument("--fail-replica", type=int, default=1,
                     help="DP replica whose scale-up domain loses a GPU")
+    ap.add_argument("--fail-stage", type=int, default=None,
+                    help="pipeline stage the failure lands on (--pp > 1; "
+                         "default: the replica's worst stage)")
     ap.add_argument("--fail-gpus", type=int, default=1,
                     help="GPUs lost in the failure event")
     ap.add_argument("--trace", type=float, default=None, metavar="RATE_MULT",
@@ -78,6 +88,16 @@ def main() -> None:
                  "is NTP-backend-only)")
     if args.trace is not None and args.fail_at is not None:
         ap.error("--trace and --fail-at are mutually exclusive")
+    if args.pp != 1 or args.microbatches != 1:
+        if not args.ntp:
+            ap.error("--pp/--microbatches need --ntp (stage-partitioned "
+                     "training is NTP-backend-only)")
+        from repro.configs.shapes import SUPPORTED_PP
+
+        if args.pp not in SUPPORTED_PP:
+            ap.error(f"--pp {args.pp} not in supported ladder {SUPPORTED_PP}")
+    if args.fail_stage is not None and args.pp == 1:
+        ap.error("--fail-stage needs --pp > 1")
 
     if args.dry_run:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -181,7 +201,8 @@ def _run_ntp(args) -> None:
     n1 = n_dev // 2
     cfg = NTPModelConfig(
         d_model=256, n_kv_groups=2 * n1, q_per_kv=2, head_dim=32,
-        d_ff=max(512, 128 * n1), unit_rows=128, n_layers=2, vocab=2048,
+        d_ff=max(512, 128 * n1), unit_rows=128,
+        n_layers=max(2, 2 * args.pp), vocab=2048,
     )
     policy_name = args.power_policy or ("ntp" if args.trace is not None else None)
     session = NTPSession.create(
@@ -189,10 +210,13 @@ def _run_ntp(args) -> None:
         optimizer=adamw(AdamWConfig(lr=args.lr)),
         key=jax.random.PRNGKey(args.seed),
         power_policy=power_policy(policy_name) if policy_name else None,
+        pp=args.pp, microbatches=args.microbatches,
     )
     n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
-          f"plan {session.plan}"
+          + (f"pp={args.pp} stages {session.stage_boundaries}  "
+             if args.pp > 1 else "")
+          + f"plan {session.plan}"
           + (f"  policy {policy_name}" if policy_name else ""))
 
     pipe = SyntheticLMPipeline(
@@ -208,17 +232,22 @@ def _run_ntp(args) -> None:
         if args.fail_at is not None and i == args.fail_at:
             plan = session.apply(
                 FailureEvent(step=i, replica=args.fail_replica,
-                             n_gpus=args.fail_gpus)
+                             n_gpus=args.fail_gpus, stage=args.fail_stage)
             )
+            stage_s = (f"stage={args.fail_stage}, "
+                       if args.fail_stage is not None else "")
             print(f"*** step {i}: FailureEvent(replica={args.fail_replica}, "
-                  f"n_gpus={args.fail_gpus}) -> plan {plan} "
-                  f"mode {session.mode.value}")
+                  f"{stage_s}n_gpus={args.fail_gpus}) "
+                  f"-> plan {plan} mode {session.mode.value}")
         metrics = session.step(jnp.asarray(pipe._batch_np(i)))
         if i % args.log_every == 0 or i == args.steps - 1:
+            srel = metrics.get("stage_rel_iter_time")
             print(
                 f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
                 f"gnorm {float(metrics['grad_norm']):.3f}  "
-                f"({(time.time()-t0):.1f}s)", flush=True,
+                + (f"stage_rel {tuple(round(r, 3) for r in srel)}  "
+                   if srel is not None else "")
+                + f"({(time.time()-t0):.1f}s)", flush=True,
             )
         if args.ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             session.save(args.ckpt)
@@ -237,13 +266,15 @@ def _run_ntp_trace(args, session, pipe) -> None:
     from repro.runtime import RecoveryEvent, TraceRunner, schedule_from_trace
 
     d, n1 = session.plan.d, session.plan.n1
+    pp = session.pp
     trace_cfg = FailureTraceConfig(
-        n_gpus=d * n1, domain_size=n1,
+        n_gpus=d * pp * n1, domain_size=n1,
         days=args.steps / args.steps_per_hour / 24.0,
         rate_multiplier=args.trace, seed=args.trace_seed,
     )
     schedule = schedule_from_trace(
-        trace_cfg, steps=args.steps, steps_per_hour=args.steps_per_hour
+        trace_cfg, steps=args.steps, steps_per_hour=args.steps_per_hour,
+        pp=pp,
     )
     n_fail = sum(1 for s in schedule if not isinstance(s.event, RecoveryEvent))
     print(f"trace: {len(schedule)} events ({n_fail} failures, "
@@ -253,7 +284,9 @@ def _run_ntp_trace(args, session, pipe) -> None:
 
     def on_event(ev, plan):
         kind = "repair " if isinstance(ev, RecoveryEvent) else "failure"
-        print(f"*** step {ev.step}: {kind} domain {ev.domain} -> plan {plan}  "
+        site = (f"stage {ev.stage} domain {ev.domain}"
+                if ev.stage is not None else f"domain {ev.domain}")
+        print(f"*** step {ev.step}: {kind} {site} -> plan {plan}  "
               f"local_batches {session.local_batches}")
 
     runner = TraceRunner(session, schedule, on_event=on_event)

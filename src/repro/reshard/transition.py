@@ -54,6 +54,8 @@ def transition_trees(
     trees: Sequence[Dict],
     old: nu.FailurePlan,
     new: nu.FailurePlan,
+    *,
+    tag: Tuple[int, ...] = (),
 ) -> Tuple[List[Dict], TransferStats]:
     """Re-express packed trees (params, AdamW m/v, …) under ``new``.
 
@@ -99,10 +101,13 @@ def transition_trees(
             for v in views
         ]
         for d in range(d_axis):
-            # pair_tag=(d,): buckets of DIFFERENT unit families targeting
-            # the same (replica, src, dst) fuse into one physical message
+            # pair_tag=tag+(d,): buckets of DIFFERENT unit families targeting
+            # the same (replica, src, dst) fuse into one physical message;
+            # a caller-supplied tag (e.g. the pipeline stage) keeps sends of
+            # DIFFERENT device groups from fusing, which would be unphysical
             moved = apply_plan(
-                [v[d] for v in views], k_plans[d], stats=stats, pair_tag=(d,)
+                [v[d] for v in views], k_plans[d], stats=stats,
+                pair_tag=tag + (d,),
             )
             for o, m in zip(outs, moved):
                 o[d] = m
@@ -129,6 +134,59 @@ def transition_params(
     """Single-tree convenience wrapper over `transition_trees`."""
     (tree,), stats = transition_trees(cfg, [packed], old, new)
     return tree, stats
+
+
+def transition_staged_trees(
+    cfg,
+    trees: Sequence[Dict],
+    old: "nu.StagedPlan",
+    new: "nu.StagedPlan",
+    *,
+    copy_unchanged: bool = True,
+) -> Tuple[List[Dict], TransferStats]:
+    """Stage-local packed→packed transition for stage-partitioned trees
+    (DESIGN.md §2.6): each pipeline stage's layer slice transitions under its
+    OWN (old, new) stage-plan pair via `transition_trees` (ledger keys tagged
+    by stage — sends of distinct device groups never fuse), so a failure in
+    stage s moves only stage-s units: zero cross-stage traffic by
+    construction. Top-level replicated leaves (embed/head/final_norm) never
+    move. Returns the transitioned trees and the per-stage-merged
+    `TransferStats`.
+
+    ``copy_unchanged``: untouched stages (and replicated leaves) are
+    re-materialized as fresh buffers by default, so results never alias
+    caller-held trees (they may be donated to a jitted step). The live
+    session passes False — it owns its trees exclusively, and passing
+    unchanged stages through untouched makes a stage-local event truly
+    zero-copy for every other stage."""
+    from repro.configs.shapes import stage_boundaries
+
+    assert old.pp == new.pp and old.n1 == new.n1 and old.d == new.d, (old, new)
+    bounds = stage_boundaries(cfg.n_layers, old.pp)
+    stats = TransferStats()
+    outs = [
+        {k: v for k, v in t.items() if k != "layers"} for t in trees
+    ]
+    if copy_unchanged:
+        for o in outs:
+            for k in o:
+                o[k] = jax.tree.map(lambda x: jnp.array(x, copy=True), o[k])
+    out_layers = [[None] * cfg.n_layers for _ in trees]
+    for s in range(old.pp):
+        lo, hi = bounds[s], bounds[s + 1]
+        if not copy_unchanged and new.stages[s] == old.stages[s]:
+            for ti, t in enumerate(trees):
+                out_layers[ti][lo:hi] = list(t["layers"][lo:hi])
+            continue
+        subs = [{"layers": list(t["layers"][lo:hi])} for t in trees]
+        moved, st = transition_trees(cfg, subs, old.stages[s], new.stages[s],
+                                     tag=(s,))
+        stats.merge(st)
+        for ti, m in enumerate(moved):
+            out_layers[ti][lo:hi] = m["layers"]
+    for ti, o in enumerate(outs):
+        o["layers"] = out_layers[ti]
+    return outs, stats
 
 
 def expected_transfer(

@@ -1,11 +1,12 @@
 """Failure-aware training runtime: the public entry point that unifies the
 uniform and nonuniform-TP stacks behind one session API (DESIGN.md §2), plus
 the trace-driven lifecycle orchestrator (DESIGN.md §2.4)."""
-from repro.core.nonuniform import FailurePlan  # noqa: F401
+from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged  # noqa: F401
 from repro.core.ntp_train import Mode, NTPModelConfig  # noqa: F401
 from repro.runtime.events import (  # noqa: F401
     ClusterHealth, DeadReplicaError, FailureEvent, LifecycleEvent,
-    RecoveryEvent, plan_from_health, resolve_serving_domain,
+    RecoveryEvent, StagedHealth, plan_from_health, resolve_serving_domain,
+    staged_plan_from_health,
 )
 from repro.runtime.orchestrator import (  # noqa: F401
     PowerDecision, PowerPolicy, ScheduledEvent, TraceRunner, power_policy,

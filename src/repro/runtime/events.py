@@ -18,7 +18,7 @@ from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.nonuniform import FailurePlan
+from repro.core.nonuniform import FailurePlan, StagedPlan
 from repro.core.resource_manager import (
     ReplicaAssignment, apply_spares, pack_replicas,
 )
@@ -33,12 +33,19 @@ class DeadReplicaError(RuntimeError):
 class _ClusterEvent:
     """Shared shape of failure/recovery notifications. Exactly one of
     ``domain`` (physical scale-up-domain index) or ``replica`` (current mesh
-    DP index — resolved against the live packing) must identify the site."""
+    DP index — resolved against the live packing) must identify the site.
+
+    ``stage`` (pipeline-parallel jobs, DESIGN.md §2.6) narrows the site to
+    one pipeline stage: ``domain`` then indexes WITHIN that stage's D
+    domains. On a staged session an un-staged event resolves to the worst
+    (stage, domain) of its site — the stage already pinning the replica's
+    TP; on a pp=1 session ``stage`` must be absent or 0."""
 
     step: Optional[int] = None      # training step the event was observed at
     domain: Optional[int] = None
     replica: Optional[int] = None
     n_gpus: int = 1                 # GPUs affected in that domain
+    stage: Optional[int] = None     # pipeline stage (None = unstaged/pp=1)
 
     def __post_init__(self):
         if (self.domain is None) == (self.replica is None):
@@ -47,6 +54,8 @@ class _ClusterEvent:
             )
         if self.n_gpus < 1:
             raise ValueError("n_gpus must be >= 1")
+        if self.stage is not None and self.stage < 0:
+            raise ValueError(f"stage must be >= 0, got {self.stage}")
 
 
 @dataclass(frozen=True)
@@ -116,6 +125,12 @@ class ClusterHealth:
         CURRENT packing (the domain already pinning its TP: for a failure
         that is where another hit hurts least, for a repair where a fix
         helps most)."""
+        if event.stage not in (None, 0):
+            raise ValueError(
+                f"{type(event).__name__} addresses pipeline stage "
+                f"{event.stage}, but this health ledger is single-stage "
+                "(pp=1) — only stage=None or stage=0 is valid"
+            )
         domain = event.domain
         if domain is None:
             asg = self.assignments()
@@ -149,6 +164,12 @@ def resolve_serving_domain(event: LifecycleEvent, n_domains: int) -> LifecycleEv
     This is THE one place serving addressing is validated — call sites
     (`serve.session.ServeSession.apply`) must not re-implement the aliasing.
     """
+    if event.stage is not None:
+        raise ValueError(
+            f"{type(event).__name__} addresses pipeline stage {event.stage}, "
+            "but serving sessions are single-stage (PP serving is an open "
+            "item — ROADMAP)"
+        )
     if event.domain is None:
         event = type(event)(step=event.step, domain=event.replica,
                             n_gpus=event.n_gpus)
@@ -160,6 +181,120 @@ def resolve_serving_domain(event: LifecycleEvent, n_domains: int) -> LifecycleEv
             f"(valid ids: 0..{n_domains - 1})"
         )
     return event
+
+
+@dataclass(frozen=True)
+class StagedHealth:
+    """Per-(replica, stage) failed-GPU ledger of a DP×PP×TP job (DESIGN.md
+    §2.6): one `ClusterHealth` per pipeline stage, each over the job's D
+    scale-up domains. Stage s of the job owns the physical domains
+    ``{g : g % pp == s}`` of the global replica-major numbering (replica
+    block r holds its pp stage domains contiguously), so a global domain id
+    ``g`` addresses ``(stage=g % pp, domain=g // pp)``."""
+
+    stages: Tuple[ClusterHealth, ...]
+
+    def __post_init__(self):
+        assert len(self.stages) >= 1
+        h0 = self.stages[0]
+        assert all(
+            h.domain_size == h0.domain_size and h.n_domains == h0.n_domains
+            and h.domains_per_replica == h0.domains_per_replica
+            for h in self.stages
+        ), self.stages
+
+    @classmethod
+    def pristine(cls, n_domains: int, domain_size: int, pp: int) -> "StagedHealth":
+        return cls(tuple(
+            ClusterHealth.pristine(n_domains, domain_size) for _ in range(pp)
+        ))
+
+    @classmethod
+    def from_plan(cls, plan: StagedPlan) -> "StagedHealth":
+        return cls(tuple(ClusterHealth.from_plan(p) for p in plan.stages))
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    @property
+    def domain_size(self) -> int:
+        return self.stages[0].domain_size
+
+    @property
+    def n_replicas(self) -> int:
+        return self.stages[0].n_replicas
+
+    @property
+    def healthy(self) -> bool:
+        return all(h.healthy for h in self.stages)
+
+    def _unstaged(self, event: LifecycleEvent) -> LifecycleEvent:
+        return replace(event, stage=None)
+
+    def resolve_site(self, event: LifecycleEvent) -> Tuple[int, int]:
+        """(stage, domain) the event lands on. Explicit ``stage`` narrows to
+        that stage's ledger; a stage-less replica-addressed event lands on
+        the replica's WORST (stage, domain) — the stage pinning its TP is
+        where a failure hurts least and a repair helps most (same rule as
+        `ClusterHealth.resolve_domain`, lifted over stages)."""
+        if event.stage is not None:
+            if not 0 <= event.stage < self.pp:
+                raise ValueError(
+                    f"{type(event).__name__} addresses stage {event.stage}, "
+                    f"but this job has {self.pp} pipeline stages "
+                    f"(valid: 0..{self.pp - 1})"
+                )
+            ev = self._unstaged(event)
+            return event.stage, self.stages[event.stage].resolve_domain(ev)
+        if event.domain is not None:
+            # stage-less domain address = GLOBAL domain id (replica-major)
+            n_global = self.pp * self.stages[0].n_domains
+            if not 0 <= event.domain < n_global:
+                raise ValueError(
+                    f"no global domain {event.domain} "
+                    f"(valid: 0..{n_global - 1} = D*pp domains)"
+                )
+            return event.domain % self.pp, event.domain // self.pp
+        # replica-addressed, stage-less: worst (stage, domain) of the replica
+        best: Optional[Tuple[int, int, int]] = None   # (-failed, stage, dom)
+        ev = self._unstaged(event)
+        for s, h in enumerate(self.stages):
+            asg = h.assignments()
+            if not 0 <= event.replica < len(asg):
+                raise ValueError(f"no replica {event.replica}")
+            a = asg[event.replica]
+            worst = int(np.argmax(a.failed))
+            cand = (-int(a.failed[worst]), s, int(a.domain_ids[worst]))
+            if best is None or cand < best:
+                best = cand
+        return best[1], best[2]
+
+    def apply(self, event: LifecycleEvent) -> "StagedHealth":
+        """Ledger after ``event``: only the resolved stage's `ClusterHealth`
+        changes (stage-local blast radius)."""
+        s, domain = self.resolve_site(event)
+        ev = replace(event, stage=None, domain=domain, replica=None)
+        stages = list(self.stages)
+        stages[s] = stages[s].apply(ev)
+        return StagedHealth(tuple(stages))
+
+
+def staged_plan_from_health(health: StagedHealth, *, spares: int = 0) -> StagedPlan:
+    """Per-stage `plan_from_health`: each stage packs its own failures into
+    its lowest replicas independently (SPARe-style stage-local packing — no
+    cross-stage repair traffic). Spare domains with pp > 1 are an open item
+    (a spare rack can stand in for ANY stage, which per-stage packing cannot
+    express yet)."""
+    if spares and health.pp > 1:
+        raise NotImplementedError(
+            "spare domains with pp > 1 are not supported yet: a spare can "
+            "absorb failures in any stage, which per-stage packing cannot "
+            "express (ROADMAP open item)"
+        )
+    return StagedPlan(tuple(
+        plan_from_health(h, spares=spares) for h in health.stages
+    ))
 
 
 def plan_from_health(health: ClusterHealth, *, spares: int = 0) -> FailurePlan:

@@ -123,14 +123,20 @@ class ScheduledEvent:
 
 def schedule_from_trace(
     cfg: FailureTraceConfig, *, steps: int, steps_per_hour: float = 1.0,
+    pp: int = 1,
 ) -> List[ScheduledEvent]:
     """Timed fail/repair schedule for a job whose cluster is described by
-    ``cfg`` — one scale-up domain per DP replica (``cfg.n_gpus = D × n1``,
-    ``cfg.domain_size = n1``). Every simulated failure becomes a
-    domain-addressed `FailureEvent` at its onset step and a matching
-    `RecoveryEvent` at its repair step; failures already live at step 0
-    (lead-in) are injected at step 0, and repairs beyond the horizon are
-    dropped (the GPU stays down for the rest of the run)."""
+    ``cfg`` — one scale-up domain per (DP replica × pipeline stage)
+    (``cfg.n_gpus = D × pp × n1``, ``cfg.domain_size = n1``). Every
+    simulated failure becomes a domain-addressed `FailureEvent` at its onset
+    step and a matching `RecoveryEvent` at its repair step; failures already
+    live at step 0 (lead-in) are injected at step 0, and repairs beyond the
+    horizon are dropped (the GPU stays down for the rest of the run).
+
+    With ``pp > 1`` the trace's global domain ids follow the replica-major
+    numbering of `StagedHealth` (domain ``g`` → stage ``g % pp``, in-stage
+    domain ``g // pp``) and events carry an explicit ``stage=`` so the
+    session degrades ONLY the stage whose domain was hit."""
     ev = simulate_events(cfg)
     out: List[ScheduledEvent] = []
     for i in range(ev.n_events):
@@ -139,9 +145,13 @@ def schedule_from_trace(
         dom = int(ev.domain[i])
         if s1 <= 0 or s0 >= steps or s1 <= s0:
             continue
-        out.append(ScheduledEvent(s0, FailureEvent(step=s0, domain=dom)))
+        addr = (
+            {"domain": dom} if pp == 1
+            else {"domain": dom // pp, "stage": dom % pp}
+        )
+        out.append(ScheduledEvent(s0, FailureEvent(step=s0, **addr)))
         if s1 < steps:
-            out.append(ScheduledEvent(s1, RecoveryEvent(step=s1, domain=dom)))
+            out.append(ScheduledEvent(s1, RecoveryEvent(step=s1, **addr)))
     # repairs before failures at the same step: a same-step repair can make
     # an otherwise replica-killing failure legal (and never the reverse)
     return sorted(out,
@@ -203,6 +213,15 @@ class TraceRunner:
             [(np.arange(full) < b).astype(np.float32) for b in lb]
         )
 
+    def _site(self, ev):
+        """Debt-ledger key for an event's blast site: the (stage, domain)
+        pair on a staged session, the plain domain id otherwise."""
+        h = self.session.health
+        return (
+            h.resolve_site(ev) if hasattr(h, "resolve_site")
+            else h.resolve_domain(ev)
+        )
+
     def _check_canonical(self, where: str) -> float:
         got = self.session.canonical_params()
         err = max(
@@ -226,19 +245,24 @@ class TraceRunner:
                 # a repair whose failure was rejected must not touch the
                 # ledger: its GPU was never marked failed, and applying it
                 # would raise TP for hardware that is actually still down
-                dom = self.session.health.resolve_domain(ev)
-                debt = self._repair_debt.get(dom, 0)
+                site = self._site(ev)
+                debt = self._repair_debt.get(site, 0)
                 if debt:
                     absorbed = min(debt, ev.n_gpus)
-                    self._repair_debt[dom] = debt - absorbed
+                    self._repair_debt[site] = debt - absorbed
                     if absorbed == ev.n_gpus:
                         self.transitions.append({
                             "step": step, "kind": "absorbed", "event": ev,
                             "old_plan": old_plan, "new_plan": old_plan,
                         })
                         continue
-                    ev = RecoveryEvent(step=ev.step, domain=dom,
-                                       n_gpus=ev.n_gpus - absorbed)
+                    if isinstance(site, tuple):
+                        ev = RecoveryEvent(step=ev.step, stage=site[0],
+                                           domain=site[1],
+                                           n_gpus=ev.n_gpus - absorbed)
+                    else:
+                        ev = RecoveryEvent(step=ev.step, domain=site,
+                                           n_gpus=ev.n_gpus - absorbed)
             try:
                 new_plan = self.session.apply(ev)
             except DeadReplicaError as e:
@@ -246,9 +270,9 @@ class TraceRunner:
                 # NTP's regime (DP_DROP / spares territory, paper §3.3).
                 # The session refused before mutating; remember the debt so
                 # the GPU's matching repair is absorbed, not applied.
-                dom = self.session.health.resolve_domain(ev)
-                self._repair_debt[dom] = (
-                    self._repair_debt.get(dom, 0) + ev.n_gpus
+                site = self._site(ev)
+                self._repair_debt[site] = (
+                    self._repair_debt.get(site, 0) + ev.n_gpus
                 )
                 self.transitions.append({
                     "step": step, "kind": "rejected", "event": ev,
@@ -293,7 +317,10 @@ class TraceRunner:
                 "local_batches": tuple(int(b) for b in self.session.local_batches),
                 "events_applied": len(applied),
             }
-            for k in ("power_boost", "rel_iter_time", "policy"):
+            if getattr(self.session.plan, "pp", 1) > 1:
+                rec["stage_tp"] = self.session.plan.stage_tp
+            for k in ("power_boost", "rel_iter_time", "stage_rel_iter_time",
+                      "policy"):
                 if k in metrics:
                     rec[k] = metrics[k]
             if self.verify:

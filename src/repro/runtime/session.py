@@ -41,11 +41,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import ntp_train as nt
-from repro.core.nonuniform import FailurePlan
+from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged
 from repro.core.ntp_train import Mode, NTPModelConfig
 from repro.optim import AdamWConfig, Optimizer, adamw
 from repro.runtime.events import (
-    ClusterHealth, FailureEvent, LifecycleEvent, plan_from_health,
+    ClusterHealth, FailureEvent, LifecycleEvent, StagedHealth,
+    plan_from_health, staged_plan_from_health,
 )
 
 
@@ -68,8 +69,8 @@ class NTPSession:
         cfg: NTPModelConfig,
         mesh,
         *,
-        health: Optional[ClusterHealth] = None,
-        plan: Optional[FailurePlan] = None,
+        health: Optional[Union[ClusterHealth, StagedHealth]] = None,
+        plan: Optional[Union[FailurePlan, StagedPlan]] = None,
         mode: Union[Mode, str] = Mode.NTP,
         local_batch: int = 4,
         optimizer: Optional[Optimizer] = None,
@@ -77,9 +78,17 @@ class NTPSession:
         key=None,
         power_policy=None,                 # orchestrator.PowerPolicy
         spares: int = 0,                   # spare domains absorbing failures
+        pp: int = 1,                       # pipeline stages (DESIGN.md §2.6)
+        microbatches: int = 1,             # 1F1B chunks per step (pp > 1)
     ) -> "NTPSession":
         """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
-        and/or ``plan`` seed the failure state (default: pristine)."""
+        and/or ``plan`` seed the failure state (default: pristine).
+
+        ``pp`` > 1 partitions the transformer into contiguous layer stages
+        (boundaries from `configs.shapes.stage_boundaries`); health is then
+        tracked per (replica, stage) and a failure reduces TP only for the
+        stage whose scale-up domain lost the GPU. ``pp=1`` is bit-identical
+        to the unstaged session (same step graph, same ledger types)."""
         self = cls._new()
         self._backend = "ntp"
         self._cfg = cfg
@@ -98,25 +107,69 @@ class NTPSession:
         self.last_transition = None   # TransferStats of the latest repack
         d, n1 = mesh.shape["data"], mesh.shape["model"]
 
-        if health is None:
-            health = (
-                ClusterHealth.from_plan(plan) if plan is not None
-                else ClusterHealth.pristine(d, n1)
-            )
-        self._health = health
-        packed = plan_from_health(health, spares=spares)
-        if plan is not None and plan != packed:
-            # a plan out of packed order would make replica-addressed events
-            # resolve against the wrong physical domain
-            raise ValueError(
-                f"plan {plan} is not in resource-manager packed order "
-                f"(most-degraded first); health {health.failed} packs to "
-                f"{packed}"
-            )
+        if pp < 1:
+            raise ValueError(f"pp must be >= 1, got {pp}")
+        if isinstance(plan, StagedPlan) and plan.pp == 1:
+            plan = plan.stages[0]
+        if isinstance(health, StagedHealth) and health.pp == 1:
+            health = health.stages[0]
+        for given, what in ((plan, "plan"), (health, "health")):
+            given_pp = getattr(given, "pp", None)
+            if given_pp is not None and pp != 1 and given_pp != pp:
+                raise ValueError(
+                    f"{what} has {given_pp} stages but pp={pp} was requested"
+                )
+            if given_pp is not None:
+                pp = given_pp
+            elif given is not None and pp != 1:
+                # a plain FailurePlan/ClusterHealth is ambiguous under pp>1
+                # (per-stage state differs by stage); broadcasting failures
+                # to every stage would silently change their blast radius
+                raise ValueError(
+                    f"pp={pp} needs a staged {what} "
+                    f"(StagedPlan/StagedHealth), got {type(given).__name__}"
+                )
+        self._pp = pp
+        self._microbatches = microbatches
+        if pp == 1:
+            if health is None:
+                health = (
+                    ClusterHealth.from_plan(plan) if plan is not None
+                    else ClusterHealth.pristine(d, n1)
+                )
+            self._health = health
+            packed = plan_from_health(health, spares=spares)
+            if plan is not None and plan != packed:
+                # a plan out of packed order would make replica-addressed
+                # events resolve against the wrong physical domain
+                raise ValueError(
+                    f"plan {plan} is not in resource-manager packed order "
+                    f"(most-degraded first); health {health.failed} packs to "
+                    f"{packed}"
+                )
+        else:
+            if health is None:
+                health = (
+                    StagedHealth.from_plan(as_staged(plan))
+                    if plan is not None
+                    else StagedHealth.pristine(d, n1, pp)
+                )
+            self._health = health
+            packed = staged_plan_from_health(health, spares=spares)
+            if plan is not None and as_staged(plan) != packed:
+                raise ValueError(
+                    f"staged plan {plan} is not in per-stage packed order "
+                    f"(most-degraded first per stage); health packs to "
+                    f"{packed}"
+                )
         self._plan = packed
         assert self._plan.d == d and self._plan.n1 == n1, (
             f"plan {self._plan} does not fit mesh (data={d}, model={n1})"
         )
+        if pp > 1:
+            from repro.configs.shapes import stage_boundaries
+
+            self._boundaries = stage_boundaries(cfg.n_layers, pp)
 
         canonical = params if params is not None else nt.init_canonical(
             cfg, key if key is not None else jax.random.PRNGKey(0)
@@ -178,7 +231,10 @@ class NTPSession:
         self._last_metrics = {}
         self._policy = None
         self._spares = 0
+        self._pp = 1
+        self._microbatches = 1
         self._decision = None
+        self._stage_rel = None
         self.last_transition = None
         return self
 
@@ -189,12 +245,23 @@ class NTPSession:
         return self._mode
 
     @property
-    def plan(self) -> Optional[FailurePlan]:
+    def plan(self) -> Optional[Union[FailurePlan, StagedPlan]]:
+        """The live plan: a `FailurePlan` for pp=1 (exactly as before stages
+        existed), a `StagedPlan` for pp > 1."""
         return self._plan
 
     @property
-    def health(self) -> Optional[ClusterHealth]:
+    def health(self) -> Optional[Union[ClusterHealth, StagedHealth]]:
         return self._health
+
+    @property
+    def pp(self) -> int:
+        return self._pp
+
+    @property
+    def stage_boundaries(self):
+        """Layer boundaries of the pipeline stages (pp+1 ints; pp>1 only)."""
+        return self._boundaries if self._pp > 1 else (0, self._cfg.n_layers)
 
     @property
     def events(self) -> List[LifecycleEvent]:
@@ -264,28 +331,48 @@ class NTPSession:
                 power_boost=self._decision.max_boost,
                 rel_iter_time=self._decision.rel_iter_time,
             )
+        if self._stage_rel is not None:
+            # staged sessions always predict per-stage relative iteration
+            # time (slowest stage gates the replica — perf_model's
+            # staged_iteration_time rule), policy or not
+            metrics = dict(
+                metrics,
+                stage_rel_iter_time=self._stage_rel,
+                rel_iter_time=max(self._stage_rel),
+            )
         self._last_metrics = metrics
         return metrics
 
     # ---------------------------------------------------------------- events
 
-    def apply(self, event: LifecycleEvent) -> FailurePlan:
+    def apply(self, event: LifecycleEvent):
         """Consume a lifecycle event: update health, replan, and repack
         params and optimizer state into the new plan — training continues
         with the same logical weights. For a `FailureEvent` that is the
         paper's restart minus the restart (TP goes down); for a
         `RecoveryEvent` it is the missing inverse (TP comes back up, params
-        and AdamW state spread back over the repaired ranks)."""
+        and AdamW state spread back over the repaired ranks).
+
+        On a staged (pp > 1) session the event resolves to ONE pipeline
+        stage (`StagedHealth.resolve_site`); only that stage's layer slice
+        repacks — stage-local `transition_trees`, zero cross-stage traffic.
+        Returns the new plan (`FailurePlan` for pp=1, `StagedPlan` else)."""
         self._require_ntp("lifecycle replanning")
         new_health = self._health.apply(event)
-        new_plan = plan_from_health(new_health, spares=self._spares)
+        if self._pp == 1:
+            new_plan = plan_from_health(new_health, spares=self._spares)
+        else:
+            new_plan = staged_plan_from_health(new_health, spares=self._spares)
         self._events.append(event)
         self._health = new_health
         if new_plan == self._plan:
             return self._plan
 
         old_plan = self._plan
-        self._transition(old_plan, new_plan)
+        if self._pp == 1:
+            self._transition(old_plan, new_plan)
+        else:
+            self._transition_staged(old_plan, new_plan)
         self._plan = new_plan
         if self._mode is Mode.UNIFORM and not new_plan.healthy:
             self._mode = Mode.NTP  # uniform jobs degrade into NTP, not death
@@ -332,18 +419,42 @@ class NTPSession:
     def _decide(self) -> None:
         """Consult the PowerPolicy (if any) for the current plan. Geometry is
         derived from the live model: attention quantizes at kv-group (unit)
-        granularity."""
-        if self._policy is None:
-            self._decision = None
-            return
+        granularity. A staged plan decides on its `effective` (slowest-stage)
+        reduction and additionally predicts per-stage relative iteration
+        times for the step metrics."""
         from repro.core.policies import WorkloadGeometry
 
-        geom = self._policy.geom or WorkloadGeometry(
-            n_heads=self._cfg.n_kv_groups, local_batch=self._local_batch
-        )
-        self._decision = self._policy.decide(
-            self._plan, local_batch=self._local_batch, geom=geom
-        )
+        self._stage_rel = None
+        eff_plan = self._plan.effective if self._pp > 1 else self._plan
+        geom = (self._policy.geom if self._policy is not None else None) or \
+            WorkloadGeometry(
+                n_heads=self._cfg.n_kv_groups, local_batch=self._local_batch
+            )
+        if self._policy is None:
+            self._decision = None
+        else:
+            self._decision = self._policy.decide(
+                eff_plan, local_batch=self._local_batch, geom=geom
+            )
+        if self._pp > 1:
+            from repro.core.policies import staged_rel_iter_times
+            from repro.core.power import PowerModel
+
+            if self._decision is not None:
+                boosts = self._decision.boost
+                lbs = self._decision.local_batches
+                power = self._policy.model
+            else:
+                boosts = None
+                lbs = tuple(int(b) for b in nt.default_local_batches(
+                    eff_plan, self._mode, self._local_batch
+                ))
+                power = PowerModel()
+            self._stage_rel = staged_rel_iter_times(
+                self._plan.stage_tp, self._plan.n1, geom,
+                local_batches=lbs, local_batch=self._local_batch,
+                boosts=boosts, power=power,
+            )
 
     def _build_step(self) -> None:
         self._step_fn = nt.make_ntp_train_step(
@@ -353,6 +464,7 @@ class NTPSession:
                 None if self._decision is None
                 else self._decision.local_batches
             ),
+            microbatches=self._microbatches,
         )
 
     def _transition(self, old: FailurePlan, new: FailurePlan) -> None:
@@ -368,6 +480,24 @@ class NTPSession:
         opt_keys = [k for k in self._optimizer.param_like if k in opt]
         trees = [jax.device_get(self._params)] + [opt[k] for k in opt_keys]
         moved, stats = transition_trees(self._cfg, trees, old, new)
+        self._params = moved[0]
+        self._opt = dict(opt, **dict(zip(opt_keys, moved[1:])))
+        self.last_transition = stats
+
+    def _transition_staged(self, old: StagedPlan, new: StagedPlan) -> None:
+        """Stage-local transitions via `transition_staged_trees`: only the
+        stages whose plan changed repack their layer slice (their own
+        per-(replica, src, dst) buckets, tagged by stage). The session owns
+        its trees exclusively, so untouched stages pass through with zero
+        bytes and zero copies (``copy_unchanged=False``)."""
+        from repro.reshard.transition import transition_staged_trees
+
+        opt = jax.device_get(self._opt)
+        opt_keys = [k for k in self._optimizer.param_like if k in opt]
+        trees = [jax.device_get(self._params)] + [opt[k] for k in opt_keys]
+        moved, stats = transition_staged_trees(
+            self._cfg, trees, old, new, copy_unchanged=False
+        )
         self._params = moved[0]
         self._opt = dict(opt, **dict(zip(opt_keys, moved[1:])))
         self.last_transition = stats

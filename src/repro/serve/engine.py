@@ -103,12 +103,29 @@ class ServeEngine:
                 "registered NTP unit — open item)"
             )
         # ring caches (attn_sw/attn_chunked) only keep the trailing window:
-        # a prefill longer than the ring would leave pad K/V posing as valid
-        if "attn_sw" in kinds:
-            assert prefill_len <= cfg.window, (prefill_len, cfg.window)
-        if "attn_chunked" in kinds:
-            assert prefill_len <= cfg.chunk_size, (prefill_len, cfg.chunk_size)
-        assert prefill_len <= max_len
+        # a prefill longer than the ring would leave pad K/V posing as valid.
+        # ValueError (not assert): these guard CALLER config, and an assert
+        # vanishes under `python -O` — the bad prefill would then silently
+        # corrupt the ring cache instead of failing loudly.
+        if "attn_sw" in kinds and prefill_len > cfg.window:
+            raise ValueError(
+                f"prefill_len={prefill_len} exceeds the sliding-window ring "
+                f"cache: {cfg.arch_id} has window={cfg.window} (attn_sw "
+                "keeps only the trailing window, so a longer prefill would "
+                "leave pad K/V posing as valid tokens)"
+            )
+        if "attn_chunked" in kinds and prefill_len > cfg.chunk_size:
+            raise ValueError(
+                f"prefill_len={prefill_len} exceeds the chunked-attention "
+                f"ring cache: {cfg.arch_id} has chunk_size={cfg.chunk_size} "
+                "(attn_chunked keeps only the current chunk, so a longer "
+                "prefill would leave pad K/V posing as valid tokens)"
+            )
+        if prefill_len > max_len:
+            raise ValueError(
+                f"prefill_len={prefill_len} exceeds max_len={max_len}: a "
+                "request could never decode past its own prefill"
+            )
         # recurrent state is CUMULATIVE: a zero-padded prefill would fold
         # pad tokens into h/conv, so these configs admit token-by-token
         # (exact recurrent semantics, length-stable jit) — see `admit`

@@ -116,8 +116,39 @@ def make_setup(
     opt_cfg: Optional[AdamWConfig] = None,
     remat: bool = True,
     scan_unroll: bool = False,
+    microbatches: int = 1,
     lr_schedule: Callable = functools.partial(warmup_cosine, warmup=100, total=10_000),
 ) -> Setup:
+    """``microbatches`` > 1 splits each train step's batch into that many
+    chunks and accumulates gradients across them (the PP-style 1F1B schedule
+    at the arch-stack level — one optimizer update per step, peak activation
+    memory ∝ 1/m; `core.perf_model.iteration_time` charges the matching
+    (pp-1)/m bubble). ``microbatches=1`` is the exact unchanged step."""
+    if shape.kind == "train":
+        if not 1 <= microbatches <= shape.global_batch:
+            raise ValueError(
+                f"microbatches={microbatches} outside "
+                f"[1, global_batch={shape.global_batch}]"
+            )
+        if shape.global_batch % microbatches:
+            raise ValueError(
+                f"global_batch={shape.global_batch} not divisible by "
+                f"microbatches={microbatches}"
+            )
+        if microbatches > 1 and cfg.moe is not None:
+            # the MoE load-balance aux loss is nonlinear in per-batch
+            # routing statistics: mean-of-chunk aux != full-batch aux, so
+            # grad accumulation would NOT equal the microbatches=1 step —
+            # refuse rather than silently change training with m
+            raise ValueError(
+                f"microbatches={microbatches} with a MoE arch "
+                f"({cfg.arch_id}): the load-balance aux loss is not "
+                "additive over microbatch chunks, so accumulated grads "
+                "would differ from the full-batch step"
+            )
+    elif microbatches != 1:
+        raise ValueError(f"microbatches only applies to train shapes, "
+                         f"got kind={shape.kind!r}")
     # C2 gate (measured, EXPERIMENTS.md §Perf): SP wins on train steps for
     # non-rglru / non-post-norm archs; it loses slightly on prefill (no
     # backward to amortize the extra seq<->head transitions) and on rglru
@@ -187,7 +218,36 @@ def make_setup(
             metrics.update(loss=ce, total_loss=total)
             return params, opt_state, metrics
 
-        su.step_fn = train_step
+        def microbatched_train_step(params, opt_state, batch):
+            # stage-sequential 1F1B emulation: each microbatch runs the full
+            # forward/backward; grads (mean-per-microbatch) average to the
+            # full-batch gradient since every chunk has equal size
+            m = microbatches
+            mb = shape.global_batch // m
+            grads = None
+            total = ce = jnp.float32(0.0)
+            for j in range(m):
+                sl = {k: (v[j * mb:(j + 1) * mb]
+                          if hasattr(v, "ndim") and v.ndim >= 1
+                          and v.shape[0] == shape.global_batch else v)
+                      for k, v in batch.items()}
+                (t, c), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl
+                )
+                total, ce = total + t, ce + c
+                grads = g if grads is None else jax.tree.map(
+                    jnp.add, grads, g
+                )
+            grads = jax.tree.map(lambda x: x / m, grads)
+            lr_scale = lr_schedule(opt_state["step"])
+            params, opt_state, metrics = adamw_update(
+                grads, opt_state, params, opt_cfg, lr_scale
+            )
+            metrics.update(loss=ce / m, total_loss=total / m,
+                           microbatches=jnp.int32(m))
+            return params, opt_state, metrics
+
+        su.step_fn = train_step if microbatches == 1 else microbatched_train_step
         su.donate_argnums = (0, 1)
         if mesh is not None:
             su.in_shardings = (

@@ -1,0 +1,88 @@
+"""pp=1 regression (ISSUE 5 acceptance): the stage-aware session must be
+BIT-identical to the pre-PR NTPSession path across a random fail/repair
+chain. The oracle is the unstaged machinery driven by hand — the exact
+pre-PR flow: `make_ntp_train_step(cfg, FailurePlan, ...)` plus manual
+`repack_params` of params and AdamW moments at every transition. Any graph
+or packing change on the pp=1 path shows up as a bit mismatch in params,
+optimizer state, or per-step metrics. 8 fake CPU devices.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntp_train as nt
+from repro.core.nonuniform import FailurePlan, StagedPlan
+from repro.optim import AdamWConfig, adamw
+from repro.runtime import FailureEvent, NTPModelConfig, NTPSession, RecoveryEvent
+
+LB, SEQ, STEPS = 4, 24, 12
+cfg = NTPModelConfig(d_model=32, n_kv_groups=4, q_per_kv=1, head_dim=8,
+                     d_ff=128, unit_rows=32, n_layers=2, vocab=64)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+opt = adamw(AdamWConfig(lr=1e-2))
+
+session = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=opt,
+                            key=jax.random.PRNGKey(0))
+assert session.pp == 1 and isinstance(session.plan, FailurePlan)
+
+# the oracle: pre-PR-style manual driving of the unstaged primitives
+canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+plan = FailurePlan(4, (4, 4))
+params = nt.pack_params(cfg, canon, plan)
+state = opt.init(params)
+step = nt.make_ntp_train_step(cfg, plan, mesh, local_batch=LB, optimizer=opt)
+
+# random fail/repair chain (seeded): domain 0 takes hits and heals
+rng = np.random.default_rng(7)
+events = {}
+failed = 0
+for s in sorted(rng.choice(np.arange(1, STEPS), size=5, replace=False)):
+    if failed < 3 and rng.random() < 0.6:
+        events[int(s)] = FailureEvent(step=int(s), domain=0)
+        failed += 1
+    elif failed:
+        events[int(s)] = RecoveryEvent(step=int(s), domain=0)
+        failed -= 1
+
+assert any(isinstance(e, FailureEvent) for e in events.values())
+
+batch_rng = np.random.default_rng(0)
+for i in range(STEPS):
+    if i in events:
+        new_plan = session.apply(events[i])
+        params = nt.repack_params(cfg, jax.device_get(params), plan, new_plan)
+        st = jax.device_get(state)
+        for k in (k for k in opt.param_like if k in st):
+            st[k] = nt.repack_params(cfg, st[k], plan, new_plan)
+        state = st
+        plan = new_plan
+        step = nt.make_ntp_train_step(cfg, plan, mesh, local_batch=LB,
+                                      optimizer=opt)
+    b = jnp.asarray(batch_rng.integers(0, cfg.vocab, (2 * LB, SEQ + 1)))
+    m1 = session.step(b)
+    params, state, m2 = step(params, state, b)
+    assert float(m1["loss"]) == float(m2["loss"]), (i, m1["loss"], m2["loss"])
+    assert float(m1["grad_norm"]) == float(m2["grad_norm"]), i
+    assert "stage_rel_iter_time" not in m1   # pp=1 metrics shape unchanged
+
+for a, b in zip(jax.tree.leaves(session.params), jax.tree.leaves(params)):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), "params diverged"
+for k in (k for k in opt.param_like if k in state):
+    for a, b in zip(jax.tree.leaves(session.opt_state[k]),
+                    jax.tree.leaves(state[k])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f"opt[{k}] diverged"
+
+# a pp=1 StagedPlan degenerates to the same unstaged session
+s2 = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=opt,
+                       key=jax.random.PRNGKey(0),
+                       plan=StagedPlan((FailurePlan(4, (4, 4)),)))
+assert s2.pp == 1 and isinstance(s2.plan, FailurePlan)
+b = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab,
+                                                  (2 * LB, SEQ + 1)))
+s3 = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=opt,
+                       key=jax.random.PRNGKey(0))
+assert float(s2.step(b)["loss"]) == float(s3.step(b)["loss"])
+
+print(f"chain: {[(s, type(e).__name__) for s, e in sorted(events.items())]}")
+print("SESSION_PP1_REGRESSION_OK")

@@ -150,3 +150,41 @@ def test_ntp_reshard_exposed_small():
     red = iteration_time(hw, wl, Parallel(), tp_reduced=30,
                          local_batch_scale=7 / 8)
     assert red["reshard_exposed"] / base["total"] < 0.01
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5 satellite: failed_counts_at must count DISTINCT failed GPUs
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0.0, 50.0),    # start_h
+            st.floats(0.1, 100.0),   # duration_h
+            st.integers(0, 31),      # gpu id (4 domains of size 8)
+        ),
+        min_size=0, max_size=40,
+    ),
+    st.floats(0.0, 60.0),            # probe time
+)
+def test_failed_counts_never_exceed_distinct_failed_gpus(events, t_h):
+    """`failed_counts_at` ≤ the number of DISTINCT live-failed GPU ids per
+    domain, always — overlapping failure intervals on one GPU (independent
+    event sampling can re-fail an already-down GPU) must count once."""
+    from repro.core.failure_model import TraceEvents
+
+    n_domains, domain_size = 4, 8
+    start = np.array([e[0] for e in events], dtype=float)
+    end = np.array([e[0] + e[1] for e in events], dtype=float)
+    gpu = np.array([e[2] for e in events], dtype=int)
+    ev = TraceEvents(start_h=start, end_h=end, gpu=gpu,
+                     domain=gpu // domain_size,
+                     is_hw=np.ones(len(events), bool))
+    counts = ev.failed_counts_at(t_h, n_domains, domain_size)
+    live = (start <= t_h) & (end > t_h)
+    for d in range(n_domains):
+        distinct = len({int(g) for g in gpu[live] if g // domain_size == d})
+        assert counts[d] <= distinct, (d, counts[d], distinct)
+        # and with the saturating clip, exactly min(distinct, domain_size)
+        assert counts[d] == min(distinct, domain_size)
+    assert (counts <= domain_size).all()

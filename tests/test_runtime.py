@@ -362,3 +362,21 @@ def test_session_adamw_matches_canonical(run_dist):
     norm_weights correction) == canonical AdamW."""
     out = run_dist("ntp_adamw_equivalence.py")
     assert "NTP_ADAMW_OK" in out
+
+
+@pytest.mark.slow
+def test_session_pp1_bit_identical(run_dist):
+    """ISSUE 5 acceptance: the stage-aware session at pp=1 is BIT-identical
+    to the pre-PR NTPSession across a random fail/repair chain (params,
+    AdamW state, per-step metrics)."""
+    out = run_dist("session_pp1_regression.py")
+    assert "SESSION_PP1_REGRESSION_OK" in out
+
+
+@pytest.mark.slow
+def test_session_pp_lifecycle(run_dist):
+    """ISSUE 5 acceptance: pp=2 with one stage at reduced TP matches the
+    dense reference through fail->repair; transitions are stage-local; the
+    per-stage rel_iter_time metrics follow the slowest-stage rule."""
+    out = run_dist("session_pp_lifecycle.py")
+    assert "SESSION_PP_LIFECYCLE_OK" in out

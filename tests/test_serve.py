@@ -333,6 +333,27 @@ def test_router_slo_admission_sheds_hopeless_requests():
     assert g["slo_attainment"] >= 0.99  # admitted ones were admitted to meet it
 
 
+def test_prefill_bounds_raise_value_error_naming_config_field():
+    """Ring-cache prefill bounds must raise ValueError (an assert would
+    vanish under `python -O` and silently corrupt the ring cache), and the
+    message must NAME the offending config field so the misconfiguration is
+    actionable (ISSUE 5 satellite)."""
+    key = jax.random.PRNGKey(0)
+    # sliding-window ring: prefill 128 > window 64 -> names `window`
+    with pytest.raises(ValueError, match=r"prefill_len=128.*window=64"):
+        ServeSession.create(CFG_GQA_SW, replicas=1, n1=N1, slots=2,
+                            max_len=256, prefill_len=128, key=key)
+    # chunked ring: prefill 128 > chunk_size 64 -> names `chunk_size`
+    cfg_chunked = _cfg(("attn_chunked",))
+    with pytest.raises(ValueError, match=r"prefill_len=128.*chunk_size=64"):
+        ServeSession.create(cfg_chunked, replicas=1, n1=N1, slots=2,
+                            max_len=256, prefill_len=128, key=key)
+    # prefill past the slot budget -> names both prefill_len and max_len
+    with pytest.raises(ValueError, match=r"prefill_len=96.*max_len=64"):
+        ServeSession.create(CFG_FULL, replicas=1, n1=N1, slots=2,
+                            max_len=64, prefill_len=96, key=key)
+
+
 def test_oversize_request_rejected():
     session = ServeSession.create(
         CFG_FULL, replicas=1, n1=N1, slots=2, max_len=64, prefill_len=16,

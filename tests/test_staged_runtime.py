@@ -1,0 +1,327 @@
+"""Nonuniform pipeline parallelism, host-side (ISSUE 5): stage geometry
+helpers, `StagedPlan`/`StagedHealth` event algebra, per-stage packing and the
+stage-local repack oracle, the staged trace schedule, the per-stage slowdown
+prediction vs `perf_model.staged_iteration_time`, and the `best_config`
+search-space cleanup. The live pp>=2 session runs in a multi-device
+subprocess (tests/dist/session_pp_lifecycle.py); the pp=1 bit-identity
+regression in tests/dist/session_pp1_regression.py."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.shapes import (
+    SUPPORTED_PP, candidate_pp, layer_stages, stage_boundaries,
+)
+from repro.core import ntp_train as nt
+from repro.core.failure_model import TraceEvents
+from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged
+from repro.core.perf_model import (
+    Hardware, Parallel, Workload, best_config, iteration_time,
+    staged_iteration_time,
+)
+from repro.core.policies import WorkloadGeometry, staged_rel_iter_times
+from repro.runtime import (
+    FailureEvent, RecoveryEvent, StagedHealth, power_policy,
+    resolve_serving_domain, schedule_from_trace, staged_plan_from_health,
+)
+
+
+# ---------------------------------------------------------------------------
+# stage geometry (configs/shapes)
+
+def test_stage_boundaries_balanced_and_total():
+    assert stage_boundaries(4, 1) == (0, 4)
+    assert stage_boundaries(4, 2) == (0, 2, 4)
+    assert stage_boundaries(5, 2) == (0, 3, 5)       # ceil-first
+    assert stage_boundaries(7, 4) == (0, 2, 4, 6, 7)
+    for n, p in [(100, 8), (13, 4), (32, 32)]:
+        b = stage_boundaries(n, p)
+        sizes = [b[i + 1] - b[i] for i in range(p)]
+        assert b[0] == 0 and b[-1] == n
+        assert max(sizes) - min(sizes) <= 1 and min(sizes) >= 1
+
+
+def test_stage_boundaries_rejects_empty_stage():
+    with pytest.raises(ValueError, match="exceeds n_layers"):
+        stage_boundaries(2, 4)
+    with pytest.raises(ValueError, match="pp must be"):
+        stage_boundaries(2, 0)
+
+
+def test_layer_stages_inverts_boundaries():
+    assert layer_stages(5, 2) == (0, 0, 0, 1, 1)
+    assert layer_stages(4, 4) == (0, 1, 2, 3)
+
+
+def test_candidate_pp_filters_by_layers():
+    assert candidate_pp(100) == SUPPORTED_PP
+    assert candidate_pp(5) == (1, 2, 4)
+    assert candidate_pp(1) == (1,)
+    assert candidate_pp(100, max_pp=8) == (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# StagedPlan algebra
+
+def test_staged_plan_effective_is_min_over_stages():
+    sp = StagedPlan((FailurePlan(4, (3, 4)), FailurePlan(4, (4, 2))))
+    assert sp.pp == 2 and sp.d == 2 and sp.n1 == 4
+    assert sp.effective == FailurePlan(4, (3, 2))
+    assert sp.replica_tp == (3, 2)           # slowest stage gates
+    assert sp.stage_tp == ((3, 4), (4, 2))
+    assert not sp.healthy
+    assert as_staged(FailurePlan(4, (4, 4))).pp == 1
+
+
+def test_staged_plan_rejects_mismatched_stage_geometry():
+    with pytest.raises(AssertionError):
+        StagedPlan((FailurePlan(4, (4, 4)), FailurePlan(8, (8, 8))))
+
+
+# ---------------------------------------------------------------------------
+# StagedHealth event algebra
+
+def test_staged_health_stage_addressed_events_are_stage_local():
+    h = StagedHealth.pristine(2, 4, pp=2)
+    h1 = h.apply(FailureEvent(stage=1, domain=0))
+    assert [x.failed for x in h1.stages] == [(0, 0), (1, 0)]
+    plan = staged_plan_from_health(h1)
+    # only stage 1 degraded; stage 0 untouched
+    assert plan.stages[0].healthy and plan.stages[1].replica_tp == (3, 4)
+    assert h1.apply(RecoveryEvent(stage=1, domain=0)).healthy
+
+
+def test_staged_health_global_domain_addressing_is_replica_major():
+    # global domain g -> (stage g % pp, in-stage domain g // pp)
+    h = StagedHealth.pristine(2, 4, pp=2)
+    h1 = h.apply(FailureEvent(domain=3))
+    assert [x.failed for x in h1.stages] == [(0, 0), (0, 1)]
+    with pytest.raises(ValueError, match="global domain"):
+        h.apply(FailureEvent(domain=4))
+
+
+def test_staged_health_replica_addressed_lands_on_worst_stage():
+    h = StagedHealth.pristine(2, 4, pp=2)
+    h = h.apply(FailureEvent(stage=1, domain=0))
+    # replica 0 now serves stage 1's degraded domain; a stage-less replica
+    # hit lands there (the stage pinning its TP), not on healthy stage 0
+    h2 = h.apply(FailureEvent(replica=0))
+    assert [x.failed for x in h2.stages] == [(0, 0), (2, 0)]
+    # and a stage-less repair heals the same worst site
+    h3 = h2.apply(RecoveryEvent(replica=0)).apply(RecoveryEvent(replica=0))
+    assert [x.failed for x in h3.stages] == [(0, 0), (0, 0)]
+
+
+def test_staged_health_rejects_bad_stage():
+    h = StagedHealth.pristine(2, 4, pp=2)
+    with pytest.raises(ValueError, match="stage 5"):
+        h.apply(FailureEvent(stage=5, domain=0))
+    with pytest.raises(ValueError):
+        FailureEvent(stage=-1, domain=0)
+
+
+def test_single_stage_ledger_rejects_staged_events():
+    from repro.runtime import ClusterHealth
+
+    h = ClusterHealth.pristine(2, 4)
+    with pytest.raises(ValueError, match="single-stage"):
+        h.apply(FailureEvent(stage=1, domain=0))
+    # stage=0 aliases the unstaged ledger 1:1
+    assert h.apply(FailureEvent(stage=0, domain=1)).failed == (0, 1)
+
+
+def test_serving_rejects_staged_events():
+    with pytest.raises(ValueError, match="single-stage"):
+        resolve_serving_domain(FailureEvent(stage=1, domain=0), 4)
+
+
+def test_staged_spares_not_implemented():
+    h = StagedHealth.pristine(2, 4, pp=2)
+    with pytest.raises(NotImplementedError, match="spare"):
+        staged_plan_from_health(h, spares=1)
+
+
+def test_session_rejects_unstaged_plan_or_health_with_pp():
+    """pp>1 with a plain FailurePlan/ClusterHealth is ambiguous (broadcast
+    would silently multiply the blast radius across stages) — create() must
+    reject it before any compute, not build a mismatched session."""
+    from repro.runtime import ClusterHealth, NTPSession
+
+    class StubMesh:  # only .shape is read before validation
+        shape = {"data": 2, "model": 4}
+
+    with pytest.raises(ValueError, match="staged plan"):
+        NTPSession.create(_tiny_cfg(), StubMesh(), pp=2,
+                          plan=FailurePlan(n1=4, replica_tp=(4, 4)))
+    with pytest.raises(ValueError, match="staged health"):
+        NTPSession.create(_tiny_cfg(), StubMesh(), pp=2,
+                          health=ClusterHealth.pristine(2, 4))
+
+
+def test_arch_microbatches_rejects_moe():
+    """The MoE load-balance aux loss is not additive over microbatch chunks,
+    so grad accumulation would silently differ from the full-batch step."""
+    from repro.configs import get_arch, reduced
+    from repro.configs.shapes import ShapeSpec
+    from repro.train.steps import make_setup
+
+    moe_cfg = next(
+        reduced(get_arch(a))
+        for a in ("llama4-scout-17b-a16e", "arctic-480b")
+        if get_arch(a).moe is not None
+    )
+    with pytest.raises(ValueError, match="MoE"):
+        make_setup(moe_cfg, ShapeSpec("t", 32, 8, "train"), None,
+                   microbatches=2)
+
+
+# ---------------------------------------------------------------------------
+# staged packing / repack oracle (host-side, no mesh)
+
+def _tiny_cfg(n_layers=4):
+    return nt.NTPModelConfig(d_model=32, n_kv_groups=2, q_per_kv=1,
+                             head_dim=16, d_ff=64, unit_rows=32,
+                             n_layers=n_layers, vocab=64)
+
+
+def test_staged_pack_unpack_roundtrip_and_per_stage_layout():
+    cfg = _tiny_cfg()
+    sp = StagedPlan((FailurePlan(2, (1, 2)), FailurePlan(2, (2, 2))))
+    canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+    packed = nt.pack_params(cfg, canon, sp)
+    # stage 0 (degraded) packs wider buffers than healthy stage 1
+    buf0 = packed["layers"][0]["wq"].shape[1]
+    buf1 = packed["layers"][2]["wq"].shape[1]
+    assert buf0 > buf1, (buf0, buf1)
+    back = nt.unpack_params(cfg, packed, sp)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(canon)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_staged_repack_matches_pack_unpack_oracle():
+    cfg = _tiny_cfg()
+    old = StagedPlan((FailurePlan(2, (1, 2)), FailurePlan(2, (2, 2))))
+    new = StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (1, 2))))
+    packed = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(1)),
+                            old)
+    got = nt.repack_params(cfg, packed, old, new)
+    want = nt.pack_params(cfg, nt.unpack_params(cfg, packed, old), new)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staged_transition_is_stage_local():
+    """A transition that only degrades stage 1 must move ONLY stage-1 units
+    (stage-0 buffers pass through bit-identical) and tag its transfer ledger
+    by stage."""
+    from repro.reshard.transition import transition_staged_trees
+
+    cfg = _tiny_cfg()
+    old = StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (2, 2))))
+    new = StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (1, 2))))
+    packed = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(2)),
+                            old)
+    (moved,), stats = transition_staged_trees(cfg, [packed], old, new)
+    assert stats.moved_units > 0
+    # every ledger entry is tagged (stage, replica, src, dst) with stage == 1
+    assert all(len(k) == 4 and k[0] == 1 for k in stats.per_pair)
+    for li in (0, 1):   # stage-0 layers bit-identical
+        for key in nt.UNIT_KEYS:
+            assert np.array_equal(np.asarray(packed["layers"][li][key]),
+                                  np.asarray(moved["layers"][li][key]))
+
+
+# ---------------------------------------------------------------------------
+# staged schedule + slowdown prediction
+
+def test_schedule_from_trace_staged_addressing():
+    from repro.core.failure_model import FailureTraceConfig
+    from repro.runtime import StagedHealth
+
+    pp = 2
+    cfg = FailureTraceConfig(n_gpus=2 * pp * 4, domain_size=4, days=40.0,
+                             rate_multiplier=2000.0, seed=1,
+                             hw_recovery_days=(0.2, 0.4),
+                             sw_recovery_hours=2.0)
+    sched = schedule_from_trace(cfg, steps=400, pp=pp)
+    assert sched, "expected events at this rate"
+    assert all(s.event.stage in (0, 1) for s in sched)
+    assert all(0 <= s.event.domain < 2 for s in sched)
+    # replay never under/overflows any stage ledger
+    h = StagedHealth.pristine(2, 4, pp=pp)
+    for s in sched:
+        h = h.apply(s.event)
+        for stage in h.stages:
+            assert all(0 <= f <= 4 for f in stage.failed)
+
+
+def test_staged_rel_iter_times_slowest_stage_matches_power_decision():
+    """max over stages of the per-stage rel == PowerDecision.rel_iter_time
+    on the effective (min-over-stages) plan — the slowest-stage rule both
+    sides implement."""
+    sp = StagedPlan((FailurePlan(32, (30, 32)), FailurePlan(32, (32, 32)),
+                     FailurePlan(32, (32, 32)), FailurePlan(32, (32, 32))))
+    geom = WorkloadGeometry(n_heads=128, local_batch=8)
+    for name in ("ntp", "ntp_pw"):
+        pol = power_policy(name, geom=geom)
+        dec = pol.decide(sp.effective, local_batch=8, geom=geom)
+        rels = staged_rel_iter_times(
+            sp.stage_tp, sp.n1, geom, local_batches=dec.local_batches,
+            local_batch=8, boosts=dec.boost, power=pol.model,
+        )
+        assert len(rels) == sp.pp
+        assert max(rels) == pytest.approx(dec.rel_iter_time, rel=1e-12)
+        # healthy stages never dominate
+        assert rels[0] == max(rels)
+
+
+def test_staged_iteration_time_is_min_stage_reduction():
+    hw, wl = Hardware(domain_size=32), Workload()
+    par = Parallel(tp=32, pp=4, dp=64)
+    stage_tps = (32, 30, 28, 32)
+    got = staged_iteration_time(hw, wl, par, stage_tps)
+    want = iteration_time(hw, wl, par, tp_reduced=28)
+    assert got == want
+    healthy = staged_iteration_time(hw, wl, par, (32, 32, 32, 32))
+    assert healthy == iteration_time(hw, wl, par)
+    with pytest.raises(AssertionError):
+        staged_iteration_time(hw, wl, par, (32, 32))   # wrong pp
+
+
+# ---------------------------------------------------------------------------
+# best_config cleanup (ISSUE 5 satellite)
+
+def test_best_config_search_space_derives_from_runtime_support():
+    hw, wl = Hardware(domain_size=32), Workload()
+    r = best_config(hw, wl, 32_768, tp_limit=32)
+    assert r["pp"] in candidate_pp(wl.n_layers)
+    # min_pp is honored now (it was dead before)
+    r2 = best_config(hw, wl, 32_768, tp_limit=32, min_pp=4)
+    assert r2["pp"] >= 4
+    # a shallow model cannot be split deeper than its layers
+    from dataclasses import replace
+
+    shallow = replace(wl, n_layers=4)
+    r3 = best_config(hw, shallow, 32_768, tp_limit=32)
+    assert r3 is None or r3["pp"] <= 4
+
+
+# ---------------------------------------------------------------------------
+# failed_counts_at distinct-GPU regression (deterministic twin of the
+# hypothesis property in test_cluster_models.py, which needs the dev extra)
+
+def test_failed_counts_at_does_not_double_count_refailed_gpu():
+    """Two overlapping failure intervals on ONE GPU are one dead GPU: the
+    old interval count said 2 (and could push a domain past its size); the
+    distinct-id count says 1."""
+    start = np.array([0.0, 1.0, 0.5])
+    end = np.array([10.0, 12.0, 4.0])
+    gpu = np.array([3, 3, 9])            # gpu 3 re-failed while down
+    ev = TraceEvents(start_h=start, end_h=end, gpu=gpu, domain=gpu // 8,
+                     is_hw=np.ones(3, bool))
+    counts = ev.failed_counts_at(2.0, 2, 8)
+    assert counts.tolist() == [1, 1]     # not [2, 1]
+    # after the short failure heals, only the long one remains
+    assert ev.failed_counts_at(11.0, 2, 8).tolist() == [1, 0]
+    assert ev.failed_counts_at(20.0, 2, 8).tolist() == [0, 0]
