@@ -1,0 +1,173 @@
+"""BENCH_cluster: the measured perf trajectory of the global repack planner
+(ISSUE 6 satellite — ROADMAP's first `BENCH_*.json`).
+
+Replays a Llama3-calibrated failure trace (tiny native geometry: n1=4,
+pp=2, 4 replicas + 1 spare domain, rate cranked so the 32-GPU job sees
+events) through `repro.cluster.GreedyAllocator` with REAL packed trees:
+every accepted plan is executed by the reshard engine
+(`transition_staged_trees`) and the cost model's predicted bytes are
+checked against the executed `TransferStats` ledger — the two must match
+exactly, every transition. Records allocator plan latency (host wall
+time) and the predicted-vs-ledger byte totals.
+
+``python -m benchmarks.bench_cluster`` appends a run record to
+``BENCH_cluster.json`` at the repo root; the `run()` entry point feeds
+`benchmarks/run.py` CSV rows from the same replay.
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.cluster import (
+    AllocatorConfig, GoodputModel, GreedyAllocator, TransitionCostModel,
+)
+from repro.core import ntp_train as nt
+from repro.core.failure_model import FailureTraceConfig, simulate_events
+from repro.reshard.transition import transition_staged_trees
+from repro.runtime.events import ClusterHealth, DeadReplicaError, StagedHealth
+
+N1 = 4           # scale-up domain size of the replayed job
+PP = 2
+N_REP = 4        # active replicas (stage domains) — 32 GPUs total
+SPARES = 1
+SAMPLE_EVERY_H = 12.0
+DAYS = 30.0
+RATE_MULT = 128.0   # Llama3 rates are per-32k-GPU: crank so 32 GPUs see events
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cluster.json")
+
+
+def _model_cfg():
+    return nt.NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2,
+                             head_dim=16, d_ff=256, unit_rows=64,
+                             n_layers=4, vocab=128)
+
+
+def replay():
+    """One trace replay. Returns the measurement dict."""
+    cfg = _model_cfg()
+    tcfg = FailureTraceConfig(
+        n_gpus=N1 * PP * N_REP, domain_size=N1, days=DAYS,
+        rate_multiplier=RATE_MULT, seed=0,
+    )
+    ev = simulate_events(tcfg)
+    times = np.arange(0.0, DAYS * 24.0, SAMPLE_EVERY_H)
+
+    gm = GoodputModel(n1=N1)
+    cost = None      # bound from live trees below
+    alloc = GreedyAllocator(AllocatorConfig(horizon_steps=200), goodput=gm)
+
+    trees = None
+    cur = None
+    lat_ms, local_gp, global_gp = [], [], []
+    predicted_total = executed_total = 0
+    transitions = mismatches = skipped = 0
+    for t in times:
+        counts = ev.failed_counts_at(t, tcfg.n_domains, N1)
+        # global domain g -> (stage g % pp, domain g // pp); the active job
+        # owns the first N_REP*PP domains, the spare pool the rest
+        stage_counts = [
+            np.asarray([counts[r * PP + s] for r in range(N_REP)], dtype=int)
+            for s in range(PP)
+        ]
+        pool = int(sum(
+            counts[N_REP * PP + i] == 0
+            for i in range(min(SPARES, tcfg.n_domains - N_REP * PP))
+        ))
+        health = StagedHealth(tuple(
+            ClusterHealth(N1, tuple(int(x) for x in c)) for c in stage_counts
+        ))
+        t0 = time.perf_counter()
+        try:
+            gp = alloc.plan(health, spares=pool, current=cur)
+        except DeadReplicaError:
+            skipped += 1
+            cur, trees = None, None     # job lost: restart from checkpoint
+            continue
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        local_gp.append(gm.goodput(stage_counts))
+        global_gp.append(gp.goodput)
+
+        if trees is None:
+            # (re)materialize packed trees at the fresh plan — free packing
+            params = nt.pack_params(
+                cfg, nt.init_canonical(cfg, jax.random.PRNGKey(0)),
+                gp.staged_plan)
+            trees = [params, jax.tree.map(np.zeros_like, params)]
+            alloc.bind(cost=TransitionCostModel.from_trees(cfg, trees, pp=PP))
+            cost = alloc.cost
+        elif gp.staged_plan != cur:
+            trees, stats = transition_staged_trees(
+                cfg, trees, cur, gp.staged_plan, copy_unchanged=False)
+            transitions += 1
+            predicted_total += gp.predicted_bytes
+            executed_total += stats.bytes_moved
+            if gp.predicted_bytes != stats.bytes_moved:
+                mismatches += 1
+        cur = gp.staged_plan
+
+    lat = np.asarray(lat_ms)
+    return {
+        "config": {
+            "n1": N1, "pp": PP, "replicas": N_REP, "spares": SPARES,
+            "days": DAYS, "rate_multiplier": RATE_MULT,
+            "sample_every_h": SAMPLE_EVERY_H, "seed": tcfg.seed,
+            "model": "d64-L4-kv4",
+        },
+        "samples": int(len(lat)),
+        "dead_skipped": int(skipped),
+        "transitions": int(transitions),
+        "plan_latency_ms": {
+            "mean": round(float(lat.mean()), 3),
+            "p95": round(float(np.percentile(lat, 95)), 3),
+            "max": round(float(lat.max()), 3),
+        },
+        "predicted_bytes": int(predicted_total),
+        "executed_bytes": int(executed_total),
+        "predicted_matches_ledger": mismatches == 0,
+        "goodput": {
+            "stage_local": round(float(np.mean(local_gp)), 5),
+            "global": round(float(np.mean(global_gp)), 5),
+        },
+    }
+
+
+def run():
+    """benchmarks/run.py entry point — CSV rows from one replay."""
+    m = replay()
+    lat, gp = m["plan_latency_ms"], m["goodput"]
+    return [
+        {"name": "cluster/plan_latency_ms/mean", "value": lat["mean"],
+         "derived": f"p95={lat['p95']} max={lat['max']} over "
+                    f"{m['samples']} samples"},
+        {"name": "cluster/transitions", "value": m["transitions"],
+         "derived": f"{m['dead_skipped']} dead-skipped samples"},
+        {"name": "cluster/predicted_bytes", "value": m["predicted_bytes"],
+         "derived": f"executed={m['executed_bytes']} "
+                    f"match={m['predicted_matches_ledger']}"},
+        {"name": "cluster/goodput/global_vs_stage_local",
+         "value": round(gp["global"] - gp["stage_local"], 5),
+         "derived": f"global={gp['global']} stage_local={gp['stage_local']}"},
+    ]
+
+
+def main():
+    m = replay()
+    path = os.path.abspath(BENCH_PATH)
+    doc = {"bench": "cluster", "schema": 1, "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    m["date"] = time.strftime("%Y-%m-%d")
+    doc["runs"].append(m)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"appended run {len(doc['runs'])} to {path}")
+    print(json.dumps(m, indent=2))
+
+
+if __name__ == "__main__":
+    main()

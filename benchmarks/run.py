@@ -17,6 +17,7 @@ MODULES = [
     "fig9_ntp_overhead",
     "fig10_blast_radius",
     "fig_serving_goodput",
+    "bench_cluster",
     "table1_power",
     "roofline",
     "fig11_model_validation",

@@ -1,0 +1,27 @@
+"""repro.cluster — the global repack planner (DESIGN.md §2.7).
+
+Given a `StagedHealth` ledger, search the JOINT assignment space stage-local
+packing cannot reach — spares assignable to any stage, cross-stage domain
+swaps at extreme skew, adaptive pack reordering — and emit a `GlobalPlan`
+plus the ordered, cost-priced state-movement actions that realize it. Every
+move is priced in the reshard engine's own `TransferStats` units and gated
+by goodput amortization over a configurable horizon.
+"""
+from repro.cluster.actions import Action
+from repro.cluster.allocator import (
+    AllocatorConfig, GreedyAllocator, make_allocator,
+)
+from repro.cluster.cost import TransitionCost, TransitionCostModel
+from repro.cluster.goodput import GoodputModel
+from repro.cluster.plan import GlobalPlan
+
+__all__ = [
+    "Action",
+    "AllocatorConfig",
+    "GlobalPlan",
+    "GoodputModel",
+    "GreedyAllocator",
+    "TransitionCost",
+    "TransitionCostModel",
+    "make_allocator",
+]

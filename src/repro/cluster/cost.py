@@ -1,0 +1,139 @@
+"""Transition-traffic cost model for the global repack planner (DESIGN.md
+§2.7): predict, in bytes, what a candidate `StagedPlan` change would make the
+reshard engine move — BEFORE moving anything.
+
+The prediction is not a heuristic: it is computed from the SAME per-replica
+`planner.TransitionPlan`s the live transition executes (`repro.reshard.
+transition.replica_transition_plans`), so for a model whose per-unit byte
+sizes were calibrated from the live trees (`from_trees`) the predicted total
+equals the `TransferStats.bytes_moved` ledger of the executed transition
+EXACTLY — the invariant `BENCH_cluster.json` and the allocator lifecycle test
+assert. An `analytic` constructor prices cluster-scale what-ifs from a
+`perf_model.Workload` instead (benchmarks — fig4's global-vs-stage-local
+crossover).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.nonuniform import FailurePlan, StagedPlan
+
+
+@dataclass(frozen=True)
+class TransitionCost:
+    """One priced plan change: per-stage predicted traffic + wall time."""
+
+    stage_bytes: Tuple[int, ...]
+    scaleup_bw: float
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.stage_bytes))
+
+    @property
+    def seconds(self) -> float:
+        return self.total_bytes / self.scaleup_bw
+
+
+@dataclass(frozen=True)
+class TransitionCostModel:
+    """Bytes a packed→packed `StagedPlan` transition moves, per stage.
+
+    ``family_layer_bytes[k]`` is the payload one MOVED unit of the k-unit
+    family carries PER LAYER, summed over every tree that rides the
+    transition (params + each param-like optimizer tree — they share the
+    fused buckets, so their bytes add). Moved-unit counts come from the same
+    `replica_transition_plans` the engine compiles, which is what makes the
+    prediction exact rather than approximate.
+    """
+
+    family_layer_bytes: Mapping[int, int]   # k -> bytes / moved unit / layer
+    n_layers: int
+    pp: int
+    scaleup_bw: float = 9e11                # Hardware.scaleup_bw default
+
+    # ------------------------------------------------------------ constructors
+
+    @classmethod
+    def from_trees(cls, cfg, trees: Sequence[Dict], *, pp: int,
+                   scaleup_bw: float = 9e11) -> "TransitionCostModel":
+        """Calibrate per-unit bytes from the LIVE packed trees (params +
+        param-like optimizer trees). Every unit leaf is (D, n1*buf, *unit);
+        its per-unit payload is ``prod(unit) * itemsize``. Each layer
+        contributes one identical set of leaves, so the per-layer figure is
+        the tree-wide sum divided by ``cfg.n_layers`` (exact division)."""
+        import jax
+
+        from repro.reshard.transition import _leaf_key
+        from repro.reshard.units import ntp_unit_specs
+
+        specs = ntp_unit_specs(cfg)
+        fam_total: Dict[int, int] = {}
+        for t in trees:
+            for path, leaf in jax.tree_util.tree_flatten_with_path(t)[0]:
+                spec = specs.get(_leaf_key(path))
+                if spec is None:
+                    continue
+                arr = np.asarray(leaf)
+                per_unit = int(np.prod(arr.shape[2:], dtype=np.int64)
+                               ) * arr.dtype.itemsize
+                fam_total[spec.k] = fam_total.get(spec.k, 0) + per_unit
+        fam = {k: v // cfg.n_layers for k, v in fam_total.items()}
+        assert all(fam[k] * cfg.n_layers == fam_total[k] for k in fam), (
+            "unit leaves are not layer-uniform", fam_total)
+        return cls(family_layer_bytes=fam, n_layers=cfg.n_layers, pp=pp,
+                   scaleup_bw=scaleup_bw)
+
+    @classmethod
+    def analytic(cls, wl, par, *, n_unit_families: int = 128,
+                 bytes_per_param: int = 12,
+                 scaleup_bw: float = 9e11) -> "TransitionCostModel":
+        """Cluster-scale pricing from a `perf_model.Workload` + `Parallel`:
+        the model's parameters split evenly over ``n_unit_families`` units
+        per layer; each moved unit drags params + AdamW moments
+        (``bytes_per_param`` = 4 + 4 + 4 by default)."""
+        per_layer = wl.n_params * bytes_per_param // (
+            wl.n_layers * n_unit_families)
+        return cls(family_layer_bytes={n_unit_families: int(per_layer)},
+                   n_layers=wl.n_layers, pp=par.pp, scaleup_bw=scaleup_bw)
+
+    # ------------------------------------------------------------ prediction
+
+    def stage_bytes_for(self, old: FailurePlan, new: FailurePlan,
+                        n_stage_layers: int) -> int:
+        """Predicted traffic of ONE stage's transition (its layer slice)."""
+        from repro.reshard.transition import replica_transition_plans
+
+        if new == old:
+            return 0
+        total = 0
+        for k, layer_bytes in self.family_layer_bytes.items():
+            moved = sum(p.n_moved for p in replica_transition_plans(k, old, new))
+            total += moved * layer_bytes * n_stage_layers
+        return total
+
+    def predict(self, old: Optional[StagedPlan],
+                new: StagedPlan) -> TransitionCost:
+        """Price ``old → new``. ``old=None`` means a fresh packing (initial
+        layout, nothing in place yet): zero traffic by definition."""
+        if old is None:
+            return TransitionCost((0,) * new.pp, self.scaleup_bw)
+        from repro.configs.shapes import stage_boundaries
+
+        assert old.pp == new.pp == self.pp, (old.pp, new.pp, self.pp)
+        bounds = stage_boundaries(self.n_layers, self.pp)
+        per_stage = tuple(
+            self.stage_bytes_for(old.stages[s], new.stages[s],
+                                 bounds[s + 1] - bounds[s])
+            for s in range(self.pp)
+        )
+        return TransitionCost(per_stage, self.scaleup_bw)
+
+    def predict_bytes(self, old: Optional[StagedPlan], new: StagedPlan) -> int:
+        return self.predict(old, new).total_bytes
+
+    def seconds(self, n_bytes: int) -> float:
+        return n_bytes / self.scaleup_bw

@@ -1,0 +1,75 @@
+"""Goodput model the allocator optimizes (DESIGN.md §2.7): relative cluster
+samples/step of a CANDIDATE failure-count layout, before any plan exists.
+
+Works on raw per-(stage, domain) failed counts rather than `FailurePlan`s so
+dead layouts (a replica at TP 0 in some stage) are representable — their
+goodput is simply 0 for the affected replica, which is exactly what makes
+rescue moves (spares/swaps that revive a dead replica) come out as infinite-
+priority to the allocator. The per-replica math is the SAME stack the runtime
+meters itself with: per-stage packing + slowest-stage gating (`perf_model.
+staged_iteration_time`'s reduction) + `policies.stage_slowdown` through
+`policies.replica_throughput`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.policies import WorkloadGeometry, replica_throughput
+from repro.core.power import PowerModel
+
+
+@dataclass(frozen=True)
+class GoodputModel:
+    """Relative goodput (1.0 = pristine) of a per-stage failed-count layout.
+
+    ``step_time_s`` converts goodput deltas into wall seconds for the
+    allocator's amortization gate (seconds of useful compute recovered per
+    step = Δgoodput × step_time_s); derive it from the analytic perf model
+    via `for_perf` when real hardware numbers matter.
+    """
+
+    n1: int                       # scale-up domain size (full TP)
+    geom: WorkloadGeometry = field(default_factory=WorkloadGeometry)
+    method: str = "ntp"           # "ntp" | "ntp_pw" (policies.replica_throughput)
+    power: PowerModel = field(default_factory=PowerModel)
+    step_time_s: float = 1.0
+
+    @classmethod
+    def for_perf(cls, hw, wl, par, *, geom: WorkloadGeometry = None,
+                 method: str = "ntp",
+                 power: PowerModel = None) -> "GoodputModel":
+        """Bind step time to `perf_model.iteration_time` at full health."""
+        from repro.core.perf_model import iteration_time
+
+        step = iteration_time(hw, wl, par)["total"]
+        return cls(n1=par.tp, geom=geom or WorkloadGeometry(),
+                   method=method, power=power or PowerModel(),
+                   step_time_s=float(step))
+
+    # ------------------------------------------------------------ evaluation
+
+    def effective_tp(self, counts: Sequence[np.ndarray]) -> np.ndarray:
+        """Per-replica effective TP of a candidate layout: each stage packs
+        its failures independently (most-failed first — `pack_replicas`'
+        order), and 1F1B gates every replica at its slowest stage. May
+        contain zeros (dead replicas) — callers price those as goodput 0."""
+        packed = np.stack([
+            np.sort(np.asarray(c, dtype=int))[::-1] for c in counts
+        ])
+        return self.n1 - packed.max(axis=0)
+
+    def goodput(self, counts: Sequence[np.ndarray]) -> float:
+        """Mean relative replica throughput of the layout (0..1)."""
+        tps = self.effective_tp(counts)
+        return float(np.mean([
+            replica_throughput(int(t), self.n1, self.geom, self.method,
+                               self.power)
+            for t in tps
+        ]))
+
+    def gain_seconds(self, delta_goodput: float, horizon_steps: int) -> float:
+        """Useful-compute seconds a goodput delta recovers over the horizon."""
+        return delta_goodput * self.step_time_s * horizon_steps

@@ -56,6 +56,18 @@ def main() -> None:
     ap.add_argument("--power-policy", choices=["ntp", "ntp_pw"], default=None,
                     help="per-transition NTP vs NTP-PW decision hook "
                          "(default: ntp when --trace is given)")
+    ap.add_argument("--allocator", choices=["greedy", "off"], default="off",
+                    help="global repack planner for --pp > 1 (repro.cluster, "
+                         "DESIGN.md §2.7): spares assignable to ANY stage, "
+                         "cost-priced cross-stage swaps; 'off' keeps PR-5 "
+                         "stage-local packing")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="spare scale-up domains absorbing the worst "
+                         "failures (NTP mode; --pp > 1 needs --allocator "
+                         "greedy)")
+    ap.add_argument("--allocator-horizon", type=int, default=200,
+                    help="amortization horizon (steps) a priced move must "
+                         "pay for itself within (--allocator greedy)")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant of the arch family")
@@ -98,6 +110,15 @@ def main() -> None:
             ap.error(f"--pp {args.pp} not in supported ladder {SUPPORTED_PP}")
     if args.fail_stage is not None and args.pp == 1:
         ap.error("--fail-stage needs --pp > 1")
+    if (args.allocator != "off" or args.spares) and not args.ntp:
+        ap.error("--allocator/--spares need --ntp (lifecycle replanning is "
+                 "NTP-backend-only)")
+    if args.allocator != "off" and args.pp == 1:
+        ap.error("--allocator is the pp>1 global repack planner; pp=1 "
+                 "sessions already pack globally (--spares works directly)")
+    if args.spares and args.pp > 1 and args.allocator == "off":
+        ap.error("spares with --pp > 1 need the global allocator: pass "
+                 "--allocator greedy")
 
     if args.dry_run:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -205,19 +226,26 @@ def _run_ntp(args) -> None:
         n_layers=max(2, 2 * args.pp), vocab=2048,
     )
     policy_name = args.power_policy or ("ntp" if args.trace is not None else None)
+    from repro.cluster import make_allocator
+
+    allocator = make_allocator(args.allocator,
+                               horizon_steps=args.allocator_horizon)
     session = NTPSession.create(
         cfg, mesh, local_batch=args.batch,
         optimizer=adamw(AdamWConfig(lr=args.lr)),
         key=jax.random.PRNGKey(args.seed),
         power_policy=power_policy(policy_name) if policy_name else None,
         pp=args.pp, microbatches=args.microbatches,
+        spares=args.spares, allocator=allocator,
     )
     n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
           + (f"pp={args.pp} stages {session.stage_boundaries}  "
              if args.pp > 1 else "")
           + f"plan {session.plan}"
-          + (f"  policy {policy_name}" if policy_name else ""))
+          + (f"  policy {policy_name}" if policy_name else "")
+          + (f"  allocator {args.allocator} spares {args.spares}"
+             if args.allocator != "off" or args.spares else ""))
 
     pipe = SyntheticLMPipeline(
         DataConfig(cfg.vocab, args.seq_len, 2 * args.batch, seed=args.seed)
@@ -288,6 +316,12 @@ def _run_ntp_trace(args, session, pipe) -> None:
                 if ev.stage is not None else f"domain {ev.domain}")
         print(f"*** step {ev.step}: {kind} {site} -> plan {plan}  "
               f"local_batches {session.local_batches}")
+        gp = session.last_global_plan
+        if gp is not None and (gp.spare_sites or gp.swaps):
+            print(f"    allocator: spares at {gp.spare_sites} swaps "
+                  f"{gp.swaps} predicted {gp.predicted_bytes}B "
+                  f"(goodput {gp.goodput:.3f} vs stage-local "
+                  f"{gp.baseline_goodput:.3f})")
 
     runner = TraceRunner(session, schedule, on_event=on_event)
     log_every = max(args.log_every, 1)

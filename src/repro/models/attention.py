@@ -180,12 +180,15 @@ def attn_apply(
     cache: Optional[dict] = None,   # {'k','v'} (B,maxT,kvh,hd) + write pos
     cache_pos=None,          # scalar int32: write/valid position for decode
     use_rope: Optional[bool] = None,
+    cross_cache: Optional[dict] = None,  # {'ek','ev'} (B,Tenc,kvh,hd): banked
+                                         # encoder K/V (fill at prefill when
+                                         # kv_x is given, read at decode)
 ):
     """Returns (out, new_cache)."""
     d, nh, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, s, _ = x.shape
     use_rope = cfg.use_rope if use_rope is None else use_rope
-    cross = kv_x is not None
+    cross = kv_x is not None or cross_cache is not None
     if positions is None:
         positions = jnp.arange(s, dtype=jnp.int32)
 
@@ -194,20 +197,27 @@ def attn_apply(
         q = q + p["bq"]
     q = q.reshape(b, s, nh, hd)
 
-    src = kv_x if cross else x
-    k = jnp.einsum("bsd,df->bsf", src, p["wk"])
-    v = jnp.einsum("bsd,df->bsf", src, p["wv"])
-    if "bk" in p:
-        k, v = k + p["bk"], v + p["bv"]
-    k = k.reshape(b, src.shape[1], kvh, hd)
-    v = v.reshape(b, src.shape[1], kvh, hd)
+    if cross and kv_x is None:
+        # decode against the banked encoder K/V: computed (and qk-normed)
+        # once at prefill — no per-token encoder pass, no re-norm of k
+        k, v = cross_cache["ek"], cross_cache["ev"]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    else:
+        src = kv_x if cross else x
+        k = jnp.einsum("bsd,df->bsf", src, p["wk"])
+        v = jnp.einsum("bsd,df->bsf", src, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, src.shape[1], kvh, hd)
+        v = v.reshape(b, src.shape[1], kvh, hd)
 
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
-        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    if use_rope and not cross:
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if use_rope and not cross:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
     q = ctx.heads(q)
 
     new_cache = None
@@ -259,6 +269,13 @@ def attn_apply(
     else:
         k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
         k_posm = k_pos
+        if cross and cross_cache is not None:
+            if kv_x is not None:
+                # prefill: bank the encoder K/V for cache-driven decode
+                new_cache = {"ek": k.astype(cross_cache["ek"].dtype),
+                             "ev": v.astype(cross_cache["ev"].dtype)}
+            else:
+                new_cache = cross_cache
 
     qg = _group(q, kvh)  # (B,kvh,g,S,hd)
 
@@ -300,3 +317,15 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
         "k": jnp.zeros((batch, length, kvh, hd), dtype),
         "v": jnp.zeros((batch, length, kvh, hd), dtype),
     }
+
+
+def init_cross_kv_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    """Encoder K/V bank for enc-dec decode (whisper-style serving): filled
+    ONCE at prefill from the encoder output, read by every cross-attention
+    decode step — the decoder never re-runs the encoder per token. Fixed
+    ``enc_seq`` length (no ring: cross attention is bidirectional over the
+    whole encoded input)."""
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    t = cfg.encoder.enc_seq
+    return {"ek": jnp.zeros((batch, t, kvh, hd), dtype),
+            "ev": jnp.zeros((batch, t, kvh, hd), dtype)}

@@ -121,15 +121,24 @@ def block_apply(
     aux = jnp.zeros((), jnp.float32)
     h = norm_apply(cfg, p["ln1"], x)
     new_cache = None
+    # enc-dec block caches carry the banked encoder K/V ('ek'/'ev') next to
+    # the mixer's own state — split them off before the mixer sees the dict
+    cross_cache = None
+    self_cache = cache
+    if cache is not None and "ek" in cache:
+        cross_cache = {"ek": cache["ek"], "ev": cache["ev"]}
+        self_cache = {n: c for n, c in cache.items() if n not in ("ek", "ev")}
     if kind in ATTN_KINDS:
         out, new_cache = attn_mod.attn_apply(
             cfg, p["mixer"], h, kind=kind, ctx=ctx, positions=positions,
-            cache=cache, cache_pos=cache_pos,
+            cache=self_cache, cache_pos=cache_pos,
         )
     elif kind == "ssm":
-        out, new_cache = ssm_mod.ssm_apply(cfg, p["mixer"], h, ctx, cache=cache)
+        out, new_cache = ssm_mod.ssm_apply(cfg, p["mixer"], h, ctx,
+                                           cache=self_cache)
     elif kind == "rglru":
-        out, new_cache = rglru_mod.rglru_apply(cfg, p["mixer"], h, ctx, cache=cache)
+        out, new_cache = rglru_mod.rglru_apply(cfg, p["mixer"], h, ctx,
+                                               cache=self_cache)
     else:
         raise ValueError(kind)
     if cfg.post_norms:
@@ -138,11 +147,14 @@ def block_apply(
 
     if "cross" in p:
         hc = norm_apply(cfg, p["ln_cross"], x)
-        out, _ = attn_mod.attn_apply(
+        out, new_cross = attn_mod.attn_apply(
             cfg, p["cross"], hc, kind="attn_bidir", ctx=ctx,
             positions=positions, kv_x=enc_out, use_rope=False,
+            cross_cache=cross_cache,
         )
         x = ctx.residual(x + out)
+        if cross_cache is not None:
+            new_cache = dict(new_cache, **new_cross)
 
     if _has_ffn(cfg, kind):
         h2 = norm_apply(cfg, p["ln2"], x)
@@ -168,12 +180,18 @@ def block_apply(
 
 def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
     if kind in ATTN_KINDS:
-        return attn_mod.init_kv_cache(cfg, batch, max_len, dtype, kind=kind)
-    if kind == "ssm":
-        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
-    if kind == "rglru":
-        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
-    raise ValueError(kind)
+        c = attn_mod.init_kv_cache(cfg, batch, max_len, dtype, kind=kind)
+    elif kind == "ssm":
+        c = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    elif kind == "rglru":
+        c = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.encoder is not None and kind in ATTN_KINDS:
+        # enc-dec attention blocks cross-attend: bank their encoder K/V
+        # (recurrent kinds carry no cross module — nothing to bank)
+        c = dict(c, **attn_mod.init_cross_kv_cache(cfg, batch, dtype))
+    return c
 
 
 # ---------------------------------------------------------------------------
@@ -320,7 +338,7 @@ class Model:
             )
             lead = (None,) if stacked else ()
             b_axis = ctx.dp if leaf.shape[len(lead)] % dp_size == 0 else None
-            if name in ("k", "v"):
+            if name in ("k", "v", "ek", "ev"):
                 # (B, T, kvh, hd): batch over dp; if batch unshardable,
                 # sequence over dp AND tp (long_500k context parallelism)
                 if b_axis is not None:

@@ -10,6 +10,7 @@ partition units along its partition axis:
 | ``expert``     | whole expert                      | MoE FFN weights         |
 | ``kv_group``   | GQA kv-group (train weight unit)  | attention weights       |
 | ``kv_head``    | GQA KV head                       | serving KV cache        |
+| ``enc_kv_head``| encoder KV head (cross-attn bank) | enc-dec serving cache   |
 | ``ssm_head``   | SSD head (``head_dim`` channels)  | Mamba-2 h/conv state    |
 | ``rglru_block``| Griffin gate block (``block_width``) | RG-LRU h/conv state  |
 
@@ -31,7 +32,7 @@ from typing import Callable, Dict, Optional
 
 from repro.configs.base import ATTN_KINDS, ArchConfig
 
-STATE_LEAF_NAMES = ("k", "v", "h", "conv")
+STATE_LEAF_NAMES = ("k", "v", "h", "conv", "ek", "ev")
 
 
 @dataclass(frozen=True)
@@ -70,11 +71,11 @@ def _kind_state_specs(cfg: ArchConfig, kind: str) -> Dict[str, UnitSpec]:
     if kind in ATTN_KINDS:
         # k/v: (..., T, kvh, hd) — head axis at -2
         kv = UnitSpec("kv_head", cfg.n_kv_heads, axis=-2)
-        return {"k": kv, "v": kv}
-    if kind == "ssm":
+        specs = {"k": kv, "v": kv}
+    elif kind == "ssm":
         s = cfg.ssm
         nh, hp = s.n_heads(cfg.d_model), s.head_dim
-        return {
+        specs = {
             # h: (..., nh, hp, ds) — SSD-head axis at -3
             "h": UnitSpec("ssm_head", nh, axis=-3),
             # conv: (..., K-1, di + 2·ds) — di = nh·hp sharded channels,
@@ -82,15 +83,23 @@ def _kind_state_specs(cfg: ArchConfig, kind: str) -> Dict[str, UnitSpec]:
             "conv": UnitSpec("ssm_head", nh, axis=-1, unit=hp,
                              tail=2 * s.d_state),
         }
-    if kind == "rglru":
+    elif kind == "rglru":
         g = cfg.rglru
         di, w = g.d_inner(cfg.d_model), g.block_width
         nb = di // w
-        return {
+        specs = {
             "h": UnitSpec("rglru_block", nb, axis=-1, unit=w),
             "conv": UnitSpec("rglru_block", nb, axis=-1, unit=w),
         }
-    raise ValueError(f"no state units for block kind {kind!r}")
+    else:
+        raise ValueError(f"no state units for block kind {kind!r}")
+    if cfg.encoder is not None and kind in ATTN_KINDS:
+        # enc-dec: attention decoder blocks also bank the encoder K/V at
+        # prefill (ek/ev, (..., Tenc, kvh, hd)) — its heads reshard exactly
+        # like self-attention KV heads, as their own unit family
+        ekv = UnitSpec("enc_kv_head", cfg.n_kv_heads, axis=-2)
+        specs = dict(specs, ek=ekv, ev=ekv)
+    return specs
 
 
 def arch_unit_counts(cfg: ArchConfig) -> Dict[str, int]:

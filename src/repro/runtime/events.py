@@ -280,17 +280,31 @@ class StagedHealth:
         return StagedHealth(tuple(stages))
 
 
-def staged_plan_from_health(health: StagedHealth, *, spares: int = 0) -> StagedPlan:
+def staged_plan_from_health(
+    health: StagedHealth,
+    *,
+    spares: int = 0,
+    allocator=None,
+    current: Optional[StagedPlan] = None,
+) -> StagedPlan:
     """Per-stage `plan_from_health`: each stage packs its own failures into
     its lowest replicas independently (SPARe-style stage-local packing — no
-    cross-stage repair traffic). Spare domains with pp > 1 are an open item
-    (a spare rack can stand in for ANY stage, which per-stage packing cannot
-    express yet)."""
+    cross-stage repair traffic).
+
+    Spare domains with pp > 1 need the GLOBAL allocator — a spare rack can
+    stand in for ANY stage, which per-stage packing cannot express. Pass an
+    ``allocator`` (`repro.cluster.GreedyAllocator`) to delegate the whole
+    joint search (spares, cross-stage swaps, reordering) to it; ``current``
+    is the plan whose state is in place, so the allocator can price
+    transitions against it."""
+    if allocator is not None and health.pp > 1:
+        return allocator.plan(health, spares=spares, current=current).staged_plan
     if spares and health.pp > 1:
-        raise NotImplementedError(
-            "spare domains with pp > 1 are not supported yet: a spare can "
-            "absorb failures in any stage, which per-stage packing cannot "
-            "express (ROADMAP open item)"
+        raise ValueError(
+            "spare domains with pp > 1 need the global allocator: a spare "
+            "can absorb failures in any stage, which per-stage packing "
+            "cannot express. Pass --allocator greedy (launch/train.py) or "
+            "allocator=repro.cluster.GreedyAllocator(...) to the session."
         )
     return StagedPlan(tuple(
         plan_from_health(h, spares=spares) for h in health.stages

@@ -288,6 +288,11 @@ class TraceRunner:
                 "old_plan": old_plan,
                 "new_plan": new_plan,
             }
+            gp = getattr(self.session, "last_global_plan", None)
+            if gp is not None:
+                # allocator-driven session: keep the global verdict (spare
+                # sites, swaps, priced actions) with the transition record
+                rec["global_plan"] = gp
             if self.verify and new_plan != old_plan:
                 rec["canonical_err"] = self._check_canonical(
                     f"step {step} ({rec['kind']} transition {old_plan} -> {new_plan})"

@@ -80,6 +80,7 @@ class NTPSession:
         spares: int = 0,                   # spare domains absorbing failures
         pp: int = 1,                       # pipeline stages (DESIGN.md §2.6)
         microbatches: int = 1,             # 1F1B chunks per step (pp > 1)
+        allocator=None,                    # cluster.GreedyAllocator (pp > 1)
     ) -> "NTPSession":
         """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
         and/or ``plan`` seed the failure state (default: pristine).
@@ -88,7 +89,16 @@ class NTPSession:
         (boundaries from `configs.shapes.stage_boundaries`); health is then
         tracked per (replica, stage) and a failure reduces TP only for the
         stage whose scale-up domain lost the GPU. ``pp=1`` is bit-identical
-        to the unstaged session (same step graph, same ledger types)."""
+        to the unstaged session (same step graph, same ledger types).
+
+        ``allocator`` (a `repro.cluster.GreedyAllocator`) turns every
+        replan into a GLOBAL search — spares assignable to any stage,
+        cost-priced cross-stage swaps — and is what makes ``spares > 0``
+        legal at pp > 1 (DESIGN.md §2.7). The session binds the allocator's
+        goodput model to its own geometry and calibrates its transition cost
+        model from the live packed trees, so predicted bytes match the
+        executed `TransferStats` ledger exactly; the latest verdict is kept
+        in ``session.last_global_plan``."""
         self = cls._new()
         self._backend = "ntp"
         self._cfg = cfg
@@ -105,7 +115,30 @@ class NTPSession:
         self._spares = spares
         self._decision = None
         self.last_transition = None   # TransferStats of the latest repack
+        self.last_global_plan = None  # allocator's latest GlobalPlan verdict
         d, n1 = mesh.shape["data"], mesh.shape["model"]
+
+        if allocator is not None and pp <= 1:
+            raise ValueError(
+                "allocator= is the pp>1 global repack planner; pp=1 sessions "
+                "already pack globally (plan_from_health handles spares)"
+            )
+        self._allocator = allocator
+        if allocator is not None:
+            from repro.cluster import GoodputModel
+            from repro.core.policies import WorkloadGeometry
+            from repro.core.power import PowerModel
+
+            method = ("ntp_pw" if power_policy is not None
+                      and power_policy.name == "ntp_pw" else "ntp")
+            allocator.bind(goodput=GoodputModel(
+                n1=n1,
+                geom=WorkloadGeometry(n_heads=cfg.n_kv_groups,
+                                      local_batch=local_batch),
+                method=method,
+                power=(power_policy.model if power_policy is not None
+                       else PowerModel()),
+            ))
 
         if pp < 1:
             raise ValueError(f"pp must be >= 1, got {pp}")
@@ -155,7 +188,7 @@ class NTPSession:
                     else StagedHealth.pristine(d, n1, pp)
                 )
             self._health = health
-            packed = staged_plan_from_health(health, spares=spares)
+            packed = self._staged_replan(health, current=None)
             if plan is not None and as_staged(plan) != packed:
                 raise ValueError(
                     f"staged plan {plan} is not in per-stage packed order "
@@ -176,6 +209,18 @@ class NTPSession:
         )
         self._params = nt.pack_params(cfg, canonical, self._plan)
         self._opt = self._optimizer.init(self._params)
+        if self._allocator is not None:
+            # calibrate move pricing from the LIVE trees: predicted bytes of
+            # a candidate transition then equal the executed TransferStats
+            # ledger exactly (params + every param-like optimizer tree ride
+            # the same fused buckets)
+            from repro.cluster import TransitionCostModel
+
+            opt_keys = [k for k in self._optimizer.param_like
+                        if k in self._opt]
+            trees = [self._params] + [self._opt[k] for k in opt_keys]
+            self._allocator.bind(cost=TransitionCostModel.from_trees(
+                cfg, jax.device_get(trees), pp=pp))
         self._events: List[LifecycleEvent] = []
         self._last_metrics: Dict[str, Any] = {}
         self._decide()
@@ -235,7 +280,9 @@ class NTPSession:
         self._microbatches = 1
         self._decision = None
         self._stage_rel = None
+        self._allocator = None
         self.last_transition = None
+        self.last_global_plan = None
         return self
 
     # ------------------------------------------------------------- introspect
@@ -362,7 +409,7 @@ class NTPSession:
         if self._pp == 1:
             new_plan = plan_from_health(new_health, spares=self._spares)
         else:
-            new_plan = staged_plan_from_health(new_health, spares=self._spares)
+            new_plan = self._staged_replan(new_health, current=self._plan)
         self._events.append(event)
         self._health = new_health
         if new_plan == self._plan:
@@ -415,6 +462,18 @@ class NTPSession:
                 f"{what} needs the NTP prototype backend (NTPSession.create); "
                 "the arch backend trains uniformly via train/steps.py"
             )
+
+    def _staged_replan(self, health: StagedHealth, *, current):
+        """One pp>1 replan: the global allocator when bound (joint spares /
+        swap search, moves priced against ``current``'s in-place state —
+        verdict kept in ``last_global_plan``), stage-local packing
+        otherwise."""
+        if self._allocator is not None:
+            gp = self._allocator.plan(health, spares=self._spares,
+                                      current=current)
+            self.last_global_plan = gp
+            return gp.staged_plan
+        return staged_plan_from_health(health, spares=self._spares)
 
     def _decide(self) -> None:
         """Consult the PowerPolicy (if any) for the current plan. Geometry is

@@ -46,6 +46,30 @@ DECODER_KINDS = ("attn", "attn_sw", "attn_chunked", "ssm", "rglru")
 RECURRENT_KINDS = ("ssm", "rglru")
 
 
+def validate_serve_cfg(cfg: ArchConfig) -> set:
+    """Reject configs the serve engine cannot run, BEFORE any model is
+    built (a degenerate config may not even initialize). Returns the set of
+    block kinds in the pattern."""
+    kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
+    if not kinds <= set(DECODER_KINDS):
+        raise ValueError(
+            f"serve engine supports kinds {DECODER_KINDS}; "
+            f"{cfg.arch_id} has kinds {sorted(kinds)}"
+        )
+    if cfg.encoder is not None and kinds & set(RECURRENT_KINDS):
+        # attention-only enc-dec (whisper) serves through failover: the
+        # encoder K/V banked at prefill (ek/ev, its own enc_kv_head
+        # partition unit) reshards with the rest of the cache. Recurrent
+        # enc-dec would need the cross bank threaded through the
+        # token-by-token recurrent prefill — open item.
+        raise ValueError(
+            f"enc-dec serving is attention-only for now; {cfg.arch_id} "
+            f"mixes recurrent kinds {sorted(kinds & set(RECURRENT_KINDS))} "
+            "with cross-attention"
+        )
+    return kinds
+
+
 @dataclass
 class Request:
     """One generation request. ``generated`` survives preemption: a resumed
@@ -57,6 +81,12 @@ class Request:
     max_new: int
     arrival: float = 0.0                 # router ticks
     deadline: Optional[float] = None     # SLO: completion-time bound (ticks)
+    enc_input: Optional[np.ndarray] = None  # enc-dec only: (enc_seq, d_model)
+                                         # frame embeddings; kept on the
+                                         # request so a preempt-resume can
+                                         # re-prefill (not checkpointed —
+                                         # a restored slot keeps decoding
+                                         # from its banked ek/ev instead)
     generated: List[int] = field(default_factory=list)
     done: bool = False
     finish_time: Optional[float] = None
@@ -95,13 +125,7 @@ class ServeEngine:
         model=None,                     # share one Model across replicas
         compiled=None,                  # (decode_slots, prefill, decode_step)
     ):
-        kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
-        if not kinds <= set(DECODER_KINDS) or cfg.encoder is not None:
-            raise ValueError(
-                f"serve engine is decoder-only for now; {cfg.arch_id} "
-                f"has kinds {sorted(kinds)} (enc-dec caches have no "
-                "registered NTP unit — open item)"
-            )
+        kinds = validate_serve_cfg(cfg)
         # ring caches (attn_sw/attn_chunked) only keep the trailing window:
         # a prefill longer than the ring would leave pad K/V posing as valid.
         # ValueError (not assert): these guard CALLER config, and an assert
@@ -217,6 +241,20 @@ class ServeEngine:
         degraded replica's measured slowdown."""
         if not self.can_admit():
             return False
+        enc = None
+        if self.cfg.encoder is not None:
+            if req.enc_input is None:
+                raise ValueError(
+                    f"{self.cfg.arch_id} is enc-dec: Request.enc_input must "
+                    f"carry the ({self.cfg.encoder.enc_seq}, "
+                    f"{self.cfg.d_model}) frame embeddings"
+                )
+            enc = jnp.asarray(req.enc_input, jnp.float32)[None]
+            if enc.shape[1:] != (self.cfg.encoder.enc_seq, self.cfg.d_model):
+                raise ValueError(
+                    f"Request.enc_input has shape {enc.shape[1:]}, expected "
+                    f"({self.cfg.encoder.enc_seq}, {self.cfg.d_model})"
+                )
         free = np.flatnonzero(self._rid < 0)
         b = int(free[0])
         toks = req.full_prompt()
@@ -246,7 +284,8 @@ class ServeEngine:
             head = toks[: min(n, p)]
             padded[: len(head)] = head
             logits, cache1 = self._prefill(
-                self.params, jnp.asarray(padded[None]), cache1
+                self.params, jnp.asarray(padded[None]), cache1,
+                enc_input=enc,
             )
             if n <= p:
                 last_logits = logits[0, n - 1]

@@ -71,6 +71,9 @@ class ServeSession:
     ) -> "ServeSession":
         if policy not in SERVE_POLICIES:
             raise ValueError(f"policy {policy!r} not in {SERVE_POLICIES}")
+        from repro.serve.engine import validate_serve_cfg
+
+        validate_serve_cfg(cfg)
         self = object.__new__(cls)
         self._cfg = cfg
         self._policy = policy

@@ -1,0 +1,126 @@
+"""Allocator-driven pp=2 lifecycle with one spare domain (ISSUE 6
+acceptance): spares are legal at pp>1 ONLY through the global repack planner
+(`repro.cluster`), and its moves must be exactly what travels.
+
+Chain (stage-addressed fail -> repair, both stages hit):
+  step  2: fail (stage 1, domain 0)  — the spare stands in: the PLAN stays
+           pristine, zero state moves;
+  step  5: fail (stage 0, domain 1)  — one spare cannot cover two wounded
+           stages; the allocator RELOCATES it to the cheaper site, so a
+           stage-0 failure repacks ONLY stage 1 (the cross-stage move
+           stage-local packing cannot express);
+  step  8: repair (stage 1, domain 0) — the spare covers the remaining
+           failure again: plan back to pristine, stage 1 repacks up;
+  step 11: repair (stage 0, domain 1) — ledger heals, plan unchanged,
+           zero state moves.
+
+Asserted throughout: f32 exactness vs the dense uniform reference
+(TraceRunner verify), `session.last_transition` carries ONLY the priced
+stage's units (no dense round-trip), and the allocator's predicted bytes
+equal the executed TransferStats ledger bit-for-bit.
+8 fake CPU devices, mesh (2 data, 4 model).
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import GreedyAllocator
+from repro.optim import sgd
+from repro.runtime import (
+    FailureEvent, NTPModelConfig, NTPSession, RecoveryEvent, ScheduledEvent,
+    StagedPlan, TraceRunner,
+)
+
+LB, SEQ, STEPS = 4, 32, 14
+cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
+                     d_ff=256, unit_rows=64, n_layers=4, vocab=128)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+schedule = [
+    ScheduledEvent(2, FailureEvent(step=2, stage=1, domain=0)),
+    ScheduledEvent(5, FailureEvent(step=5, stage=0, domain=1)),
+    ScheduledEvent(8, RecoveryEvent(step=8, stage=1, domain=0)),
+    ScheduledEvent(11, RecoveryEvent(step=11, stage=0, domain=1)),
+]
+
+allocator = GreedyAllocator()
+session = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=sgd(0.05),
+                            key=jax.random.PRNGKey(0), pp=2, spares=1,
+                            allocator=allocator)
+assert session.pp == 2 and isinstance(session.plan, StagedPlan)
+assert session.plan.healthy
+assert allocator.cost is not None and allocator.goodput is not None, (
+    "session must calibrate the allocator's models")
+
+rng = np.random.default_rng(0)
+
+
+def batch(i):
+    return jnp.asarray(rng.integers(0, cfg.vocab, (2 * LB, SEQ + 1)))
+
+
+observed = []
+
+
+def on_event(ev, plan):
+    observed.append((ev, plan, session.last_transition,
+                     session.last_global_plan))
+
+
+runner = TraceRunner(session, list(schedule), verify=True, atol=1e-4,
+                     on_event=on_event)
+hist = runner.run(batch, STEPS)
+
+tps = {h["step"]: h["stage_tp"] for h in hist}
+lbs = {h["step"]: h["local_batches"] for h in hist}
+
+# --- step 2: spare absorbs the stage-1 failure — plan pristine, no traffic
+ev, plan, stats, gp = observed[0]
+assert tps[2] == ((4, 4), (4, 4)), tps[2]
+assert plan.healthy
+assert gp.spare_sites == ((1, 0, 1),), gp.spare_sites
+assert gp.predicted_bytes == 0 and stats is None, (gp.predicted_bytes, stats)
+assert gp.goodput == 1.0 and gp.baseline_goodput < 1.0, gp.summary()
+
+# --- step 5: second failure (stage 0): the spare relocates — only ONE
+# stage's units travel, and they are exactly the allocator's priced move
+ev, plan, stats, gp = observed[1]
+assert tps[5] == ((4, 3), (4, 4)), tps[5]            # stage 1 degraded
+assert lbs[5] == (3, LB), lbs[5]                     # eff tp 3 of 4 gates
+assert gp.spare_sites == ((0, 1, 1),), gp.spare_sites  # spare moved stages
+assert stats is not None and stats.moved_units > 0
+moved_stages = {k[0] for k in stats.per_pair}
+priced_stages = {a.stage for a in gp.transitions}
+assert moved_stages == priced_stages == {1}, (moved_stages, priced_stages)
+assert gp.predicted_bytes == stats.bytes_moved, (
+    gp.predicted_bytes, stats.bytes_moved)
+assert stats.bytes_moved < stats.dense_bytes, "dense round-trip leaked in"
+assert sum(a.bytes for a in gp.transitions) == gp.predicted_bytes
+
+# --- step 8: repair lets the spare cover the leftover failure again
+ev, plan, stats, gp = observed[2]
+assert tps[8] == ((4, 4), (4, 4)), tps[8]
+assert plan.healthy
+assert gp.spare_sites == ((0, 1, 1),), gp.spare_sites
+assert {k[0] for k in stats.per_pair} == {1}, stats.per_pair
+assert gp.predicted_bytes == stats.bytes_moved
+
+# --- step 11: full heal — plan already pristine, nothing moves
+ev, plan, stats8, gp = observed[3]
+assert plan.healthy and gp.predicted_bytes == 0
+assert stats8 is stats, "no transition may run on a plan-preserving repair"
+assert session.plan.healthy and session.health.healthy
+
+# --- every allocator decision amortized (or rescued) within the horizon
+for _, _, _, gp in observed:
+    for a in gp.decisions:
+        assert a.rescue or a.cost_s <= a.gain_s + 1e-12, a
+    for a in gp.transitions:
+        assert a.order is not None and a.bytes >= 0
+
+errs = [t["canonical_err"] for t in runner.transitions if "canonical_err" in t]
+print(f"{len(hist)} steps, {len(observed)} events, "
+      f"{sum(1 for *_, s, _ in observed if s is not None)} transitions, "
+      f"max canonical err {max(errs):.2e}, goodput {runner.goodput():.3f}")
+print("SESSION_ALLOC_PP_OK")

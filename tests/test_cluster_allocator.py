@@ -1,0 +1,313 @@
+"""`repro.cluster` — the global repack planner's invariants (ISSUE 6).
+
+Host-side, no mesh. The allocator's contract, asserted as properties:
+
+* **domain conservation** — swaps permute failure counts, spares zero a site
+  while recording what they absorbed; the ledger's failure multiset is
+  conserved exactly;
+* **amortization** — no non-rescue decision's priced transfer time exceeds
+  its goodput gain over the horizon; with a ZERO horizon (and the in-place
+  plan matching stage-local packing) the allocator never moves state at all;
+* **off-equivalence** — allocator off reproduces PR 5's stage-local plans
+  bit-exactly; the allocator with nothing to gain does too;
+* **determinism** — same ledger, same verdict, field for field.
+
+Each property runs over a deterministic scenario sweep ALWAYS, and under
+hypothesis when the dev extra is installed (the sweep is the floor, the
+fuzzer is the ceiling). Plus unit tests: spare placement, swap
+concentration, rescue priority, and the cost model's exactness against the
+executed `TransferStats` ledger.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cluster import (
+    Action, AllocatorConfig, GlobalPlan, GoodputModel, GreedyAllocator,
+    TransitionCost, TransitionCostModel, make_allocator,
+)
+from repro.core import ntp_train as nt
+from repro.core.nonuniform import FailurePlan, StagedPlan
+from repro.runtime.events import (
+    ClusterHealth, DeadReplicaError, StagedHealth, staged_plan_from_health,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # dev extra absent: the sweep still runs
+    HAVE_HYPOTHESIS = False
+
+
+def health_of(n1, counts):
+    return StagedHealth(tuple(
+        ClusterHealth(n1, tuple(int(x) for x in c)) for c in counts
+    ))
+
+
+def synthetic_cost(pp, n_layers=4):
+    """A calibrated-shaped cost model without trees: two unit families.
+    Family keys are unit counts and must be >= n1 (shard_mapping's k >= n1
+    invariant), so they clear every n1 the sweep uses."""
+    return TransitionCostModel(family_layer_bytes={8: 4096, 16: 1024},
+                               n_layers=n_layers, pp=pp)
+
+
+# deterministic floor for the properties: (n1, counts, spares) covering
+# pristine, absorbable, relocation-forcing, swap-skewed, dead+rescuable
+SWEEP = [
+    (4, ((0, 0), (0, 0)), 0),
+    (4, ((0, 0), (0, 0)), 1),
+    (4, ((0, 0), (1, 0)), 0),
+    (4, ((0, 0), (1, 0)), 1),
+    (4, ((0, 1), (1, 0)), 1),          # one spare, two wounded stages
+    (4, ((2, 2), (0, 0)), 0),          # skew: swap concentrates
+    (4, ((2, 0), (0, 2)), 0),          # anti-diagonal skew
+    (4, ((4, 0), (1, 0)), 1),          # dead domain: rescue
+    (4, ((3, 1), (1, 3)), 2),
+    (2, ((1, 0, 1), (0, 1, 0), (1, 1, 0)), 1),   # pp=3, d=3
+    (5, ((2, 4, 1), (0, 0, 3)), 2),
+]
+
+
+def _plan_or_none(alloc, h, **kw):
+    try:
+        return alloc.plan(h, **kw)
+    except DeadReplicaError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# properties (each: a check function + the sweep + optional hypothesis)
+
+def check_conservation(n1, counts, spares):
+    h = health_of(n1, counts)
+    gp = _plan_or_none(GreedyAllocator(), h, spares=spares)
+    if gp is None:      # even the allocator could not revive every replica
+        return
+    final = [list(c) for c in gp.counts]
+    assert len(gp.spare_sites) <= spares
+    for s, d, absorbed in gp.spare_sites:
+        assert final[s][d] == 0, "a spare must zero the site it covers"
+        final[s][d] = absorbed              # undo the absorption
+    assert sorted(x for c in final for x in c) == \
+        sorted(x for c in counts for x in c), (counts, gp.counts,
+                                               gp.spare_sites)
+    # and the packed plan realizes exactly the final counts, per stage
+    for c, fp in zip(gp.counts, gp.staged_plan.stages):
+        assert sorted(fp.replica_tp) == sorted(n1 - x for x in c)
+
+
+def check_amortized(n1, counts, spares):
+    pp = len(counts)
+    cost = synthetic_cost(pp)
+    current = staged_plan_from_health(StagedHealth.pristine(
+        len(counts[0]), n1, pp=pp))
+    alloc = GreedyAllocator(goodput=GoodputModel(n1=n1), cost=cost)
+    gp = _plan_or_none(alloc, health_of(n1, counts), spares=spares,
+                       current=current)
+    if gp is None:
+        return
+    for a in gp.decisions:
+        assert a.rescue or a.cost_s <= a.gain_s + 1e-12, a
+        assert a.bytes >= 0 and a.cost_s >= 0
+    # the priced total is exactly the sum of the per-stage movements
+    assert gp.predicted_bytes == sum(a.bytes for a in gp.transitions)
+    assert gp.predicted_bytes == cost.predict_bytes(current, gp.staged_plan)
+    # global packing never loses to the spare-less stage-local baseline
+    assert gp.goodput >= gp.baseline_goodput - 1e-12
+
+
+def check_zero_horizon_is_stage_local(n1, counts):
+    """No amortization budget + the stage-local plan already in place =>
+    the allocator must not move state: its verdict IS stage-local packing."""
+    h = health_of(n1, counts)
+    try:
+        sl = staged_plan_from_health(h)
+    except DeadReplicaError:
+        return          # baseline dead: only rescue moves apply, not covered
+    alloc = GreedyAllocator(AllocatorConfig(horizon_steps=0),
+                            goodput=GoodputModel(n1=n1),
+                            cost=synthetic_cost(len(counts)))
+    gp = alloc.plan(h, spares=0, current=sl)
+    assert gp.staged_plan == sl, (counts, gp.summary())
+    assert gp.predicted_bytes == 0 and not gp.moved
+
+
+def check_deterministic(n1, counts, spares):
+    h = health_of(n1, counts)
+    a = _plan_or_none(GreedyAllocator(), h, spares=spares)
+    b = _plan_or_none(GreedyAllocator(), h, spares=spares)
+    assert a == b
+
+
+@pytest.mark.parametrize("n1,counts,spares", SWEEP)
+def test_sweep_properties(n1, counts, spares):
+    check_conservation(n1, counts, spares)
+    check_amortized(n1, counts, spares)
+    check_zero_horizon_is_stage_local(n1, counts)
+    check_deterministic(n1, counts, spares)
+
+
+if HAVE_HYPOTHESIS:
+    def _layouts():
+        return st.integers(2, 5).flatmap(lambda n1: st.tuples(
+            st.just(n1),
+            st.integers(2, 3).flatmap(lambda d: st.lists(
+                st.lists(st.integers(0, n1), min_size=d, max_size=d),
+                min_size=2, max_size=3,
+            ).map(lambda c: tuple(tuple(x) for x in c))),
+            st.integers(0, 2),
+        ))
+
+    @settings(max_examples=80, deadline=None)
+    @given(_layouts())
+    def test_hypothesis_conservation(layout):
+        check_conservation(*layout)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_layouts())
+    def test_hypothesis_amortized(layout):
+        check_amortized(*layout)
+
+    @settings(max_examples=60, deadline=None)
+    @given(_layouts())
+    def test_hypothesis_zero_horizon(layout):
+        n1, counts, _ = layout
+        check_zero_horizon_is_stage_local(n1, counts)
+
+    @settings(max_examples=40, deadline=None)
+    @given(_layouts())
+    def test_hypothesis_deterministic(layout):
+        check_deterministic(*layout)
+
+
+# ---------------------------------------------------------------------------
+# allocator behavior units
+
+def test_allocator_off_is_stage_local():
+    assert make_allocator("off") is None and make_allocator(None) is None
+    h = health_of(4, ((0, 0), (1, 0)))
+    gp = GreedyAllocator().plan(h, spares=0)
+    assert gp.staged_plan == staged_plan_from_health(h)
+    assert not gp.spare_sites and not gp.swaps
+    with pytest.raises(ValueError, match="greedy"):
+        make_allocator("annealed")
+
+
+def test_spare_covers_the_worst_site():
+    h = health_of(4, ((1, 0), (3, 0)))
+    gp = GreedyAllocator().plan(h, spares=1)
+    assert gp.spare_sites == ((1, 0, 3),), gp.spare_sites
+    assert gp.counts == ((1, 0), (0, 0))
+    assert gp.goodput > gp.baseline_goodput
+
+
+def test_swap_concentrates_skewed_failures():
+    """Two half-wounded replicas are worse than one wounded + one healthy:
+    1F1B gates each replica at its slowest stage, so when BOTH of stage 0's
+    domains are hit the allocator swaps one of them against a healthy
+    stage-1 domain, concentrating the damage onto a single sacrificial
+    replica (eff TP (2,2) -> (2,4)). Note the anti-diagonal ((2,0),(0,2))
+    needs NO swap: per-stage packing already aligns worst-with-worst."""
+    gm = GoodputModel(n1=4)
+    h = health_of(4, ((2, 2), (0, 0)))
+    gp = GreedyAllocator(goodput=gm).plan(h, spares=0)
+    assert gp.swaps, gp.summary()
+    assert gm.effective_tp([np.array(c) for c in gp.counts]).tolist() == [2, 4]
+    assert gp.goodput > gp.baseline_goodput
+
+    gp2 = GreedyAllocator(goodput=gm).plan(health_of(4, ((2, 0), (0, 2))),
+                                           spares=0)
+    assert not gp2.swaps and gp2.goodput == gp.goodput
+
+
+def test_dead_domain_rescued_by_spare():
+    h = health_of(4, ((4, 0), (1, 0)))        # domain 0 of stage 0 is dead
+    with pytest.raises(DeadReplicaError):
+        GreedyAllocator().plan(h, spares=0)
+    gp = GreedyAllocator().plan(h, spares=1)
+    rescue = [a for a in gp.decisions if a.rescue]
+    assert rescue and rescue[0].site == (0, 0) and rescue[0].absorbed == 4
+    assert gp.staged_plan.healthy is not None    # packable
+    assert gp.baseline is None                   # stage-local alone was dead
+
+
+def test_allocator_requires_staged_health():
+    with pytest.raises(AssertionError):
+        GreedyAllocator().plan(ClusterHealth(4, (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# cost model: exact against the executed ledger
+
+def _cost_cfg():
+    return nt.NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2,
+                             head_dim=16, d_ff=256, unit_rows=64,
+                             n_layers=4, vocab=128)
+
+
+@pytest.mark.parametrize("old,new", [
+    (StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (2, 2)))),
+     StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (1, 2))))),
+    (StagedPlan((FailurePlan(2, (1, 2)), FailurePlan(2, (2, 2)))),
+     StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (1, 1))))),
+    (StagedPlan((FailurePlan(2, (1, 2)), FailurePlan(2, (2, 1)))),
+     StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (2, 2))))),
+])
+def test_cost_model_matches_executed_ledger(old, new):
+    """`from_trees` + `predict_bytes` == the `TransferStats.bytes_moved` the
+    reshard engine actually books for the same transition — both directions
+    (degrade and repair), with an optimizer tree riding along."""
+    from repro.reshard.transition import transition_staged_trees
+
+    cfg = _cost_cfg()
+    params = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(0)),
+                            old)
+    m = jax.tree.map(np.zeros_like, params)      # one AdamW-moment-like tree
+    trees = [params, m]
+    cost = TransitionCostModel.from_trees(cfg, trees, pp=2)
+    predicted = cost.predict(old, new)
+    assert isinstance(predicted, TransitionCost)
+    _, stats = transition_staged_trees(cfg, trees, old, new,
+                                       copy_unchanged=False)
+    assert predicted.total_bytes == stats.bytes_moved, (
+        predicted.stage_bytes, stats.bytes_moved)
+    # per-stage split matches the stage-tagged ledger too
+    for s in range(2):
+        booked = sum(v for k, v in stats.bytes_by_pair.items() if k[0] == s) \
+            if hasattr(stats, "bytes_by_pair") else None
+        if booked is not None:
+            assert predicted.stage_bytes[s] == booked
+    assert predicted.seconds == predicted.total_bytes / cost.scaleup_bw
+
+
+def test_cost_model_unchanged_plan_is_free():
+    cfg = _cost_cfg()
+    sp = StagedPlan((FailurePlan(2, (2, 2)), FailurePlan(2, (1, 2))))
+    params = nt.pack_params(cfg, nt.init_canonical(cfg, jax.random.PRNGKey(1)),
+                            sp)
+    cost = TransitionCostModel.from_trees(cfg, [params], pp=2)
+    assert cost.predict_bytes(sp, sp) == 0
+    assert cost.predict_bytes(None, sp) == 0     # fresh packing is free
+
+
+def test_cost_model_analytic_and_goodput_for_perf():
+    from repro.core.perf_model import (
+        Hardware, Parallel, Workload, iteration_time,
+    )
+
+    hw, wl = Hardware(), Workload()
+    par = Parallel(tp=hw.domain_size, pp=4, dp=8)
+    cost = TransitionCostModel.analytic(wl, par)
+    assert cost.pp == par.pp and cost.n_layers == wl.n_layers
+    (k, per_layer), = cost.family_layer_bytes.items()
+    assert per_layer * wl.n_layers * k == pytest.approx(
+        wl.n_params * 12, rel=1e-6)
+    gm = GoodputModel.for_perf(hw, wl, par)
+    assert gm.n1 == par.tp
+    assert gm.step_time_s == iteration_time(hw, wl, par)["total"]
+    assert gm.goodput([np.zeros(4, int)] * par.pp) == 1.0
+    assert gm.gain_seconds(0.25, 100) == pytest.approx(
+        0.25 * gm.step_time_s * 100)

@@ -380,3 +380,14 @@ def test_session_pp_lifecycle(run_dist):
     per-stage rel_iter_time metrics follow the slowest-stage rule."""
     out = run_dist("session_pp_lifecycle.py")
     assert "SESSION_PP_LIFECYCLE_OK" in out
+
+
+@pytest.mark.slow
+def test_allocator_pp_spares_lifecycle(run_dist):
+    """ISSUE 6 acceptance: pp=2 with ONE spare domain, stage-addressed
+    fail->repair chain — the allocator-driven session matches the dense
+    reference to f32 exactness, the spare absorbs / relocates across stages,
+    and `session.last_transition` carries only the allocator's priced moves
+    (predicted bytes == executed ledger, no dense round-trip)."""
+    out = run_dist("session_allocator_lifecycle.py")
+    assert "SESSION_ALLOC_PP_OK" in out

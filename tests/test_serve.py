@@ -153,6 +153,67 @@ def test_griffin_failover_and_preemption_token_equivalence():
     assert faulty.goodput()["preemptions"] >= 1
 
 
+def test_encdec_failover_token_equivalence():
+    """Whisper-style encoder-decoder (ISSUE 6 satellite): the cross-attention
+    K/V bank (``ek``/``ev`` leaves, ``enc_kv_head`` units) is filled once at
+    prefill and resharded through fail→repair like self-attention KV — greedy
+    streams must match an uninterrupted run through TP 4→3→2 and back."""
+    from repro.configs.base import EncoderSpec
+
+    cfg = _cfg(kvh=2, arch_id="serve-test-encdec", use_rope=False,
+               tie_embeddings=True, encoder=EncoderSpec(n_layers=2, enc_seq=16))
+
+    def enc_reqs(n, rng):
+        reqs = _requests(n, rng)
+        for r in reqs:
+            r.enc_input = rng.standard_normal(
+                (cfg.encoder.enc_seq, cfg.d_model)).astype(np.float32) * 0.1
+        return reqs
+
+    events = [
+        (2, FailureEvent(domain=0)),
+        (7, FailureEvent(domain=0)),
+        (16, RecoveryEvent(domain=0)),
+        (20, RecoveryEvent(domain=0)),
+    ]
+    _, faulty = _run(cfg, events, enc_reqs(6, np.random.default_rng(3)))
+    _, ref = _run(cfg, [], enc_reqs(6, np.random.default_rng(3)))
+    got = {r.rid: list(r.generated) for r in faulty.completed}
+    want = {r.rid: list(r.generated) for r in ref.completed}
+    assert set(got) == set(want) and len(got) == 6
+    for rid in want:
+        assert got[rid] == want[rid], (rid, got[rid], want[rid])
+
+
+def test_encdec_requires_enc_input_and_rejects_recurrent():
+    """enc-dec admission validates Request.enc_input (present + right shape,
+    message naming (enc_seq, d_model)); recurrent enc-dec stacks are still
+    rejected at engine construction with an actionable error."""
+    import dataclasses
+
+    from repro.configs.base import EncoderSpec
+
+    cfg = _cfg(kvh=2, arch_id="serve-test-encdec2", use_rope=False,
+               tie_embeddings=True, encoder=EncoderSpec(n_layers=2, enc_seq=16))
+    session = ServeSession.create(
+        cfg, replicas=1, n1=N1, slots=2, max_len=64, prefill_len=16,
+        policy="ntp", key=jax.random.PRNGKey(0),
+    )
+    eng = session.engines[0]
+    with pytest.raises(ValueError, match=r"enc_input"):
+        eng.admit(Request(rid=0, prompt=np.ones(4, np.int32), max_new=2))
+    with pytest.raises(ValueError, match=r"\(16, 64\)"):
+        eng.admit(Request(rid=1, prompt=np.ones(4, np.int32), max_new=2,
+                          enc_input=np.zeros((8, 64), np.float32)))
+
+    cfg_rec = dataclasses.replace(
+        CFG_SSM, arch_id="serve-test-encdec-ssm",
+        encoder=EncoderSpec(n_layers=2, enc_seq=16))
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeSession.create(cfg_rec, replicas=1, n1=N1, slots=2, max_len=64,
+                            prefill_len=16, key=jax.random.PRNGKey(0))
+
+
 def test_tokens_match_raw_dense_model():
     """Anchor the engine against the raw model: prefill + decode_step loop
     (no slots, no sharding, no vmap) produces the same greedy stream as the

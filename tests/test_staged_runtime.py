@@ -136,10 +136,19 @@ def test_serving_rejects_staged_events():
         resolve_serving_domain(FailureEvent(stage=1, domain=0), 4)
 
 
-def test_staged_spares_not_implemented():
+def test_staged_spares_need_allocator():
+    """Spares with pp > 1 are legal ONLY through the global allocator (a
+    spare can absorb failures in any stage — DESIGN.md §2.7): without one
+    the error names the --allocator escape hatch; with one the joint search
+    runs and the spare absorbs the failure."""
+    from repro.cluster import GreedyAllocator
+
     h = StagedHealth.pristine(2, 4, pp=2)
-    with pytest.raises(NotImplementedError, match="spare"):
+    with pytest.raises(ValueError, match="--allocator"):
         staged_plan_from_health(h, spares=1)
+    h1 = h.apply(FailureEvent(stage=1, domain=0))
+    plan = staged_plan_from_health(h1, spares=1, allocator=GreedyAllocator())
+    assert plan.healthy   # the spare stood in for the failed stage-1 domain
 
 
 def test_session_rejects_unstaged_plan_or_health_with_pp():
