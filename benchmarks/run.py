@@ -18,6 +18,7 @@ MODULES = [
     "fig10_blast_radius",
     "fig_serving_goodput",
     "bench_cluster",
+    "bench_hotpath",
     "table1_power",
     "roofline",
     "fig11_model_validation",

@@ -461,15 +461,27 @@ def make_ntp_train_step(
 
     ``fplan`` may be a `StagedPlan` (nonuniform PP, DESIGN.md §2.6): each
     layer's gradients sync under its OWN stage's reshard plan (stage-local
-    traffic), and the forward runs stage-sequentially over ``microbatches``
-    chunks (the 1F1B emulation; bubble cost is analytic — `core.perf_model`).
-    A pp=1 `StagedPlan` (and ``microbatches=1``) takes the EXACT uniform-plan
-    code path below, so the single-stage step is bit-identical to what this
-    builder produced before stages existed."""
+    traffic). On a 2-axis ``(data, model)`` mesh the forward runs
+    stage-sequentially over ``microbatches`` chunks (the 1F1B emulation;
+    bubble cost is analytic — `core.perf_model`); on a staged
+    ``(stage, data, model)`` mesh (`launch.mesh.make_staged_mesh`) the step
+    is lowered onto per-stage submeshes with a `ppermute` activation
+    hand-off, so bubble and cross-stage traffic are MEASURED
+    (`core.pp_submesh`, DESIGN.md §2.8). A pp=1 `StagedPlan` (and
+    ``microbatches=1``) takes the EXACT uniform-plan code path below, so the
+    single-stage step is bit-identical to what this builder produced before
+    stages existed."""
     if isinstance(fplan, nu.StagedPlan) and fplan.pp == 1:
         fplan = fplan.stages[0]
     if isinstance(fplan, nu.StagedPlan) or microbatches > 1:
-        return _make_staged_train_step(
+        from repro.core import pp_submesh
+
+        builder = (
+            pp_submesh.make_submesh_train_step
+            if pp_submesh.is_staged_mesh(mesh)
+            else _make_staged_train_step
+        )
+        return builder(
             cfg, nu.as_staged(fplan), mesh, mode=mode, local_batch=local_batch,
             optimizer=optimizer, local_batches=local_batches,
             microbatches=microbatches,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.mode import pallas_interpret
+
 NEG_INF = -1e30
 
 
@@ -95,17 +97,32 @@ def flash_attention(
     softcap: Optional[float] = None,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """q: (B, H, S, D); k/v: (B, KVH, S, D) with H % KVH == 0.
-    Returns (B, H, S, D) in q.dtype."""
+    Returns (B, H, S, D) in q.dtype.
+
+    ``interpret=None`` resolves via `kernels.mode.pallas_interpret`
+    (compiled on TPU/GPU, interpret on CPU)."""
     b, h, s, d = q.shape
     kvh = k.shape[1]
     qpk = h // kvh
     bq = min(block_q, s)
     bk = min(block_k, s)
-    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    if s % bq != 0:
+        raise ValueError(
+            f"flash_attention: sequence length s={s} is not divisible by the "
+            f"query-block size block_q={bq}; pad the sequence or pass a "
+            f"block_q that divides {s}"
+        )
+    if s % bk != 0:
+        raise ValueError(
+            f"flash_attention: sequence length s={s} is not divisible by the "
+            f"key-block size block_k={bk}; pad the sequence or pass a "
+            f"block_k that divides {s}"
+        )
     nq, nk = s // bq, s // bk
+    interpret = pallas_interpret(interpret)
 
     kernel = functools.partial(
         _flash_kernel, kind=kind, window=window, chunk=chunk,

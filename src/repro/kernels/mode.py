@@ -1,0 +1,36 @@
+"""Pallas execution-mode resolution, shared by every kernel module and the
+jit'd wrappers in `kernels.ops` (kept out of ``ops`` so the kernel modules
+can import it without a cycle).
+
+Kernels are COMPILED BY DEFAULT wherever a non-CPU backend exists: the
+kernels target TPU, so on real accelerators the compiled path is the hot
+path and interpret mode is only a debugging tool. On CPU (this container,
+CI) the TPU lowering does not exist, so interpret mode — executing the
+kernel body op by op — stays the fallback that validates the kernel math.
+
+Resolution order, per call:
+
+1. an explicit ``interpret=`` argument wins;
+2. else ``REPRO_PALLAS_COMPILE`` decides when set (``1`` → compiled,
+   ``0`` → interpret; the launchers' ``--pallas-compile`` sets it, and it is
+   read dynamically so flipping it mid-process takes effect on the next
+   call);
+3. else the backend decides: compiled on TPU/GPU, interpret on CPU.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def pallas_interpret(override: Optional[bool] = None) -> bool:
+    """True → run the kernel in interpret mode. See the module docstring for
+    the resolution order (explicit > env var > backend default)."""
+    if override is not None:
+        return bool(override)
+    env = os.environ.get("REPRO_PALLAS_COMPILE")
+    if env is not None and env != "":
+        return env != "1"
+    return jax.default_backend() == "cpu"

@@ -1,20 +1,17 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-Execution mode is resolved PER CALL by `pallas_interpret`: the kernel
-modules themselves default to ``interpret=True`` (this container is
-CPU-only; the kernels target TPU and are validated by executing the kernel
-body in interpret mode), and callers thread compiled mode through either
-the ``interpret=`` keyword or the ``REPRO_PALLAS_COMPILE=1`` environment
-variable (set it — or pass ``--pallas-compile`` to the launchers — on a
-real TPU to run the compiled kernels). The env var is read dynamically, so
-flipping it mid-process takes effect on the next call; each mode jit-caches
-separately (``interpret`` is a static argname).
+Execution mode is resolved PER CALL by `pallas_interpret`
+(`kernels/mode.py`): COMPILED BY DEFAULT wherever a non-CPU device exists,
+interpret as the CPU/CI fallback. Callers can force a mode through either
+the ``interpret=`` keyword or the ``REPRO_PALLAS_COMPILE`` environment
+variable (``--pallas-compile`` on the launchers sets it to ``1``; ``0``
+forces interpret for debugging on an accelerator). The env var is read
+dynamically, so flipping it mid-process takes effect on the next call; each
+mode jit-caches separately (``interpret`` is a static argname).
 """
 from __future__ import annotations
 
 import functools
-import os
-from typing import Optional
 
 import jax
 
@@ -22,14 +19,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import reshard_pack as _rp
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
-
-
-def pallas_interpret(override: Optional[bool] = None) -> bool:
-    """The kernel execution mode: an explicit ``override`` wins, else the
-    ``REPRO_PALLAS_COMPILE`` env var decides (unset/0 → interpret)."""
-    if override is not None:
-        return bool(override)
-    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+from repro.kernels.mode import pallas_interpret
 
 
 @functools.partial(

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.mode import pallas_interpret
+
 
 def _pack_kernel(idx_ref, src_ref, out_ref, *, s_max: int):
     def body(s, _):
@@ -31,12 +33,16 @@ def _pack_kernel(idx_ref, src_ref, out_ref, *, s_max: int):
     jax.lax.fori_loop(0, s_max, body, 0)
 
 
-def reshard_pack(src, send_idx, *, interpret: bool = True):
+def reshard_pack(src, send_idx, *, interpret: bool | None = None):
     """src: (U+1, unit_elems) — zero-padded unit buffer (last row zeros).
     send_idx: (n, s_max) int32 local slot per (dst, msg-slot), pad = U.
-    Returns send buffer (n, s_max, unit_elems)."""
+    Returns send buffer (n, s_max, unit_elems).
+
+    ``interpret=None`` resolves via `kernels.mode.pallas_interpret`
+    (compiled on TPU/GPU, interpret on CPU)."""
     up1, elems = src.shape
     n, s_max = send_idx.shape
+    interpret = pallas_interpret(interpret)
     kernel = functools.partial(_pack_kernel, s_max=s_max)
     return pl.pallas_call(
         kernel,

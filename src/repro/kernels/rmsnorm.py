@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.mode import pallas_interpret
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
     x = x_ref[...].astype(jnp.float32)
@@ -24,11 +26,20 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
 
 
 def rmsnorm(x, w, *, eps: float = 1e-6, plus_one: bool = False,
-            block_rows: int = 256, interpret: bool = True):
-    """x: (N, d); w: (d,). Returns (N, d) in x.dtype."""
+            block_rows: int = 256, interpret: bool | None = None):
+    """x: (N, d); w: (d,). Returns (N, d) in x.dtype.
+
+    ``interpret=None`` resolves via `kernels.mode.pallas_interpret`
+    (compiled on TPU/GPU, interpret on CPU)."""
     n, d = x.shape
     br = min(block_rows, n)
-    assert n % br == 0, (n, br)
+    if n % br != 0:
+        raise ValueError(
+            f"rmsnorm: row count n={n} is not divisible by the row-block "
+            f"size block_rows={br}; pad the rows or pass a block_rows that "
+            f"divides {n}"
+        )
+    interpret = pallas_interpret(interpret)
     kernel = functools.partial(_rmsnorm_kernel, eps=eps, plus_one=plus_one)
     return pl.pallas_call(
         kernel,

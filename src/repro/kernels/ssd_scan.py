@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.mode import pallas_interpret
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *, L: int):
     ci = pl.program_id(1)
@@ -62,17 +64,27 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *, L: int):
     y_ref[0] = y.astype(y_ref.dtype)
 
 
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, interpret: bool = True):
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
+             interpret: bool | None = None):
     """SSD scan over (BH, S, ·) flattened batch·heads.
 
     x: (BH, S, hp); dt: (BH, S); A: (BH,); B, C: (BH, S, ds).
     Returns y: (BH, S, hp) fp32. (Zero initial state; the recurrent decode
     path lives in models/ssm.py — this kernel is the train/prefill hot loop.)
+
+    ``interpret=None`` resolves via `kernels.mode.pallas_interpret`
+    (compiled on TPU/GPU, interpret on CPU).
     """
     bh, s, hp = x.shape
     ds = B.shape[-1]
     L = min(chunk, s)
-    assert s % L == 0
+    if s % L != 0:
+        raise ValueError(
+            f"ssd_scan: sequence length s={s} is not divisible by the "
+            f"chunk length chunk={L}; pad the sequence or pass a chunk "
+            f"that divides {s}"
+        )
+    interpret = pallas_interpret(interpret)
     kernel = functools.partial(_ssd_kernel, L=L)
     return pl.pallas_call(
         kernel,

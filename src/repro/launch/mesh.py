@@ -25,3 +25,26 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for multi-device CPU tests (subprocesses set
     xla_force_host_platform_device_count accordingly)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_staged_mesh(pp: int, n_data: int = 2, n_model: int = 4,
+                     devices=None):
+    """Per-stage submesh geometry for MEASURED pipeline parallelism
+    (core/pp_submesh, DESIGN.md §2.8): ``pp × n_data × n_model`` devices on
+    axes ``("stage", "data", "model")``. Stage ``s``'s layer weights live
+    only on the ``stage == s`` slice; activations cross stages via
+    `jax.lax.ppermute`. Needs ``pp·n_data·n_model`` visible devices."""
+    if pp < 2:
+        raise ValueError(
+            f"pp={pp}: a staged mesh needs >= 2 stages; use make_test_mesh "
+            "(the stage-sequential emulation) for pp=1"
+        )
+    devs = list(devices) if devices is not None else jax.devices()
+    n = pp * n_data * n_model
+    if len(devs) < n:
+        raise ValueError(
+            f"staged mesh (stage={pp}, data={n_data}, model={n_model}) needs "
+            f"{n} devices, have {len(devs)}"
+        )
+    return jax.make_mesh((pp, n_data, n_model), ("stage", "data", "model"),
+                         devices=devs[:n])

@@ -117,6 +117,12 @@ class NTPSession:
         self.last_transition = None   # TransferStats of the latest repack
         self.last_global_plan = None  # allocator's latest GlobalPlan verdict
         d, n1 = mesh.shape["data"], mesh.shape["model"]
+        if "stage" in getattr(mesh, "axis_names", ()):
+            # measured submesh PP (core/pp_submesh, DESIGN.md §2.8): one
+            # device slice per pipeline stage, validated before any compute
+            from repro.core.pp_submesh import validate_staged_mesh
+
+            validate_staged_mesh(mesh, pp)
 
         if allocator is not None and pp <= 1:
             raise ValueError(
@@ -288,6 +294,13 @@ class NTPSession:
     # ------------------------------------------------------------- introspect
 
     @property
+    def backend(self) -> str:
+        """``"ntp"`` (NTPSession.create, full lifecycle surface) or
+        ``"arch"`` (NTPSession.from_arch, uniform training only — lifecycle
+        calls raise NotImplementedError naming the alternative)."""
+        return self._backend
+
+    @property
     def mode(self) -> Mode:
         return self._mode
 
@@ -357,7 +370,7 @@ class NTPSession:
 
     def canonical_params(self, replica: int = 0) -> Dict:
         """Dense canonical weights recovered from one replica (NTP backend)."""
-        self._require_ntp("canonical_params")
+        self._require_ntp("canonical weight reconstruction")
         return nt.unpack_params(self._cfg, jax.device_get(self._params),
                                 self._plan, replica=replica)
 
@@ -386,6 +399,15 @@ class NTPSession:
                 metrics,
                 stage_rel_iter_time=self._stage_rel,
                 rel_iter_time=max(self._stage_rel),
+            )
+        if getattr(self._step_fn, "submesh", False):
+            # the measured submesh path annotates its pipeline schedule: the
+            # tick count behind the bubble and the per-step cross-stage
+            # hand-off byte table (core/pp_submesh.handoff_accounting)
+            metrics = dict(
+                metrics,
+                pipeline_ticks=self._step_fn.ticks,
+                handoff=self._step_fn.handoff,
             )
         self._last_metrics = metrics
         return metrics
@@ -457,10 +479,22 @@ class NTPSession:
     # ---------------------------------------------------------------- private
 
     def _require_ntp(self, what: str) -> None:
+        """Guard for features the arch backend does not implement. The error
+        names the caller that hit it (the public method, via the stack) and
+        the ``what`` feature, so a trace replay or launcher flag that lands
+        here is diagnosable without reading this file."""
         if self._backend != "ntp":
+            import inspect
+
+            frame = inspect.stack()[1]
             raise NotImplementedError(
-                f"{what} needs the NTP prototype backend (NTPSession.create); "
-                "the arch backend trains uniformly via train/steps.py"
+                f"NTPSession.{frame.function}() needs {what}, which only the "
+                "NTP prototype backend implements — this session was built "
+                "with NTPSession.from_arch() (uniform training via "
+                "train/steps.make_setup; a failure there is a full restart). "
+                "Build the session with NTPSession.create(...) — e.g. "
+                "launch/train.py --ntp instead of --arch — to use lifecycle "
+                "events, canonical checkpoints, or power policies."
             )
 
     def _staged_replan(self, health: StagedHealth, *, current):

@@ -105,3 +105,40 @@ def test_reshard_pack(u, elems, n, smax):
     got = ops.reshard_pack(src, idx)
     want = ref.reshard_pack_ref(src, idx)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# shape validation (ISSUE 7 satellite): must survive `python -O` — ValueError,
+# not assert — and name BOTH the offending dimension and the block-size
+# argument, so a bad launcher flag is diagnosable from the message alone.
+
+def test_rmsnorm_rejects_indivisible_rows():
+    x = jnp.zeros((96, 8), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    with pytest.raises(ValueError,
+                       match=r"rmsnorm: row count n=96 .* block_rows=64"):
+        ops.rmsnorm(x, w, block_rows=64, interpret=True)
+
+
+def test_flash_attention_rejects_indivisible_blocks():
+    q = jnp.zeros((1, 2, 48, 16), jnp.float32)
+    k = jnp.zeros((1, 1, 48, 16), jnp.float32)
+    v = jnp.zeros((1, 1, 48, 16), jnp.float32)
+    with pytest.raises(
+            ValueError,
+            match=r"sequence length s=48 .* query-block size block_q=32"):
+        ops.flash_attention(q, k, v, block_q=32, block_k=48, interpret=True)
+    with pytest.raises(
+            ValueError,
+            match=r"sequence length s=48 .* key-block size block_k=32"):
+        ops.flash_attention(q, k, v, block_q=48, block_k=32, interpret=True)
+
+
+def test_ssd_scan_rejects_indivisible_chunk():
+    x = jnp.zeros((2, 48, 4), jnp.float32)
+    dt = jnp.zeros((2, 48), jnp.float32)
+    A = jnp.zeros((2,), jnp.float32)
+    B = jnp.zeros((2, 48, 8), jnp.float32)
+    with pytest.raises(ValueError,
+                       match=r"sequence length s=48 .* chunk length chunk=32"):
+        ops.ssd_scan(x, dt, A, B, B, chunk=32, interpret=True)

@@ -344,6 +344,41 @@ def test_session_rejects_unpacked_plan_order():
                           plan=FailurePlan(n1=4, replica_tp=(4, 3)))
 
 
+def test_require_ntp_names_caller_and_alternative():
+    """ISSUE 7 satellite: the arch backend's guard must name the public entry
+    point that hit it (via the call stack), the missing feature, and the
+    supported alternative (`--ntp instead of --arch`) — and the ntp backend
+    must pass the same guard silently."""
+    from conftest import reduced_cfg
+    from repro.configs.shapes import ShapeSpec
+    from repro.runtime import NTPSession
+
+    arch = NTPSession.from_arch(reduced_cfg("qwen2-7b"),
+                                ShapeSpec("t", 16, 2, "train"), None)
+    assert arch.backend == "arch"
+    with pytest.raises(NotImplementedError,
+                       match=r"NTPSession\.canonical_params\(\) needs "
+                             r"canonical weight reconstruction"):
+        arch.canonical_params()
+    with pytest.raises(NotImplementedError,
+                       match=r"NTPSession\.apply\(\) needs lifecycle "
+                             r"replanning.*--ntp instead of --arch"):
+        arch.apply(FailureEvent(replica=0, n_gpus=1))
+    with pytest.raises(NotImplementedError, match=r"NTPSession\.save\(\)"):
+        arch.save("/nonexistent/never-written")
+
+    class StubMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+
+    ntp = NTPSession.create(_tiny_cfg(), StubMesh(),
+                            plan=FailurePlan(n1=2, replica_tp=(2, 2)))
+    assert ntp.backend == "ntp"
+    assert ntp.local_batches == [4, 4]          # guard passes, no raise
+    canon = ntp.canonical_params()
+    assert set(canon) >= {"embed", "head", "layers"}
+
+
 # ---------------------------------------------------------------------------
 # live session transition (8 fake devices, subprocess)
 
@@ -380,6 +415,16 @@ def test_session_pp_lifecycle(run_dist):
     per-stage rel_iter_time metrics follow the slowest-stage rule."""
     out = run_dist("session_pp_lifecycle.py")
     assert "SESSION_PP_LIFECYCLE_OK" in out
+
+
+@pytest.mark.slow
+def test_session_submesh_pp_measured(run_dist):
+    """ISSUE 7 acceptance: the measured submesh pipeline (per-stage device
+    slices + ppermute hand-off, core/pp_submesh) matches the stage-sequential
+    emulation step-for-step through fail->repair, and its hand-off byte
+    table equals the independent accounting."""
+    out = run_dist("session_submesh_pp.py", devices=16)
+    assert "SESSION_SUBMESH_PP_OK" in out
 
 
 @pytest.mark.slow
