@@ -56,20 +56,42 @@ SERVE_KEYS = {"config", "prefill_and_decode", "kv_reshard"}
 
 
 def _worker(smoke: bool) -> dict:
-    """Runs inside the 16-fake-device subprocess; returns the measurements."""
+    """Runs inside the 16-fake-device subprocess; returns the measurements.
+
+    All timings flow through one `repro.telemetry` recorder (spans around
+    the block_until_ready'd regions, gauges for derived factors) and the
+    report is read back from its MemorySink series — the bench consumes the
+    same observability surface the runtime emits, instead of bespoke timer
+    lists. The recorder is ACTIVE for the whole worker, so the runtime's own
+    events (session spans, `kernels.dispatch` counters) land in the same
+    ring and the kernel rows can cross-check their dispatch modes."""
     import numpy as np
 
     import jax
     import jax.numpy as jnp
 
+    from repro import telemetry
     from repro.core import perf_model as pm
     from repro.kernels import ops
     from repro.launch.mesh import make_staged_mesh
     from repro.optim import sgd
     from repro.runtime import FailureEvent, NTPModelConfig, NTPSession
+    from repro.telemetry import MemorySink, Recorder
 
+    rec = Recorder(sinks=[MemorySink()])
+    with telemetry.recording(rec):
+        return _worker_recorded(smoke, rec, np, jax, jnp, pm, ops,
+                                make_staged_mesh, sgd, FailureEvent,
+                                NTPModelConfig, NTPSession)
+
+
+def _worker_recorded(smoke, rec, np, jax, jnp, pm, ops, make_staged_mesh,
+                     sgd, FailureEvent, NTPModelConfig, NTPSession) -> dict:
     LB, SEQ, MB = (4, 16, 2) if smoke else (8, 32, 4)
-    steps = 2 if smoke else 5
+    # 6 smoke steps, not 2: the bubble gate estimates from per-step PAIRS,
+    # and a 2-sample estimate is one scheduler hiccup away from the
+    # tolerance edge; compile time dominates smoke wall time anyway
+    steps = 6 if smoke else 5
     PP, D, N1 = 2, 2, 4
     cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
                          d_ff=256, unit_rows=64, n_layers=4, vocab=128)
@@ -86,30 +108,54 @@ def _worker(smoke: bool) -> dict:
     def batch():
         return jnp.asarray(rng.integers(0, cfg.vocab, (D * LB, SEQ + 1)))
 
-    def timed_steps(sess, n):
+    def warmup(sess):
         # TWO warmup steps: the first compiles the fresh-params graph, the
         # second recompiles for the donated-buffer layout the steady state
         # actually runs with
         for _ in range(2):
             m = sess.step(batch())
             jax.block_until_ready((sess.params, m["loss"]))
-        ts = []
-        for _ in range(n):
-            b = batch()
-            t0 = time.perf_counter()
+
+    def one_step(sess, run):
+        # the span closes only after block_until_ready, so its duration is
+        # the step's true wall time, not its dispatch
+        b = batch()
+        with rec.span("bench.step", run=run):
             m = sess.step(b)
             jax.block_until_ready((sess.params, m["loss"]))
-            ts.append(time.perf_counter() - t0)
-        return 1e3 * float(np.median(ts)), m
+        return m
 
-    t_emu, _ = timed_steps(emu, steps)
-    t_sub, ms = timed_steps(sub, steps)
+    def med_ms(run):
+        return 1e3 * float(np.median(
+            [s["dur"] for s in rec.spans("bench.step", run=run)]))
+
+    # emulation and submesh steps INTERLEAVE so slow drifts in host load
+    # land on both sides of the bubble ratio instead of biasing one loop
+    warmup(emu)
+    warmup(sub)
+    for _ in range(steps):
+        one_step(emu, "emulation")
+        ms = one_step(sub, "submesh")
+    t_emu, t_sub = med_ms("emulation"), med_ms("submesh")
     handoff = dict(ms["handoff"])
+    # the bubble gate estimates the factor as the MEDIAN OF PER-PAIR RATIOS
+    # from the interleaved steps: load transients within one pair hit both
+    # numerator and denominator, and the median discards pairs where a
+    # spike hit only one side — far more stable on a shared CPU host than
+    # the ratio of two small-sample medians
+    pair_ratios = [
+        s["dur"] / e["dur"] for e, s in zip(
+            rec.spans("bench.step", run="emulation"),
+            rec.spans("bench.step", run="submesh"))
+    ]
 
     # degraded stage still runs the measured path; its repack is the ledger
     sub.apply(FailureEvent(step=steps + 1, stage=1, domain=0))
     reshard_bytes = int(sub.last_transition.bytes_moved)
-    t_deg, _ = timed_steps(sub, max(2, steps // 2))
+    warmup(sub)
+    for _ in range(max(2, steps // 2)):
+        one_step(sub, "submesh_degraded")
+    t_deg = med_ms("submesh_degraded")
 
     # --- measured vs analytic bubble ---------------------------------------
     n_params = int(sum(
@@ -123,8 +169,16 @@ def _worker(smoke: bool) -> dict:
                      minibatch_tokens=float(D * LB * SEQ), act_bytes=4)
     par = pm.Parallel(tp=N1, pp=PP, dp=D, microbatch_seqs=LB // MB)
     it = pm.staged_iteration_time(hw, wl, par, (N1,) * PP)
-    analytic_factor = it["total"] / (it["total"] - it["pp_bubble"])
-    measured_factor = t_sub / t_emu
+    # measured-vs-analytic lands as a labeled gauge pair and the drift gate
+    # reads the RECORDER's series, not function-local floats — the same
+    # series a --telemetry run of the launcher exposes for offline diffing
+    rec.gauge("bench.bubble_factor",
+              it["total"] / (it["total"] - it["pp_bubble"]),
+              source="analytic")
+    rec.gauge("bench.bubble_factor", float(np.median(pair_ratios)),
+              source="measured")
+    analytic_factor = rec.values("bench.bubble_factor", source="analytic")[-1]
+    measured_factor = rec.values("bench.bubble_factor", source="measured")[-1]
     rel_err = abs(measured_factor - analytic_factor) / analytic_factor
 
     # --- per-kernel interpret vs compiled ----------------------------------
@@ -148,23 +202,32 @@ def _worker(smoke: bool) -> dict:
         "reshard_pack": lambda i: ops.reshard_pack(src, idx, interpret=i),
     }
 
-    def time_us(f, n=3 if smoke else 10):
+    def time_us(f, n=3 if smoke else 10, label="misc"):
         jax.block_until_ready(f())
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(f())
-        return round((time.perf_counter() - t0) / n * 1e6, 1)
+        with rec.span("bench.kernel_loop", label=label):
+            for _ in range(n):
+                jax.block_until_ready(f())
+        dur = rec.spans("bench.kernel_loop", label=label)[-1]["dur"]
+        return round(dur / n * 1e6, 1)
 
     kernels = {}
     for name, call in calls.items():
-        row = {"interpret_us": time_us(lambda: call(True)),
+        row = {"interpret_us": time_us(lambda: call(True),
+                                       label=f"{name}:interpret"),
                "compiled_us": None, "ratio": None, "note": ""}
         try:
-            row["compiled_us"] = time_us(lambda: call(False))
+            row["compiled_us"] = time_us(lambda: call(False),
+                                         label=f"{name}:compiled")
             row["ratio"] = round(row["interpret_us"] / row["compiled_us"], 2)
         except Exception as e:  # noqa: BLE001 — CPU cannot lower Pallas
             row["note"] = (f"backend {jax.default_backend()!r} cannot "
                            f"compile Pallas ({type(e).__name__})")
+        # the dispatch counter the active recorder collected from
+        # kernels.mode — proof of which mode each public wrapper resolved
+        row["dispatches"] = {
+            mode: int(rec.total("kernels.dispatch", kernel=name, mode=mode))
+            for mode in ("interpret", "compiled")
+        }
         kernels[name] = row
 
     train = {
@@ -202,18 +265,17 @@ def _worker(smoke: bool) -> dict:
                                prefill_len=16, key=jax.random.PRNGKey(0))
     router = Router(sess)
     srng = np.random.default_rng(0)
-    tick_ms = []
     for i in range(n_req):
         router.submit(Request(
             rid=i, max_new=max_new,
             prompt=srng.integers(1, 128, size=8).astype(np.int32)))
     guard = 0
     while router.queue or any(e.n_active for e in sess.engines):
-        t0 = time.perf_counter()
-        router.step()
-        tick_ms.append((time.perf_counter() - t0) * 1e3)
+        with rec.span("bench.serve_tick"):
+            router.step()
         guard += 1
         assert guard < 2000, "serve bench did not converge"
+    tick_ms = [s["dur"] * 1e3 for s in rec.spans("bench.serve_tick")]
     # first tick admits + prefills + compiles; steady-state is the tail
     steady = tick_ms[len(tick_ms) // 2:]
     decode_ms = float(np.median(steady))
@@ -226,8 +288,10 @@ def _worker(smoke: bool) -> dict:
     tables = planner.tables(planner.sync_key(8, N1, N1),
                             planner.sync_key(8, N1, 2), 8)
     kv = jnp.asarray(srng.normal(size=(N1, 8, 4, 16)), jnp.float32)
-    jnp_us = time_us(lambda: rse.reshard_ranks(kv, tables, use_kernel=False))
-    ker_us = time_us(lambda: rse.reshard_ranks(kv, tables, use_kernel=True))
+    jnp_us = time_us(lambda: rse.reshard_ranks(kv, tables, use_kernel=False),
+                     label="kv_reshard:jnp")
+    ker_us = time_us(lambda: rse.reshard_ranks(kv, tables, use_kernel=True),
+                     label="kv_reshard:kernel")
 
     serve = {
         "config": {"arch": scfg.arch_id, "n1": N1, "slots": 4,

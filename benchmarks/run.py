@@ -19,6 +19,7 @@ MODULES = [
     "fig_serving_goodput",
     "bench_cluster",
     "bench_hotpath",
+    "bench_telemetry",
     "table1_power",
     "roofline",
     "fig11_model_validation",

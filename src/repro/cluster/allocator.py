@@ -33,6 +33,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.cluster.actions import Action
 from repro.cluster.cost import TransitionCostModel
 from repro.cluster.goodput import GoodputModel
@@ -90,6 +91,10 @@ class GreedyAllocator:
         whose state is in place (None = fresh packing: transitions are
         free). Raises `DeadReplicaError` (via per-stage packing) if even the
         allocated layout leaves a replica at TP 0 in some stage."""
+        with telemetry.get().span("cluster.plan", spares=spares) as sp:
+            return self._plan_spanned(health, spares, current, sp)
+
+    def _plan_spanned(self, health, spares, current, sp) -> GlobalPlan:
         from repro.runtime.events import StagedHealth
 
         assert isinstance(health, StagedHealth), type(health)
@@ -118,10 +123,12 @@ class GreedyAllocator:
         max_rounds = cfgc.max_rounds
         if max_rounds is None:
             max_rounds = spares + pp * pp + 8
+        considered = 0
         for _ in range(max_rounds):
             best = None
             n_dead = int((gm.effective_tp(work) <= 0).sum())
             for cand in self._candidates(work, pool):
+                considered += 1
                 w2 = self._apply_move(work, cand)
                 g2 = gm.goodput(w2)
                 dg = g2 - g_cur
@@ -187,6 +194,16 @@ class GreedyAllocator:
             predicted_bytes=predicted,
             horizon_steps=horizon,
         )
+        sp.set(moves_considered=considered,
+               moves_taken=len(spare_sites) + len(swaps),
+               predicted_bytes=predicted,
+               goodput=round(g_cur, 6))
+        tel = telemetry.get()
+        if tel.enabled:
+            # paired series with the session's source="executed" gauge:
+            # predicted-vs-executed transition traffic on one track
+            tel.gauge("cluster.transition_bytes", predicted,
+                      source="predicted")
         self.last_plan = gp
         return gp
 

@@ -24,13 +24,30 @@ from typing import Optional
 
 import jax
 
+from repro import telemetry
 
-def pallas_interpret(override: Optional[bool] = None) -> bool:
+
+def pallas_interpret(override: Optional[bool] = None,
+                     kernel: Optional[str] = None) -> bool:
     """True → run the kernel in interpret mode. See the module docstring for
-    the resolution order (explicit > env var > backend default)."""
+    the resolution order (explicit > env var > backend default).
+
+    ``kernel`` names the dispatch site for telemetry: each resolution with a
+    name counts into the ``kernels.dispatch`` series (labels: kernel, mode),
+    so a run can prove which kernels actually took the compiled path. Only
+    the named public wrappers in `kernels.ops` pass it — internal re-entries
+    resolve anonymously and are not double-counted."""
     if override is not None:
-        return bool(override)
-    env = os.environ.get("REPRO_PALLAS_COMPILE")
-    if env is not None and env != "":
-        return env != "1"
-    return jax.default_backend() == "cpu"
+        interpret = bool(override)
+    else:
+        env = os.environ.get("REPRO_PALLAS_COMPILE")
+        if env is not None and env != "":
+            interpret = env != "1"
+        else:
+            interpret = jax.default_backend() == "cpu"
+    if kernel is not None:
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.counter("kernels.dispatch", kernel=kernel,
+                        mode="interpret" if interpret else "compiled")
+    return interpret

@@ -39,7 +39,7 @@ def flash_attention(q, k, v, *, kind="causal", window=4096, chunk=8192,
     return _flash_attention(
         q, k, v, kind=kind, window=window, chunk=chunk, softcap=softcap,
         block_q=block_q, block_k=block_k,
-        interpret=pallas_interpret(interpret),
+        interpret=pallas_interpret(interpret, kernel="flash_attention"),
     )
 
 
@@ -57,7 +57,7 @@ def rmsnorm(x, w, *, eps=1e-6, plus_one=False, block_rows=256,
             interpret=None):
     return _rmsnorm(
         x, w, eps=eps, plus_one=plus_one, block_rows=block_rows,
-        interpret=pallas_interpret(interpret),
+        interpret=pallas_interpret(interpret, kernel="rmsnorm"),
     )
 
 
@@ -68,7 +68,8 @@ def _ssd_scan(x, dt, A, B, C, *, chunk, interpret):
 
 def ssd_scan(x, dt, A, B, C, *, chunk=256, interpret=None):
     return _ssd_scan(
-        x, dt, A, B, C, chunk=chunk, interpret=pallas_interpret(interpret)
+        x, dt, A, B, C, chunk=chunk,
+        interpret=pallas_interpret(interpret, kernel="ssd_scan"),
     )
 
 
@@ -78,4 +79,7 @@ def _reshard_pack(src, send_idx, *, interpret):
 
 
 def reshard_pack(src, send_idx, *, interpret=None):
-    return _reshard_pack(src, send_idx, interpret=pallas_interpret(interpret))
+    return _reshard_pack(
+        src, send_idx,
+        interpret=pallas_interpret(interpret, kernel="reshard_pack"),
+    )

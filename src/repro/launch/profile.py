@@ -119,6 +119,9 @@ def main():
                          "dry-run HLO analysis")
     ap.add_argument("--trace-dir", default=None,
                     help="with --measure: jax.profiler trace output dir")
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="with --measure: record session.step spans etc. as "
+                         "JSONL (repro.telemetry)")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--pp", type=int, default=2)
     ap.add_argument("--microbatches", type=int, default=4)
@@ -126,8 +129,17 @@ def main():
                     help="with --measure: per-replica batch")
     ap.add_argument("--seq-len", type=int, default=32)
     args = ap.parse_args()
+    if args.telemetry and not args.measure:
+        ap.error("--telemetry needs --measure (dry-run has no timed steps)")
     if args.measure:
+        if args.telemetry:
+            from repro import telemetry
+
+            telemetry.configure(jsonl=args.telemetry)
         _measure(args)
+        if args.telemetry:
+            telemetry.shutdown()
+            print(f"telemetry stream written to {args.telemetry}")
         return
     if not (args.arch and args.shape):
         ap.error("--arch and --shape are required unless --measure is set")

@@ -62,11 +62,20 @@ def main() -> None:
     ap.add_argument("--pallas-compile", action="store_true",
                     help="run Pallas kernels compiled (TPU) instead of "
                          "interpret mode; sets REPRO_PALLAS_COMPILE=1")
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="record the run's telemetry stream (admission, "
+                         "preemptions, TTFT/TPOT, transition spans) as "
+                         "JSONL; fold it offline with python -m "
+                         "repro.launch.telemetry_report OUT.jsonl")
     args = ap.parse_args()
     if args.pallas_compile:
         import os
 
         os.environ["REPRO_PALLAS_COMPILE"] = "1"
+    if args.telemetry:
+        from repro import telemetry
+
+        telemetry.configure(jsonl=args.telemetry)
 
     import numpy as np
     import jax

@@ -1,0 +1,242 @@
+"""Offline telemetry folding: JSONL stream → goodput-decomposition table
+(+ optional Perfetto trace) — DESIGN.md §2.9.
+
+The recorder stream is lossless, so everything here is arithmetic over the
+recorded events; nothing is re-simulated:
+
+* **goodput table** (per power policy, from the `train.goodput` /
+  `train.goodput_unboosted` gauge series the orchestrator records with the
+  SAME local-batch arithmetic as `TraceRunner.goodput()` — the folded mean
+  matches the runner's own accounting exactly);
+* **time decomposition** — ``compute / bubble / reshard`` fractions of the
+  run, from the `session.step` / `session.transition` span durations and
+  the per-step `train.rel_iter_time` gauges (steps with no recorded
+  slowdown count as rel 1.0);
+* **transition table** — per-kind counts and byte totals from the
+  transition spans' attached `TransferStats`;
+* **serve table** — TTFT/TPOT percentile summaries + admission/preemption
+  totals, when serve events are present;
+* **kernel table** — compiled-vs-interpret dispatch totals per kernel.
+
+CLI::
+
+  python -m repro.launch.telemetry_report run.jsonl
+  python -m repro.launch.telemetry_report run.jsonl --perfetto trace.json
+  python -m repro.launch.telemetry_report run.jsonl --json report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.telemetry import load_jsonl, summarize_hist, write_chrome_trace
+
+# the goodput-decomposition row schema (guarded, with EVENT_KEYS, by the
+# golden in tests/golden/telemetry_schema.json)
+GOODPUT_KEYS = (
+    "steps", "goodput", "goodput_unboosted", "boost_recovered",
+    "compute_frac", "bubble_frac", "reshard_frac",
+)
+
+
+def _series(events: Iterable[Dict], kind: str, name: str,
+            label: Optional[Dict] = None) -> List[Dict]:
+    label = label or {}
+    return [
+        e for e in events
+        if e["kind"] == kind and e["name"] == name
+        and all(e.get("labels", {}).get(k) == v for k, v in label.items())
+    ]
+
+
+def goodput_table(events: List[Dict]) -> Dict[str, Dict]:
+    """One decomposition row per power policy seen in the stream.
+
+    ``goodput`` is the mean of the recorded per-step `train.goodput` gauges
+    — identical, by construction, to the orchestrator's own
+    ``TraceRunner.goodput()`` (same per-step sums, same mean).
+    ``boost_recovered`` is the goodput the power boost bought back relative
+    to the unboosted local-batch rule on the same plans. The time fractions
+    split the run's wall clock: ``reshard_frac`` from transition span
+    durations, ``bubble_frac`` from the predicted per-step slowdown on the
+    remaining step time, ``compute_frac`` as the rest."""
+    step_spans = _series(events, "span", "session.step")
+    # only transitions that EXECUTED moved any state; refused/no-op applies
+    # are planner overhead, not reshard traffic
+    trans_spans = [e for e in _series(events, "span", "session.transition")
+                   if e["attrs"].get("changed") is True]
+    step_s = float(sum(e["dur"] for e in step_spans))
+    reshard_s = float(sum(e["dur"] for e in trans_spans))
+    denom = step_s + reshard_s
+    reshard_frac = reshard_s / denom if denom > 0 else 0.0
+
+    out: Dict[str, Dict] = {}
+    policies = sorted({
+        e["labels"]["policy"]
+        for e in _series(events, "gauge", "train.goodput")
+    })
+    for pol in policies:
+        g = [e["value"] for e in
+             _series(events, "gauge", "train.goodput", {"policy": pol})]
+        gu = [e["value"] for e in
+              _series(events, "gauge", "train.goodput_unboosted",
+                      {"policy": pol})]
+        rel = [e["value"] for e in
+               _series(events, "gauge", "train.rel_iter_time",
+                       {"source": "analytic"})]
+        # degraded steps record their predicted slowdown; healthy steps
+        # record nothing — pad to the step count at rel 1.0. A boosted
+        # policy can predict rel < 1 (overdrive); that is boost territory,
+        # not bubble, so the bubble floor is 0 per step.
+        n = max(len(g), len(step_spans))
+        rel = rel[:n] + [1.0] * max(0, n - len(rel))
+        bubble = (float(np.mean([1.0 - 1.0 / max(r, 1.0) for r in rel]))
+                  if rel else 0.0)
+        bubble_frac = (1.0 - reshard_frac) * bubble
+        goodput = float(np.mean(g)) if g else 1.0
+        goodput_u = float(np.mean(gu)) if gu else goodput
+        out[pol] = {
+            "steps": len(g),
+            "goodput": goodput,
+            "goodput_unboosted": goodput_u,
+            "boost_recovered": goodput - goodput_u,
+            "compute_frac": 1.0 - reshard_frac - bubble_frac,
+            "bubble_frac": bubble_frac,
+            "reshard_frac": reshard_frac,
+        }
+    return out
+
+
+def transition_table(events: List[Dict]) -> Dict[str, Dict]:
+    """Per-kind transition counts + byte/message totals from the span-borne
+    `TransferStats` (train `session.transition` and serve
+    `serve.transition` both land here)."""
+    out: Dict[str, Dict] = {}
+    for name in ("session.transition", "serve.transition"):
+        for e in _series(events, "span", name):
+            kind = e["labels"].get("kind", "?")
+            # a train span without a "changed" attr never finished apply():
+            # the session refused the event (DeadReplicaError) mid-span
+            if name == "session.transition":
+                changed = e["attrs"].get("changed")
+                outcome = ("executed" if changed is True
+                           else "noop" if changed is False else "rejected")
+            else:
+                outcome = "executed"
+            row = out.setdefault(f"{name}:{kind}:{outcome}", {
+                "count": 0, "bytes_moved": 0, "messages": 0, "seconds": 0.0,
+            })
+            row["count"] += 1
+            row["bytes_moved"] += int(e["attrs"].get("bytes_moved", 0))
+            row["messages"] += int(e["attrs"].get("messages", 0))
+            row["seconds"] += float(e["dur"])
+    return out
+
+
+def serve_table(events: List[Dict]) -> Optional[Dict]:
+    ttft = [e["value"] for e in _series(events, "hist", "serve.ttft")]
+    tpot = [e["value"] for e in _series(events, "hist", "serve.tpot")]
+    admission = _series(events, "counter", "serve.admission")
+    preempted = _series(events, "counter", "serve.preempted")
+    if not (ttft or tpot or admission or preempted):
+        return None
+    return {
+        "ttft": summarize_hist(ttft),
+        "tpot": summarize_hist(tpot),
+        "admitted": sum(e["value"] for e in admission
+                        if e["labels"].get("outcome") == "admitted"),
+        "rejected": sum(e["value"] for e in admission
+                        if e["labels"].get("outcome") == "rejected"),
+        "preempted": sum(e["value"] for e in preempted),
+    }
+
+
+def kernel_table(events: List[Dict]) -> Dict[str, Dict[str, int]]:
+    out: Dict[str, Dict[str, int]] = {}
+    for e in _series(events, "counter", "kernels.dispatch"):
+        k = e["labels"].get("kernel", "?")
+        mode = e["labels"].get("mode", "?")
+        out.setdefault(k, {"compiled": 0, "interpret": 0})
+        out[k][mode] = out[k].get(mode, 0) + int(e["value"])
+    return out
+
+
+def report(events: List[Dict]) -> Dict:
+    """The full folded report (every table; empty sections omitted)."""
+    doc: Dict = {"events": len(events)}
+    gp = goodput_table(events)
+    if gp:
+        doc["goodput"] = gp
+    tr = transition_table(events)
+    if tr:
+        doc["transitions"] = tr
+    sv = serve_table(events)
+    if sv is not None:
+        doc["serve"] = sv
+    kt = kernel_table(events)
+    if kt:
+        doc["kernels"] = kt
+    return doc
+
+
+def _print_report(doc: Dict) -> None:
+    print(f"telemetry events: {doc['events']}")
+    if "goodput" in doc:
+        hdr = f"{'policy':10s}" + "".join(f"{k:>18s}" for k in GOODPUT_KEYS)
+        print("\ngoodput decomposition:\n" + hdr)
+        for pol, row in doc["goodput"].items():
+            cells = "".join(
+                f"{row[k]:18d}" if isinstance(row[k], int)
+                else f"{row[k]:18.4f}" for k in GOODPUT_KEYS
+            )
+            print(f"{pol:10s}{cells}")
+    if "transitions" in doc:
+        print("\ntransitions:")
+        for k, row in sorted(doc["transitions"].items()):
+            print(f"  {k:28s} count {row['count']:4d}  "
+                  f"bytes {row['bytes_moved']:>12,d}  "
+                  f"msgs {row['messages']:5d}  {row['seconds']*1e3:8.1f} ms")
+    if "serve" in doc:
+        sv = doc["serve"]
+        print("\nserve:")
+        for h in ("ttft", "tpot"):
+            s = sv[h]
+            if s:
+                print(f"  {h}: n {s['count']:5d}  mean {s['mean']:.2f}  "
+                      f"p50 {s['p50']:.2f}  p95 {s['p95']:.2f}  "
+                      f"p99 {s['p99']:.2f}")
+        print(f"  admitted {sv['admitted']:.0f}  rejected {sv['rejected']:.0f}"
+              f"  preempted {sv['preempted']:.0f}")
+    if "kernels" in doc:
+        print("\nkernel dispatch:")
+        for k, row in sorted(doc["kernels"].items()):
+            print(f"  {k:20s} compiled {row.get('compiled', 0):6d}  "
+                  f"interpret {row.get('interpret', 0):6d}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="recorder JSONL stream (--telemetry output)")
+    ap.add_argument("--perfetto", default=None, metavar="TRACE.json",
+                    help="also write a Chrome-trace/Perfetto JSON trace")
+    ap.add_argument("--json", default=None, metavar="REPORT.json",
+                    help="also write the folded report as JSON")
+    args = ap.parse_args()
+    events = load_jsonl(args.jsonl)
+    doc = report(events)
+    _print_report(doc)
+    if args.perfetto:
+        trace = write_chrome_trace(args.perfetto, events)
+        print(f"\nperfetto trace ({len(trace['traceEvents'])} rows) -> "
+              f"{args.perfetto}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"report json -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

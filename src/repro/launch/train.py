@@ -87,9 +87,17 @@ def main() -> None:
     ap.add_argument("--pallas-compile", action="store_true",
                     help="run Pallas kernels compiled (TPU) instead of "
                          "interpret mode; sets REPRO_PALLAS_COMPILE=1")
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="record the run's telemetry stream (spans, "
+                         "counters, gauges) as JSONL; fold it offline with "
+                         "python -m repro.launch.telemetry_report OUT.jsonl")
     args = ap.parse_args()
     if args.pallas_compile:
         os.environ["REPRO_PALLAS_COMPILE"] = "1"
+    if args.telemetry:
+        from repro import telemetry
+
+        telemetry.configure(jsonl=args.telemetry)
     if args.arch is None and not args.ntp:
         ap.error("--arch is required unless --ntp is given")
     if args.ntp and args.dry_run:

@@ -26,6 +26,7 @@ import numpy as np
 
 import jax
 
+from repro import telemetry
 from repro.core import ntp_train as nt
 from repro.core.failure_model import FailureTraceConfig, simulate_events
 from repro.core.nonuniform import FailurePlan
@@ -173,6 +174,22 @@ class TraceRunner:
     amplifies f32 rounding noise into ~1e-4 weight deltas per step even with
     identical math, so long AdamW runs need a looser ``param_atol``; SGD is
     tight at any length.
+
+    Device metrics (loss, grad_norm) are BUFFERED, not synced per step:
+    ``float(metrics["loss"])`` every step would block dispatch on the whole
+    step's device work (the classic eager-host-sync stall). Instead the
+    device scalars are kept in the history records and drained through one
+    ``jax.device_get`` every ``drain_every`` steps and at the end of
+    ``run()`` — callers still see plain floats, with identical values.
+    ``verify=True`` keeps the eager sync (the per-step loss assertion needs
+    the value immediately).
+
+    With telemetry active every consumed event becomes an
+    ``orchestrator.event`` span (phase marks over arrival→plan→execute→
+    verified; the session's own ``session.transition`` span nests inside)
+    and every step records the ``train.goodput`` /
+    ``train.goodput_unboosted`` gauges the goodput-decomposition report
+    folds (launch/telemetry_report.py).
     """
 
     def __init__(
@@ -184,6 +201,7 @@ class TraceRunner:
         atol: float = 1e-4,
         param_atol: Optional[float] = None,
         on_event: Optional[Callable[[LifecycleEvent, FailurePlan], None]] = None,
+        drain_every: int = 16,
     ):
         self.session = session
         self.schedule = sorted(schedule, key=lambda e: e.step)
@@ -194,6 +212,8 @@ class TraceRunner:
         self.history: List[Dict] = []
         self.transitions: List[Dict] = []
         self._next_step = 0
+        self.drain_every = max(1, drain_every)
+        self._undrained: List[Dict] = []
         self._repair_debt: Dict[int, int] = {}  # domain -> GPUs never failed
         if verify:
             if session.opt_step != 0:
@@ -240,67 +260,89 @@ class TraceRunner:
         applied = []
         while self.schedule and self.schedule[0].step <= step:
             ev = self.schedule.pop(0).event
-            old_plan = self.session.plan
-            if isinstance(ev, RecoveryEvent):
-                # a repair whose failure was rejected must not touch the
-                # ledger: its GPU was never marked failed, and applying it
-                # would raise TP for hardware that is actually still down
-                site = self._site(ev)
-                debt = self._repair_debt.get(site, 0)
-                if debt:
-                    absorbed = min(debt, ev.n_gpus)
-                    self._repair_debt[site] = debt - absorbed
-                    if absorbed == ev.n_gpus:
-                        self.transitions.append({
-                            "step": step, "kind": "absorbed", "event": ev,
-                            "old_plan": old_plan, "new_plan": old_plan,
-                        })
-                        continue
-                    if isinstance(site, tuple):
-                        ev = RecoveryEvent(step=ev.step, stage=site[0],
-                                           domain=site[1],
-                                           n_gpus=ev.n_gpus - absorbed)
-                    else:
-                        ev = RecoveryEvent(step=ev.step, domain=site,
-                                           n_gpus=ev.n_gpus - absorbed)
-            try:
-                new_plan = self.session.apply(ev)
-            except DeadReplicaError as e:
-                # the blast would leave a replica with no GPUs — outside
-                # NTP's regime (DP_DROP / spares territory, paper §3.3).
-                # The session refused before mutating; remember the debt so
-                # the GPU's matching repair is absorbed, not applied.
-                site = self._site(ev)
-                self._repair_debt[site] = (
-                    self._repair_debt.get(site, 0) + ev.n_gpus
-                )
-                self.transitions.append({
-                    "step": step, "kind": "rejected", "event": ev,
-                    "old_plan": old_plan, "new_plan": old_plan,
-                    "error": str(e),
-                })
-                continue
-            applied.append(ev)
-            rec = {
-                "step": step,
-                "kind": "repair" if isinstance(ev, RecoveryEvent) else "failure",
-                "event": ev,
-                "old_plan": old_plan,
-                "new_plan": new_plan,
-            }
-            gp = getattr(self.session, "last_global_plan", None)
-            if gp is not None:
-                # allocator-driven session: keep the global verdict (spare
-                # sites, swaps, priced actions) with the transition record
-                rec["global_plan"] = gp
-            if self.verify and new_plan != old_plan:
-                rec["canonical_err"] = self._check_canonical(
-                    f"step {step} ({rec['kind']} transition {old_plan} -> {new_plan})"
-                )
-            self.transitions.append(rec)
-            if self.on_event is not None:
-                self.on_event(ev, new_plan)
+            with telemetry.get().span(
+                "orchestrator.event",
+                kind="repair" if isinstance(ev, RecoveryEvent) else "failure",
+            ) as sp:
+                sp.set(step=step, replica=getattr(ev, "replica", None),
+                       domain=getattr(ev, "domain", None),
+                       stage=getattr(ev, "stage", None))
+                applied += self._apply_one(step, ev, sp)
         return applied
+
+    def _apply_one(self, step: int, ev, sp) -> List[LifecycleEvent]:
+        """Consume ONE due event inside its ``orchestrator.event`` span
+        (``sp``); returns [ev] if it mutated the session, [] when the event
+        was absorbed against repair debt or rejected by the session."""
+        from repro.runtime.events import DeadReplicaError
+
+        old_plan = self.session.plan
+        if isinstance(ev, RecoveryEvent):
+            # a repair whose failure was rejected must not touch the
+            # ledger: its GPU was never marked failed, and applying it
+            # would raise TP for hardware that is actually still down
+            site = self._site(ev)
+            debt = self._repair_debt.get(site, 0)
+            if debt:
+                absorbed = min(debt, ev.n_gpus)
+                self._repair_debt[site] = debt - absorbed
+                if absorbed == ev.n_gpus:
+                    self.transitions.append({
+                        "step": step, "kind": "absorbed", "event": ev,
+                        "old_plan": old_plan, "new_plan": old_plan,
+                    })
+                    sp.set(outcome="absorbed")
+                    return []
+                if isinstance(site, tuple):
+                    ev = RecoveryEvent(step=ev.step, stage=site[0],
+                                       domain=site[1],
+                                       n_gpus=ev.n_gpus - absorbed)
+                else:
+                    ev = RecoveryEvent(step=ev.step, domain=site,
+                                       n_gpus=ev.n_gpus - absorbed)
+        sp.mark("plan")
+        try:
+            new_plan = self.session.apply(ev)
+        except DeadReplicaError as e:
+            # the blast would leave a replica with no GPUs — outside
+            # NTP's regime (DP_DROP / spares territory, paper §3.3).
+            # The session refused before mutating; remember the debt so
+            # the GPU's matching repair is absorbed, not applied.
+            site = self._site(ev)
+            self._repair_debt[site] = (
+                self._repair_debt.get(site, 0) + ev.n_gpus
+            )
+            self.transitions.append({
+                "step": step, "kind": "rejected", "event": ev,
+                "old_plan": old_plan, "new_plan": old_plan,
+                "error": str(e),
+            })
+            sp.set(outcome="rejected", error=str(e))
+            return []
+        sp.mark("execute")
+        rec = {
+            "step": step,
+            "kind": "repair" if isinstance(ev, RecoveryEvent) else "failure",
+            "event": ev,
+            "old_plan": old_plan,
+            "new_plan": new_plan,
+        }
+        gp = getattr(self.session, "last_global_plan", None)
+        if gp is not None:
+            # allocator-driven session: keep the global verdict (spare
+            # sites, swaps, priced actions) with the transition record
+            rec["global_plan"] = gp
+        if self.verify and new_plan != old_plan:
+            rec["canonical_err"] = self._check_canonical(
+                f"step {step} ({rec['kind']} transition {old_plan} -> {new_plan})"
+            )
+            sp.mark("verified")
+        self.transitions.append(rec)
+        sp.set(outcome="applied", old_plan=str(old_plan),
+               new_plan=str(new_plan))
+        if self.on_event is not None:
+            self.on_event(ev, new_plan)
+        return [ev]
 
     # ------------------------------------------------------------------ run
 
@@ -310,14 +352,18 @@ class TraceRunner:
         batch. Resumable: repeated calls continue the global step counter.
         Returns the metrics history of THIS call's steps."""
         first = self._next_step
+        tel = telemetry.get()
         for i in range(first, first + steps):
             applied = self._apply_due(i)
             batch = batch_fn(i)
             metrics = self.session.step(batch)
             rec = {
                 "step": i,
-                "loss": float(metrics["loss"]),
-                "grad_norm": float(metrics["grad_norm"]),
+                # device scalars on purpose: float() here would host-sync
+                # every step and stall async dispatch; _drain() converts
+                # them in one batched jax.device_get
+                "loss": metrics["loss"],
+                "grad_norm": metrics["grad_norm"],
                 "replica_tp": self.session.plan.replica_tp,
                 "local_batches": tuple(int(b) for b in self.session.local_batches),
                 "events_applied": len(applied),
@@ -328,7 +374,20 @@ class TraceRunner:
                       "policy"):
                 if k in metrics:
                     rec[k] = metrics[k]
+            self.history.append(rec)
+            self._undrained.append(rec)
+            if tel.enabled:
+                full = self.session.local_batch * self.session.plan.d
+                policy = str(rec.get("policy", "none"))
+                tel.gauge("train.goodput", sum(rec["local_batches"]) / full,
+                          policy=policy)
+                base = nt.default_local_batches(
+                    self.session.plan, self.session.mode,
+                    self.session.local_batch)
+                tel.gauge("train.goodput_unboosted",
+                          sum(int(b) for b in base) / full, policy=policy)
             if self.verify:
+                self._drain()  # the dense-reference compare needs host values
                 rl = self._ref_step(batch)
                 diff = abs(rec["loss"] - rl)
                 assert diff < self.atol, (
@@ -336,11 +395,27 @@ class TraceRunner:
                     f"reference {rl:.6f} (|diff| {diff:.3e})"
                 )
                 rec["ref_loss"] = rl
-            self.history.append(rec)
+            elif len(self._undrained) >= self.drain_every:
+                self._drain()
         self._next_step = first + steps
+        self._drain()
         if self.verify:
             self._check_canonical("end of run")
         return self.history[first:]
+
+    def _drain(self) -> None:
+        """One batched host sync for the buffered step metrics. History
+        records are mutated in place, so anything already handed out (the
+        `run` return value aliases `self.history`) sees plain floats."""
+        if not self._undrained:
+            return
+        pending = [(r, k) for r in self._undrained for k in ("loss", "grad_norm")
+                   if not isinstance(r[k], float)]
+        if pending:
+            host = jax.device_get([r[k] for r, k in pending])
+            for (r, k), v in zip(pending, host):
+                r[k] = float(v)
+        self._undrained.clear()
 
     def _ref_step(self, batch) -> float:
         import jax.numpy as jnp

@@ -39,6 +39,7 @@ from typing import Any, Dict, List, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import ntp_train as nt
 from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged
@@ -380,10 +381,23 @@ class NTPSession:
         """One optimizer step; returns the metrics dict (loss, grad_norm, …).
         Under a PowerPolicy the dict additionally carries the policy verdict:
         ``policy``, ``power_boost`` (max ×TDP over replicas) and the
-        predicted ``rel_iter_time``."""
-        self._params, self._opt, metrics = self._step_fn(
-            self._params, self._opt, batch
-        )
+        predicted ``rel_iter_time``.
+
+        With telemetry active the step is wrapped in a ``session.step``
+        span. NOTE the span times DISPATCH (jax is async; nothing here
+        blocks on device work — that would change recorder-off numerics'
+        timing); wall-per-step lives in the orchestrator/bench spans that
+        own the `block_until_ready`."""
+        tel = telemetry.get()
+        with tel.span("session.step", backend=self._backend, pp=self._pp):
+            self._params, self._opt, metrics = self._step_fn(
+                self._params, self._opt, batch
+            )
+        if tel.enabled and self._decision is not None:
+            tel.gauge("train.rel_iter_time", self._decision.rel_iter_time,
+                      source="analytic", policy=self._decision.method)
+            tel.gauge("train.power_boost", self._decision.max_boost,
+                      policy=self._decision.method)
         if self._decision is not None:
             metrics = dict(
                 metrics,
@@ -425,29 +439,52 @@ class NTPSession:
         On a staged (pp > 1) session the event resolves to ONE pipeline
         stage (`StagedHealth.resolve_site`); only that stage's layer slice
         repacks — stage-local `transition_trees`, zero cross-stage traffic.
-        Returns the new plan (`FailurePlan` for pp=1, `StagedPlan` else)."""
-        self._require_ntp("lifecycle replanning")
-        new_health = self._health.apply(event)
-        if self._pp == 1:
-            new_plan = plan_from_health(new_health, spares=self._spares)
-        else:
-            new_plan = self._staged_replan(new_health, current=self._plan)
-        self._events.append(event)
-        self._health = new_health
-        if new_plan == self._plan:
-            return self._plan
+        Returns the new plan (`FailurePlan` for pp=1, `StagedPlan` else).
 
-        old_plan = self._plan
-        if self._pp == 1:
-            self._transition(old_plan, new_plan)
-        else:
-            self._transition_staged(old_plan, new_plan)
-        self._plan = new_plan
-        if self._mode is Mode.UNIFORM and not new_plan.healthy:
-            self._mode = Mode.NTP  # uniform jobs degrade into NTP, not death
-        self._decide()
-        self._build_step()
-        return new_plan
+        With telemetry active the whole replan+repack is one
+        ``session.transition`` span: phase marks ``planned``/``executed``
+        and, when state moved, the executed `TransferStats` ledger attached
+        as attributes — the span's byte counts equal ``last_transition``
+        exactly (the Perfetto trace carries the same numbers the tests
+        assert against)."""
+        self._require_ntp("lifecycle replanning")
+        from repro.runtime.events import RecoveryEvent
+
+        tel = telemetry.get()
+        with tel.span(
+            "session.transition",
+            kind="repair" if isinstance(event, RecoveryEvent) else "failure",
+            pp=self._pp,
+        ) as sp:
+            new_health = self._health.apply(event)
+            if self._pp == 1:
+                new_plan = plan_from_health(new_health, spares=self._spares)
+            else:
+                new_plan = self._staged_replan(new_health, current=self._plan)
+            sp.mark("planned")
+            self._events.append(event)
+            self._health = new_health
+            if new_plan == self._plan:
+                sp.set(changed=False)
+                return self._plan
+
+            old_plan = self._plan
+            if self._pp == 1:
+                self._transition(old_plan, new_plan)
+            else:
+                self._transition_staged(old_plan, new_plan)
+            sp.mark("executed")
+            sp.set(changed=True, old_plan=str(old_plan),
+                   new_plan=str(new_plan), **self.last_transition.as_dict())
+            if tel.enabled:
+                tel.gauge("cluster.transition_bytes",
+                          self.last_transition.bytes_moved, source="executed")
+            self._plan = new_plan
+            if self._mode is Mode.UNIFORM and not new_plan.healthy:
+                self._mode = Mode.NTP  # uniform degrades into NTP, not death
+            self._decide()
+            self._build_step()
+            return new_plan
 
     # ------------------------------------------------------------ checkpoint
 

@@ -89,6 +89,7 @@ class Request:
                                          # from its banked ek/ev instead)
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    first_token_time: Optional[float] = None  # router ticks (TTFT source)
     finish_time: Optional[float] = None
     preemptions: int = 0
 

@@ -19,6 +19,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.availability import ClusterSpec
 from repro.core.failure_model import FailureTraceConfig, simulate_events
 from repro.core.policies import (
@@ -65,8 +66,7 @@ class Router:
         self.submitted += 1
         req.arrival = self.now
         if len(req.prompt) + req.max_new > self._max_len:
-            self.rejected += 1
-            return False
+            return self._reject("too_long")
         if req.deadline is not None:
             rate = self.session.total_rate()
             speed = max(
@@ -74,18 +74,23 @@ class Router:
                 default=0.0,
             )
             if rate <= 0 or speed <= 0:
-                self.rejected += 1
-                return False
+                return self._reject("no_capacity")
             # queue wait at aggregate rate + the request's own SERIAL decode
             # (one slot decodes one token per credit-tick; extra slots don't
             # parallelize a single request)
             predicted = (self.now + self.backlog_tokens() / rate
                          + req.remaining / speed)
             if predicted > req.deadline:
-                self.rejected += 1
-                return False
+                return self._reject("slo_miss_predicted")
         self.queue.append(req)
+        telemetry.get().counter("serve.admission", outcome="admitted")
         return True
+
+    def _reject(self, reason: str) -> bool:
+        self.rejected += 1
+        telemetry.get().counter("serve.admission", outcome="rejected",
+                                reason=reason)
+        return False
 
     def requeue(self, reqs: Iterable[Request]) -> None:
         """Preempted requests jump the queue (their KV was sacrificed once
@@ -113,9 +118,24 @@ class Router:
                     break
         done = self.session.tick()
         self.now += 1.0
+        tel = telemetry.get()
+        if tel.enabled:
+            # stamp TTFT at router-tick granularity: the first tick after
+            # which a request has emitted any token
+            for e in self.session.engines:
+                for r in e.in_flight:
+                    if r.generated and r.first_token_time is None:
+                        r.first_token_time = self.now
         for r in done:
             r.finish_time = self.now
             self.completed.append(r)
+            if tel.enabled:
+                if r.first_token_time is None:
+                    r.first_token_time = self.now
+                tel.hist("serve.ttft", r.first_token_time - r.arrival)
+                decode_toks = max(1, len(r.generated) - 1)
+                tel.hist("serve.tpot",
+                         (r.finish_time - r.first_token_time) / decode_toks)
         return done
 
     def drain(self, max_ticks: int = 10_000) -> None:
@@ -145,6 +165,10 @@ class Router:
         """Tokens/tick per replica and overall, plus SLO attainment."""
         ticks = max(self.now, 1.0)
         per = [e.stats["tokens"] / ticks for e in self.session.engines]
+        tel = telemetry.get()
+        if tel.enabled:
+            for r, g in enumerate(per):
+                tel.gauge("serve.replica_goodput", g, replica=str(r))
         return {
             "per_replica": per,
             "tokens_per_tick": float(sum(per)),

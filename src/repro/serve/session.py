@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import ArchConfig
 from repro.core.nonuniform import FailurePlan
@@ -207,20 +208,38 @@ class ServeSession:
         self._health = self._health.apply(event)
         self._events.append(event)
         preempted: List[Request] = []
-        for r, engine in enumerate(self.engines):
-            tp, speed, boost = self._operating_point(self.replica_tp[r])
-            if tp == engine.tp and not (engine.dead and tp > 0):
-                engine.rel_speed, engine.power_boost = speed, boost
-                continue
-            pre = engine.apply_tp(tp, rel_speed=speed, power_boost=boost)
-            preempted += pre
-            self.transitions.append({
-                "event": event, "replica": r,
-                "tp_from": old_tp[r], "tp_to": tp,
-                "preempted": len(pre),
-                "power_boost": boost, "rel_speed": speed,
-                "reshard": dict(engine.last_reshard),
-            })
+        tel = telemetry.get()
+        with tel.span(
+            "serve.transition",
+            kind="repair" if isinstance(event, RecoveryEvent) else "failure",
+            policy=self._policy,
+        ) as sp:
+            reshard_bytes = 0
+            for r, engine in enumerate(self.engines):
+                tp, speed, boost = self._operating_point(self.replica_tp[r])
+                if tp == engine.tp and not (engine.dead and tp > 0):
+                    engine.rel_speed, engine.power_boost = speed, boost
+                    continue
+                pre = engine.apply_tp(tp, rel_speed=speed, power_boost=boost)
+                preempted += pre
+                reshard_bytes += engine.last_reshard.get("bytes_moved", 0)
+                self.transitions.append({
+                    "event": event, "replica": r,
+                    "tp_from": old_tp[r], "tp_to": tp,
+                    "preempted": len(pre),
+                    "power_boost": boost, "rel_speed": speed,
+                    "reshard": dict(engine.last_reshard),
+                })
+            sp.set(domain=dom, preempted=len(preempted),
+                   bytes_moved=reshard_bytes)
+            if tel.enabled:
+                if preempted:
+                    tel.counter("serve.preempted", len(preempted),
+                                policy=self._policy)
+                for r, engine in enumerate(self.engines):
+                    tel.gauge("serve.replica_rate",
+                              engine.rel_speed * engine.capacity,
+                              replica=str(r))
         return preempted
 
     # ------------------------------------------------------------------ run

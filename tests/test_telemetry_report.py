@@ -1,0 +1,163 @@
+"""`launch.telemetry_report` — the offline goodput-decomposition fold
+(ISSUE 8 tentpole cap), tested on synthetic recorder streams.
+
+The report is pure arithmetic over recorded events, so every table is
+checkable against hand-built streams:
+
+* goodput rows carry exactly `GOODPUT_KEYS` and the time decomposition
+  (compute + bubble + reshard) sums to 1;
+* ``reshard_frac`` counts ONLY transitions that executed
+  (``attrs.changed is True``) — refused/no-op applies are planner
+  overhead, not reshard traffic;
+* boosted policies predicting rel_iter_time < 1 (overdrive) clamp the
+  bubble at 0 — boost territory is not bubble;
+* the transition table buckets spans into executed / noop / rejected by
+  the presence+value of the ``changed`` attr (a span that never finished
+  apply() has none — the session raised mid-span);
+* serve + kernel tables aggregate their series; `report()` omits every
+  empty section; the whole fold round-trips through a JSONL file.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.telemetry_report import (
+    GOODPUT_KEYS, goodput_table, kernel_table, report, serve_table,
+    transition_table,
+)
+from repro.telemetry import JsonlSink, MemorySink, Recorder
+
+
+class StreamClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def build_stream(rel=(1.0, 1.5, 1.5, 1.0)):
+    """A tiny fail -> repair lifecycle: 4 steps of 0.1 s each, one executed
+    failure transition of 0.4 s (bytes 4096), one no-op apply, one rejected
+    apply, per-step goodput gauges for a single policy."""
+    clock = StreamClock()
+    sink = MemorySink()
+    rec = Recorder(sinks=[sink], clock=clock)
+    goodputs = [1.0, 0.75, 0.75, 1.0]
+    for i in range(4):
+        with rec.span("session.step", backend="ntp", pp=1):
+            clock.t += 0.1
+        rec.gauge("train.goodput", goodputs[i], policy="ntp_pw")
+        rec.gauge("train.goodput_unboosted", 0.5 if goodputs[i] < 1 else 1.0,
+                  policy="ntp_pw")
+        if rel[i] != 1.0:
+            rec.gauge("train.rel_iter_time", rel[i], source="analytic",
+                      policy="ntp_pw")
+        if i == 0:
+            with rec.span("session.transition", kind="failure", pp=1) as sp:
+                clock.t += 0.4
+                sp.set(changed=True, bytes_moved=4096, messages=3)
+        if i == 1:  # refused: the span never got a "changed" attr
+            with rec.span("session.transition", kind="failure", pp=1):
+                clock.t += 0.05
+        if i == 2:  # no-op apply: planned, nothing moved
+            with rec.span("session.transition", kind="repair", pp=1) as sp:
+                clock.t += 0.05
+                sp.set(changed=False)
+    return rec, sink, clock
+
+
+def test_goodput_row_schema_and_decomposition():
+    _, sink, _ = build_stream()
+    table = goodput_table(list(sink.events()))
+    assert set(table) == {"ntp_pw"}
+    row = table["ntp_pw"]
+    assert tuple(sorted(row)) == tuple(sorted(GOODPUT_KEYS))
+    assert row["steps"] == 4
+    assert row["goodput"] == pytest.approx(np.mean([1.0, 0.75, 0.75, 1.0]))
+    assert row["goodput_unboosted"] == pytest.approx(0.75)
+    assert row["boost_recovered"] == pytest.approx(row["goodput"] - 0.75)
+    # reshard: ONLY the executed 0.4 s span over 0.4 s of steps -> 0.5
+    assert row["reshard_frac"] == pytest.approx(0.4 / (0.4 + 0.4))
+    # bubble: two degraded steps at rel 1.5 padded with 1.0 to 4 steps
+    bubble = np.mean([1 - 1 / 1.5, 1 - 1 / 1.5, 0.0, 0.0])
+    assert row["bubble_frac"] == pytest.approx((1 - 0.5) * bubble)
+    assert (row["compute_frac"] + row["bubble_frac"] + row["reshard_frac"]
+            == pytest.approx(1.0))
+
+
+def test_goodput_overdrive_rel_below_one_is_not_bubble():
+    """ntp_pw can predict rel_iter_time < 1 (power overdrive); the bubble
+    floor per step is 0, never negative."""
+    _, sink, _ = build_stream(rel=(0.9, 0.9, 0.9, 0.9))
+    row = goodput_table(list(sink.events()))["ntp_pw"]
+    assert row["bubble_frac"] == 0.0
+    assert row["compute_frac"] + row["reshard_frac"] == pytest.approx(1.0)
+
+
+def test_goodput_no_transitions():
+    clock = StreamClock()
+    sink = MemorySink()
+    rec = Recorder(sinks=[sink], clock=clock)
+    for _ in range(3):
+        with rec.span("session.step"):
+            clock.t += 0.1
+        rec.gauge("train.goodput", 1.0, policy="none")
+    row = goodput_table(list(sink.events()))["none"]
+    assert row["reshard_frac"] == 0.0 and row["bubble_frac"] == 0.0
+    assert row["compute_frac"] == pytest.approx(1.0)
+
+
+def test_transition_outcome_buckets():
+    _, sink, _ = build_stream()
+    table = transition_table(list(sink.events()))
+    assert set(table) == {
+        "session.transition:failure:executed",
+        "session.transition:failure:rejected",
+        "session.transition:repair:noop",
+    }
+    ex = table["session.transition:failure:executed"]
+    assert ex["count"] == 1 and ex["bytes_moved"] == 4096
+    assert ex["messages"] == 3 and ex["seconds"] == pytest.approx(0.4)
+    assert table["session.transition:failure:rejected"]["bytes_moved"] == 0
+
+
+def test_serve_and_kernel_tables():
+    rec = Recorder(sinks=[MemorySink()], clock=StreamClock())
+    sink = rec.sinks[0]
+    assert serve_table(list(sink.events())) is None
+    for v in (2.0, 4.0):
+        rec.hist("serve.ttft", v)
+    rec.hist("serve.tpot", 1.0)
+    rec.counter("serve.admission", 3, outcome="admitted")
+    rec.counter("serve.admission", outcome="rejected", reason="too_long")
+    rec.counter("serve.preempted", 2, policy="ntp")
+    sv = serve_table(list(sink.events()))
+    assert sv["ttft"]["count"] == 2 and sv["ttft"]["mean"] == 3.0
+    assert sv["admitted"] == 3 and sv["rejected"] == 1 and sv["preempted"] == 2
+    rec.counter("kernels.dispatch", kernel="rmsnorm", mode="interpret")
+    rec.counter("kernels.dispatch", kernel="rmsnorm", mode="interpret")
+    rec.counter("kernels.dispatch", kernel="flash_attention", mode="compiled")
+    kt = kernel_table(list(sink.events()))
+    assert kt["rmsnorm"] == {"compiled": 0, "interpret": 2}
+    assert kt["flash_attention"]["compiled"] == 1
+
+
+def test_report_omits_empty_sections_and_roundtrips(tmp_path):
+    assert report([]) == {"events": 0}
+    path = str(tmp_path / "run.jsonl")
+    clock = StreamClock()
+    rec = Recorder(sinks=[JsonlSink(path), MemorySink()], clock=clock)
+    goodputs = [1.0, 0.75]
+    for g in goodputs:
+        with rec.span("session.step"):
+            clock.t += 0.1
+        rec.gauge("train.goodput", g, policy="ntp")
+    rec.close()
+    from repro.telemetry import load_jsonl
+
+    doc = report(load_jsonl(path))
+    assert set(doc) == {"events", "goodput"}     # no serve/kernels/transitions
+    assert doc["goodput"]["ntp"]["goodput"] == pytest.approx(0.875)
+    # the in-memory fold agrees with the JSONL fold exactly
+    mem_doc = report(list(rec.sinks[1].events()))
+    assert mem_doc == doc

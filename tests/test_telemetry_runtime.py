@@ -1,0 +1,253 @@
+"""Telemetry threaded through the live runtime (ISSUE 8): the orchestrator's
+batched metric drain, kernel dispatch counters, the allocator's plan span,
+and the end-to-end acceptance runs.
+
+Fast half (host-side, 1 device):
+
+* the `TraceRunner` eager-host-sync fix — device scalars stay in the
+  history records and ONE ``jax.device_get`` per ``drain_every`` steps
+  converts them (counted via monkeypatch), with values identical to the
+  per-step ``float()`` they replaced;
+* per-step ``train.goodput`` / ``train.goodput_unboosted`` gauges use the
+  same local-batch arithmetic as `TraceRunner.goodput()`;
+* `kernels.dispatch` counters from the named `kernels.ops` wrappers
+  (and silence with telemetry off);
+* the `GreedyAllocator.plan` span — search attrs on success, emission even
+  when packing raises `DeadReplicaError`.
+
+Slow half (subprocess):
+
+* `tests/dist/session_telemetry.py` — the ISSUE 8 acceptance trace
+  (fail → boost → repair with ``ntp_pw``): report goodput == runner
+  accounting to < 0.1 %, transition span bytes == the executed
+  `TransferStats` ledger exactly, a loadable Perfetto trace, and
+  recorder-on losses == recorder-off losses bit-for-bit;
+* ``launch.profile --measure --telemetry`` writes a JSONL stream the
+  report CLI folds (the satellite smoke).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import telemetry
+from repro.core.nonuniform import FailurePlan
+from repro.core.ntp_train import Mode
+from repro.runtime.orchestrator import TraceRunner
+from repro.telemetry import MemorySink, Recorder
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+class FakeSession:
+    """The minimal TraceRunner surface: plan/mode/batch accounting plus a
+    step() returning DEVICE scalars (the thing _drain must convert)."""
+
+    backend = "ntp"
+
+    def __init__(self, plan, local_batch=4):
+        self._plan = plan
+        self._lb = local_batch
+        self._i = 0
+
+    plan = property(lambda self: self._plan)
+    mode = property(lambda self: Mode.NTP)
+    local_batch = property(lambda self: self._lb)
+
+    @property
+    def local_batches(self):
+        from repro.core import ntp_train as nt
+
+        return list(nt.default_local_batches(self._plan, Mode.NTP, self._lb))
+
+    def step(self, batch):
+        i, self._i = self._i, self._i + 1
+        return {"loss": jnp.asarray(i + 0.5, jnp.float32),
+                "grad_norm": jnp.asarray(i * 2.0, jnp.float32)}
+
+
+def make_runner(drain_every=4):
+    sess = FakeSession(FailurePlan(n1=4, replica_tp=(2, 4)))
+    return TraceRunner(sess, [], drain_every=drain_every)
+
+
+def test_run_batches_host_syncs(monkeypatch):
+    """Regression for the eager ``float(metrics['loss'])`` stall: 10 steps
+    with drain_every=4 must host-sync exactly 3 times (steps 4, 8, end),
+    not 10, and the drained floats must equal the device values."""
+    calls = []
+    real = jax.device_get
+
+    def counting(x):
+        calls.append(x)
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    runner = make_runner(drain_every=4)
+    hist = runner.run(lambda i: None, 10)
+    assert len(calls) == 3
+    assert [len(c) for c in calls] == [8, 8, 4]   # 2 scalars x 4/4/2 steps
+    assert [h["loss"] for h in hist] == [i + 0.5 for i in range(10)]
+    assert [h["grad_norm"] for h in hist] == [i * 2.0 for i in range(10)]
+    assert all(isinstance(h["loss"], float) for h in hist)
+    # returned history aliases runner.history: both see the drained floats
+    assert hist[0] is runner.history[0]
+    # re-drain with nothing pending is a no-op (no extra syncs)
+    runner._drain()
+    assert len(calls) == 3
+
+
+def test_run_drains_tail_on_exit(monkeypatch):
+    """A run shorter than drain_every still ends with plain floats."""
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: calls.append(x) or real(x))
+    runner = make_runner(drain_every=100)
+    hist = runner.run(lambda i: None, 3)
+    assert len(calls) == 1
+    assert [h["loss"] for h in hist] == [0.5, 1.5, 2.5]
+
+
+def test_run_records_goodput_gauges():
+    """The per-step gauges fold to EXACTLY TraceRunner.goodput() — the
+    <0.1% acceptance is an equality by construction."""
+    rec = Recorder(sinks=[MemorySink()])
+    runner = make_runner()
+    with telemetry.recording(rec):
+        runner.run(lambda i: None, 5)
+    vals = rec.values("train.goodput", policy="none")
+    # plan (2,4)/4 under NTP: local batches (2,4) of 2x4 full -> 0.75
+    assert vals == [0.75] * 5
+    assert float(np.mean(vals)) == runner.goodput()
+    assert rec.values("train.goodput_unboosted", policy="none") == [0.75] * 5
+
+
+def test_runner_off_path_records_nothing():
+    rec = Recorder(sinks=[MemorySink()])
+    runner = make_runner()
+    runner.run(lambda i: None, 2)        # telemetry NOT active
+    assert len(rec.sinks[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch counters
+
+def test_kernel_dispatch_counter_counts_named_wrappers():
+    from repro.kernels import ops
+
+    x = jnp.ones((4, 32), jnp.float32)
+    w = jnp.ones((32,), jnp.float32)
+    rec = Recorder(sinks=[MemorySink()])
+    with telemetry.recording(rec):
+        ops.rmsnorm(x, w)
+        ops.rmsnorm(x, w)
+    mode = "interpret" if jax.default_backend() == "cpu" else "compiled"
+    assert rec.total("kernels.dispatch", kernel="rmsnorm", mode=mode) == 2
+    # labels are a contract for the report's kernel table
+    ev = rec.sinks[0].events(kind="counter", name="kernels.dispatch")[0]
+    assert set(ev["labels"]) == {"kernel", "mode"}
+    # off path: same call leaves no trace
+    before = len(rec.sinks[0])
+    ops.rmsnorm(x, w)
+    assert len(rec.sinks[0]) == before
+
+
+# ---------------------------------------------------------------------------
+# allocator plan span
+
+def _staged_health(counts, n1=4):
+    from repro.runtime.events import ClusterHealth, StagedHealth
+
+    return StagedHealth(tuple(
+        ClusterHealth(n1, tuple(int(x) for x in c)) for c in counts
+    ))
+
+
+def test_allocator_plan_span_attrs():
+    from repro.cluster import GreedyAllocator
+
+    rec = Recorder(sinks=[MemorySink()])
+    with telemetry.recording(rec):
+        gp = GreedyAllocator().plan(_staged_health([(1, 0)]), spares=1)
+    (sp,) = rec.spans("cluster.plan")
+    assert sp["labels"] == {"spares": 1}
+    a = sp["attrs"]
+    assert a["moves_taken"] == len(gp.spare_sites) + len(gp.swaps)
+    assert a["moves_considered"] >= a["moves_taken"]
+    assert a["predicted_bytes"] == gp.predicted_bytes
+    assert a["goodput"] == pytest.approx(gp.goodput, abs=1e-6)
+    assert rec.values("cluster.transition_bytes", source="predicted") \
+        == [gp.predicted_bytes]
+
+
+def test_allocator_plan_span_emitted_on_dead_replica():
+    """Span lands in the stream even when the search raises — a rejected
+    plan is observable, not silent."""
+    from repro.cluster import GreedyAllocator
+    from repro.runtime.events import DeadReplicaError
+
+    rec = Recorder(sinks=[MemorySink()])
+    with telemetry.recording(rec):
+        with pytest.raises(DeadReplicaError):
+            GreedyAllocator().plan(_staged_health([(4, 0)]))
+    (sp,) = rec.spans("cluster.plan")
+    assert "moves_taken" not in sp["attrs"]     # died before the verdict
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance (subprocess, 8 fake devices)
+
+@pytest.mark.slow
+def test_session_telemetry_lifecycle(run_dist):
+    """ISSUE 8 acceptance: fail -> boost -> repair with --telemetry-style
+    recording; goodput report == orchestrator accounting, span bytes ==
+    the executed TransferStats exactly, Perfetto loads, off-path losses
+    bit-identical."""
+    out = run_dist("session_telemetry.py")
+    assert "SESSION_TELEMETRY_OK" in out
+
+
+@pytest.mark.slow
+def test_profile_measure_telemetry_smoke(tmp_path):
+    """`launch.profile --measure --telemetry out.jsonl` (ISSUE 8 satellite):
+    the stream exists, holds the timed session.step spans, and the report
+    CLI folds it."""
+    stream = str(tmp_path / "profile.jsonl")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.profile", "--measure",
+         "--steps", "2", "--microbatches", "2", "--telemetry", stream],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert r.returncode == 0, f"profile failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+    assert f"telemetry stream written to {stream}" in r.stdout
+
+    from repro.telemetry import load_jsonl
+
+    events = load_jsonl(stream)
+    steps = [e for e in events
+             if e["kind"] == "span" and e["name"] == "session.step"]
+    # emulation + submesh sessions, 2 warmup + 2 timed steps each
+    assert len(steps) == 8
+    assert {e["labels"]["pp"] for e in steps} == {2}
+    assert all(e["dur"] > 0 for e in steps)
+
+    report_json = str(tmp_path / "report.json")
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.launch.telemetry_report", stream,
+         "--json", report_json],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "telemetry events:" in r2.stdout
+    with open(report_json) as f:
+        assert json.load(f)["events"] == len(events)

@@ -1,0 +1,68 @@
+"""Telemetry schema golden (ISSUE 8 satellite): the JSONL event schema
+(`EVENT_KEYS`), the goodput-decomposition row schema (`GOODPUT_KEYS`) and
+the BENCH_telemetry run-key set are pinned to checked-in JSON so a refactor
+cannot silently change what a recorded stream means — old streams must stay
+foldable by new code.
+
+On mismatch the freshly-computed schema is written next to the golden as
+``telemetry_schema.actual.json`` so the diff is inspectable. To
+intentionally re-pin after a schema change (a breaking change for every
+archived stream — say so in the commit):
+
+    PYTHONPATH=src python tests/test_telemetry_schema.py --regen
+"""
+import importlib.util
+import json
+import os
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "telemetry_schema.json")
+ACTUAL_PATH = os.path.join(GOLDEN_DIR, "telemetry_schema.actual.json")
+
+
+def compute_schema():
+    from repro.launch.telemetry_report import GOODPUT_KEYS
+    from repro.telemetry import EVENT_KEYS, EVENT_KINDS
+
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                              "bench_telemetry.py")
+    spec = importlib.util.spec_from_file_location("_bench_tel", bench_path)
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+    return {
+        "event_kinds": sorted(EVENT_KINDS),
+        "event_keys": {k: sorted(v) for k, v in EVENT_KEYS.items()},
+        "goodput_keys": sorted(GOODPUT_KEYS),
+        "bench_telemetry_run_keys": sorted(bench.TELEMETRY_KEYS),
+    }
+
+
+def test_telemetry_schema_matches_golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        f"missing golden file {GOLDEN_PATH}; generate it with "
+        "PYTHONPATH=src python tests/test_telemetry_schema.py --regen"
+    )
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    actual = compute_schema()
+    if actual != golden:
+        with open(ACTUAL_PATH, "w") as f:
+            json.dump(actual, f, indent=2, sort_keys=True)
+    assert actual == golden, (
+        "telemetry schema drifted from the golden — archived JSONL streams "
+        f"would stop folding. Diff {ACTUAL_PATH} against {GOLDEN_PATH}; "
+        "re-pin with --regen ONLY for an intentional breaking change."
+    )
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(compute_schema(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)
