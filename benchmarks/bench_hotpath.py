@@ -18,10 +18,21 @@ the where-gated logits put a ceiling on how tight this can be). The
 cross-stage hand-off byte table the submesh step reports is recorded next to
 the reshard transition ledger of a stage failure on the same session.
 
+Overlap rows (ISSUE 9) run the SAME degraded emulated pp=2 plan with the
+overlapped bucketed gradient sync (`core.overlap`, DESIGN.md §2.10) off and
+on, interleaved, plus `NTPSession.measure_sync` probes of each compiled
+sync. On serialized fake devices nothing truly overlaps, so the model
+prediction degenerates to the launch-collapse identity
+``t_on ≈ (t_off − sync_off) + sync_on`` and the measured exposed comm must
+match `perf_model.exposed_comm(sync_on, window=0) = sync_on` — both gated
+at ``OVERLAP_REL_TOL``. A full (non-smoke) run additionally requires
+overlap-on to be strictly faster than off (the bucketed sync launches far
+fewer collectives, which is exactly what CPU dispatch overhead prices).
+
 Kernel rows time each Pallas kernel interpret-vs-compiled
 (`kernels.mode.pallas_interpret` resolution); on a CPU-only host the
-compiled column is null with a note — the ratio is only meaningful where
-the backend lowers Pallas.
+compiled column carries an explicit ``"skipped": "no accelerator"`` note —
+the ratio is only meaningful where the backend lowers Pallas.
 
 Usage:
   python -m benchmarks.bench_hotpath            # measure, append BENCH_*.json
@@ -50,8 +61,15 @@ SERVE_PATH = os.path.join(REPO, "BENCH_serve.json")
 # same contract should hold at a much tighter bound.
 BUBBLE_REL_TOL = 0.40
 
+# overlap-on step time vs the launch-collapse prediction
+# t_on ≈ (t_off − sync_off) + sync_on: documented tolerance (DESIGN.md
+# §2.10). Same caveats as the bubble gate — serialized-CPU dispatch noise
+# on ~ms quantities keeps this loose; the identity itself is exact.
+OVERLAP_REL_TOL = 0.35
+
 # schema keys the CI bench-smoke job pins (drift = hard failure)
-TRAIN_KEYS = {"config", "step_wall_ms", "bubble", "handoff", "kernels"}
+TRAIN_KEYS = {"config", "step_wall_ms", "bubble", "handoff", "kernels",
+              "overlap"}
 SERVE_KEYS = {"config", "prefill_and_decode", "kv_reshard"}
 
 
@@ -181,6 +199,52 @@ def _worker_recorded(smoke, rec, np, jax, jnp, pm, ops, make_staged_mesh,
     measured_factor = rec.values("bench.bubble_factor", source="measured")[-1]
     rel_err = abs(measured_factor - analytic_factor) / analytic_factor
 
+    # --- overlapped bucketed sync: off vs on, same degraded plan (§2.10) ---
+    ov_kw = dict(local_batch=LB, optimizer=sgd(0.05),
+                 key=jax.random.PRNGKey(0), pp=PP, microbatches=MB)
+    ov_off = NTPSession.create(cfg, jax.make_mesh((D, N1), ("data", "model")),
+                               overlap=False, **ov_kw)
+    ov_on = NTPSession.create(cfg, jax.make_mesh((D, N1), ("data", "model")),
+                              overlap=True, **ov_kw)
+    for s in (ov_off, ov_on):
+        warmup(s)
+        # a degraded stage makes the sync heaviest (reshard→psum→reshard per
+        # bucket/leaf) — the paper-relevant path and the largest collapse
+        s.apply(FailureEvent(step=3, stage=1, domain=0))
+        warmup(s)  # recompile for the degraded plan + donated layout
+    for _ in range(steps):
+        one_step(ov_off, "overlap_off")
+        one_step(ov_on, "overlap_on")
+    t_off, t_on = med_ms("overlap_off"), med_ms("overlap_on")
+    # two probes each: the first compiles grads_fn/sync_fn, the second is
+    # the steady-state sync wall time (train.sync spans land in the ring)
+    for s in (ov_off, ov_on):
+        s.measure_sync(batch())
+    p_off, p_on = ov_off.measure_sync(batch()), ov_on.measure_sync(batch())
+    sync_off_ms, sync_on_ms = p_off["sync_s"] * 1e3, p_on["sync_s"] * 1e3
+    # serialized fake devices leave no backward window to hide the sync in,
+    # so the model's exposed comm degenerates to the full bucketed sync and
+    # the step prediction to the launch-collapse identity
+    predicted_exposed_ms = pm.exposed_comm(sync_on_ms, 0.0)
+    predicted_on_ms = (t_off - sync_off_ms) + predicted_exposed_ms
+    measured_exposed_ms = max(0.0, t_on - (t_off - sync_off_ms))
+    ov_rel_err = abs(predicted_on_ms - t_on) / t_on
+    rec.gauge("bench.overlap_step_ms", t_off, mode="off")
+    rec.gauge("bench.overlap_step_ms", t_on, mode="on")
+    overlap_row = {
+        "step_wall_ms": {"off": round(t_off, 1), "on": round(t_on, 1)},
+        "sync_ms": {"off": round(sync_off_ms, 1), "on": round(sync_on_ms, 1)},
+        "collectives": {"off": int(p_off["collectives"]),
+                        "on": int(p_on["collectives"])},
+        "exposed_ms": {"measured": round(measured_exposed_ms, 1),
+                       "predicted": round(predicted_exposed_ms, 1)},
+        "predicted_on_ms": round(predicted_on_ms, 1),
+        "rel_err": round(ov_rel_err, 4),
+        "tolerance": OVERLAP_REL_TOL,
+        "within_tolerance": bool(ov_rel_err <= OVERLAP_REL_TOL),
+        "on_faster": bool(t_on < t_off),
+    }
+
     # --- per-kernel interpret vs compiled ----------------------------------
     krng = np.random.default_rng(1)
     q = jnp.asarray(krng.normal(size=(1, 2, 128, 32)), jnp.float32)
@@ -220,6 +284,9 @@ def _worker_recorded(smoke, rec, np, jax, jnp, pm, ops, make_staged_mesh,
                                          label=f"{name}:compiled")
             row["ratio"] = round(row["interpret_us"] / row["compiled_us"], 2)
         except Exception as e:  # noqa: BLE001 — CPU cannot lower Pallas
+            # explicit skip marker: a null compiled column without it is
+            # schema drift (the guard rejects bare nulls)
+            row["skipped"] = "no accelerator"
             row["note"] = (f"backend {jax.default_backend()!r} cannot "
                            f"compile Pallas ({type(e).__name__})")
         # the dispatch counter the active recorder collected from
@@ -249,6 +316,7 @@ def _worker_recorded(smoke, rec, np, jax, jnp, pm, ops, make_staged_mesh,
         },
         "handoff": dict(handoff, reshard_transition_bytes=reshard_bytes),
         "kernels": kernels,
+        "overlap": overlap_row,
     }
 
     # --- serve: continuous-batching decode loop ----------------------------
@@ -327,7 +395,7 @@ def measure(smoke: bool = False) -> dict:
     if smoke:
         cmd.append("--smoke")
     out = subprocess.run(cmd, capture_output=True, text=True, env=env,
-                         cwd=REPO, timeout=1800)
+                         cwd=REPO, timeout=2700)
     for line in reversed(out.stdout.splitlines()):
         if line.startswith("HOTPATH_JSON "):
             return json.loads(line[len("HOTPATH_JSON "):])
@@ -347,10 +415,25 @@ def _check_schema(path: str, want_keys: set, bench: str) -> list:
     if doc.get("bench") != bench or not doc.get("runs"):
         errs.append(f"{os.path.basename(path)}: bad header/empty runs")
         return errs
-    got = set(doc["runs"][-1]) - {"date"}
+    last = doc["runs"][-1]
+    got = set(last) - {"date"}
     if got != want_keys:
         errs.append(f"{os.path.basename(path)}: run keys {sorted(got)} != "
                     f"expected {sorted(want_keys)}")
+    if bench == "hotpath_train" and not errs:
+        # kernel rows: a null compiled column must carry the explicit skip
+        # marker, never a bare null
+        for name, row in last.get("kernels", {}).items():
+            if (row.get("compiled_us") is None
+                    and row.get("skipped") != "no accelerator"):
+                errs.append(f"kernel row {name!r}: null compiled_us without "
+                            "an explicit 'skipped: no accelerator' note")
+        want_ov = {"step_wall_ms", "sync_ms", "collectives", "exposed_ms",
+                   "predicted_on_ms", "rel_err", "tolerance",
+                   "within_tolerance", "on_faster"}
+        missing = want_ov - set(last.get("overlap", {}))
+        if missing:
+            errs.append(f"overlap row missing keys {sorted(missing)}")
     return errs
 
 
@@ -371,6 +454,11 @@ def run():
          "value": t["handoff"]["total_bytes"],
          "derived": f"reshard_transition="
                     f"{t['handoff']['reshard_transition_bytes']}"},
+        {"name": "hotpath/overlap_step_ms/on",
+         "value": t["overlap"]["step_wall_ms"]["on"],
+         "derived": f"off={t['overlap']['step_wall_ms']['off']} "
+                    f"collectives={t['overlap']['collectives']} "
+                    f"rel_err={t['overlap']['rel_err']}"},
         {"name": "hotpath/serve_decode_tick_ms",
          "value": s["prefill_and_decode"]["decode_tick_ms"],
          "derived": f"tokens_per_s="
@@ -409,6 +497,13 @@ def main():
     if not m["train"]["bubble"]["within_tolerance"]:
         sys.exit("measured bubble factor outside the documented tolerance "
                  f"({m['train']['bubble']})")
+    ov = m["train"]["overlap"]
+    if not ov["within_tolerance"]:
+        sys.exit("overlap-on step time disagrees with the launch-collapse "
+                 f"prediction beyond the documented tolerance ({ov})")
+    if not args.smoke and not ov["on_faster"]:
+        sys.exit("overlap-on was not faster than overlap-off in a full run "
+                 f"({ov})")
     if args.smoke:
         errs = (_check_schema(TRAIN_PATH, TRAIN_KEYS, "hotpath_train")
                 + _check_schema(SERVE_PATH, SERVE_KEYS, "hotpath_serve"))

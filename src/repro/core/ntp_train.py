@@ -32,7 +32,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import nonuniform as nu
-from repro.core import reshard as rs
 from repro.optim.base import Optimizer, sgd
 
 
@@ -443,6 +442,7 @@ def make_ntp_train_step(
     optimizer: Optional[Optimizer] = None,
     local_batches=None,
     microbatches: int = 1,
+    overlap: bool = False,
 ):
     """Returns ``step`` with the same contract as train/steps.py:
 
@@ -470,19 +470,46 @@ def make_ntp_train_step(
     (`core.pp_submesh`, DESIGN.md §2.8). A pp=1 `StagedPlan` (and
     ``microbatches=1``) takes the EXACT uniform-plan code path below, so the
     single-stage step is bit-identical to what this builder produced before
-    stages existed."""
+    stages existed.
+
+    ``overlap=True`` switches to the overlapped, bucketed gradient sync
+    (`core.overlap`, DESIGN.md §2.10): on the 2-axis mesh the step is
+    rebuilt with a layer-chunked backward whose per-bucket sync issues
+    while the previous chunk's backward runs (gradients match this
+    builder's to f32 reassociation); on a staged submesh the pipeline step
+    keeps its schedule and the sync collapses to one fused collective per
+    (stage, plan-kind). ``overlap=False`` stays bit-identical to the
+    pre-overlap step."""
     if isinstance(fplan, nu.StagedPlan) and fplan.pp == 1:
         fplan = fplan.stages[0]
     if isinstance(fplan, nu.StagedPlan) or microbatches > 1:
         from repro.core import pp_submesh
 
-        builder = (
-            pp_submesh.make_submesh_train_step
-            if pp_submesh.is_staged_mesh(mesh)
-            else _make_staged_train_step
-        )
-        return builder(
+        if pp_submesh.is_staged_mesh(mesh):
+            return pp_submesh.make_submesh_train_step(
+                cfg, nu.as_staged(fplan), mesh, mode=mode,
+                local_batch=local_batch, optimizer=optimizer,
+                local_batches=local_batches, microbatches=microbatches,
+                overlap=overlap,
+            )
+        if overlap:
+            from repro.core import overlap as ov
+
+            return ov.make_overlapped_train_step(
+                cfg, nu.as_staged(fplan), mesh, mode=mode,
+                local_batch=local_batch, optimizer=optimizer,
+                local_batches=local_batches, microbatches=microbatches,
+            )
+        return _make_staged_train_step(
             cfg, nu.as_staged(fplan), mesh, mode=mode, local_batch=local_batch,
+            optimizer=optimizer, local_batches=local_batches,
+            microbatches=microbatches,
+        )
+    if overlap:
+        from repro.core import overlap as ov
+
+        return ov.make_overlapped_train_step(
+            cfg, fplan, mesh, mode=mode, local_batch=local_batch,
             optimizer=optimizer, local_batches=local_batches,
             microbatches=microbatches,
         )
@@ -520,34 +547,13 @@ def make_ntp_train_step(
             out_specs=P(), check_vma=False,
         )(params, batch)
 
-    def sync_grads(grads):
-        """NTP gradient synchronization (paper §3.1/§4.1) on the global
-        unit-buffered grads: reshard -> psum('data') -> reshard, per weight."""
-        specs = _tree_specs(grads)
+    # NTP gradient synchronization (paper §3.1/§4.1) on the global
+    # unit-buffered grads: reshard -> psum('data') -> reshard, per weight —
+    # the shared sequential body (core/overlap.make_sync_grads, a pp=1
+    # StagedPlan degenerates to exactly the uniform-plan sync)
+    from repro.core import overlap as ov
 
-        def body(g_local):
-            def sync(path, g):
-                key = _path_key(path)
-                if key not in UNIT_KEYS:
-                    # replicated params: AD through shard_map already summed
-                    # every rank's contribution — complete as-is.
-                    return g
-                wp = plans["attn"] if key in ("wq", "wk", "wv", "wo") else plans["mlp"]
-                g = g.reshape(g.shape[1:])  # drop replica dim
-                orig_shape = g.shape
-                if mode is Mode.NTP and not fplan.healthy:
-                    g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
-                    g = g.reshape(orig_shape)
-                else:
-                    g = jax.lax.psum(g, "data")
-                return g.reshape((1,) + g.shape)
-
-            return jax.tree_util.tree_map_with_path(sync, g_local)
-
-        return shard_map(
-            body, mesh=mesh, in_specs=(specs,), out_specs=specs,
-            check_vma=False,
-        )(grads)
+    sync_grads = ov.make_sync_grads(cfg, fplan, mesh, mode=mode)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, batch):
@@ -559,6 +565,10 @@ def make_ntp_train_step(
         metrics = dict(metrics, loss=loss)
         return new_params, new_state, metrics
 
+    step.overlap = False
+    step.collectives = sync_grads.collectives
+    step.grads_fn = jax.jit(jax.value_and_grad(global_loss))
+    step.sync_fn = jax.jit(sync_grads)
     return step
 
 
@@ -605,13 +615,6 @@ def _make_staged_train_step(
                                   d_axis)
     lb_table = jnp.asarray(lb, jnp.int32)
 
-    def _layer_idx(path):
-        # params["layers"][i][key] paths carry the layer index one hop up
-        for e in reversed(path):
-            if hasattr(e, "idx"):
-                return e.idx
-        return None
-
     def global_loss(params, batch):
         """Scalar loss via shard_map (AD outside, exactly as the uniform
         builder). Microbatch totals/counts accumulate BEFORE the data psum
@@ -652,37 +655,14 @@ def _make_staged_train_step(
             out_specs=P(), check_vma=False,
         )(params, batch)
 
-    def sync_grads(grads):
-        """Stage-local NTP gradient sync: each layer's unit grads reshard →
-        psum('data') → reshard under its OWN stage's plan; a healthy stage
-        takes the plain psum fast path even while another stage is degraded
-        (no cross-stage traffic — the sync collective never mixes stages)."""
-        specs = _tree_specs(grads)
+    # Stage-local NTP gradient sync (shared body — core/overlap): each
+    # layer's unit grads reshard → psum('data') → reshard under its OWN
+    # stage's plan; a healthy stage takes the plain psum fast path even
+    # while another stage is degraded (no cross-stage traffic — the sync
+    # collective never mixes stages).
+    from repro.core import overlap as ov
 
-        def body(g_local):
-            def sync(path, g):
-                key = _path_key(path)
-                if key not in UNIT_KEYS:
-                    return g
-                s = stage_of[_layer_idx(path)]
-                sp = stage_plans[s]
-                wp = sp["attn"] if key in ("wq", "wk", "wv", "wo") else sp["mlp"]
-                splan = staged.stages[s]
-                g = g.reshape(g.shape[1:])  # drop replica dim
-                orig_shape = g.shape
-                if mode is Mode.NTP and not splan.healthy:
-                    g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
-                    g = g.reshape(orig_shape)
-                else:
-                    g = jax.lax.psum(g, "data")
-                return g.reshape((1,) + g.shape)
-
-            return jax.tree_util.tree_map_with_path(sync, g_local)
-
-        return shard_map(
-            body, mesh=mesh, in_specs=(specs,), out_specs=specs,
-            check_vma=False,
-        )(grads)
+    sync_grads = ov.make_sync_grads(cfg, staged, mesh, mode=mode)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, batch):
@@ -694,4 +674,8 @@ def _make_staged_train_step(
         metrics = dict(metrics, loss=loss)
         return new_params, new_state, metrics
 
+    step.overlap = False
+    step.collectives = sync_grads.collectives
+    step.grads_fn = jax.jit(jax.value_and_grad(global_loss))
+    step.sync_fn = jax.jit(sync_grads)
     return step

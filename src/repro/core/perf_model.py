@@ -56,12 +56,17 @@ def iteration_time(
     power_speedup: float = 1.0,
     dp_overlap: float = 0.7,
     tp_overlap: float = 0.3,
+    reshard_overlap: Optional[float] = None,
 ) -> Dict[str, float]:
     """Per-iteration time breakdown for ONE DP replica (seconds).
 
     tp_reduced: NTP — this replica's stages run at a reduced TP degree
     (same work on fewer chips). local_batch_scale scales its sample count.
     power_speedup: NTP-PW compute boost.
+    reshard_overlap: None keeps the legacy Fig.-8 heuristic (90% of the
+    reshard hidden); an explicit fraction exposes ``(1 - reshard_overlap)``
+    of it — `overlap_iteration_time` passes 0.0 to start from a fully
+    exposed sync before applying its own overlap window.
     """
     tp_eff = tp_reduced or par.tp
     tokens_per_replica = wl.minibatch_tokens / par.dp * local_batch_scale
@@ -96,9 +101,12 @@ def iteration_time(
         shard_bytes = 2.0 * wl.n_params / (par.tp * par.pp)
         reshard_bytes = shard_bytes * (1.0 - tp_reduced / par.tp) * 2  # pre+post
         t_reshard = reshard_bytes / hw.scaleup_bw
-        # Fig. 8: overlapped with the final backward; exposed part is linear
-        # in comm:comp with a small slope — model 10% exposed
-        t_reshard_exposed = 0.1 * t_reshard
+        if reshard_overlap is None:
+            # Fig. 8: overlapped with the final backward; exposed part is
+            # linear in comm:comp with a small slope — model 10% exposed
+            t_reshard_exposed = 0.1 * t_reshard
+        else:
+            t_reshard_exposed = (1.0 - reshard_overlap) * t_reshard
 
     total = t_comp + t_tp_exposed + t_pp + t_dp_exposed + t_reshard_exposed
     return {
@@ -133,6 +141,72 @@ def staged_iteration_time(
     return iteration_time(
         hw, wl, par, tp_reduced=(None if tp_red == par.tp else tp_red), **kw
     )
+
+
+def exposed_comm(sync_s: float, overlappable_compute_s: float) -> float:
+    """Exposed gradient-sync time once overlap is on (DESIGN.md §2.10):
+    the sync that does not fit inside the backward window stays on the
+    critical path — ``max(0, sync − overlappable_compute)``. This is the
+    identity `bench_hotpath` and `telemetry_report` both use, so the
+    measured and modeled decompositions cannot drift apart."""
+    return max(0.0, float(sync_s) - float(overlappable_compute_s))
+
+
+def overlap_iteration_time(
+    hw: Hardware,
+    wl: Workload,
+    par: Parallel,
+    *,
+    overlappable_fraction: float = 0.7,
+    collective_ratio: float = 1.0,
+    **kw,
+) -> Dict[str, float]:
+    """Overlap-aware iteration time (ISSUE 9 / DESIGN.md §2.10).
+
+    `iteration_time`'s fixed dp_overlap/reshard heuristics model a generic
+    well-tuned stack. The overlap engine makes those knobs explicit: start
+    from a FULLY exposed sync (dp_overlap=0, reshard_overlap=0), then hide
+    it behind the layer-chunked backward window
+
+        window  = overlappable_fraction × (compute + tp_exposed + pp_bubble)
+        exposed = exposed_comm(sync, window)
+
+    ``collective_ratio`` scales the sync term by the bucketed/sequential
+    launch-count ratio (`overlap.sync_collectives`) for launch-bound
+    regimes — on real interconnects bandwidth dominates and 1.0 is right;
+    on the CPU emulation bench_hotpath measures a near-linear collapse.
+    ``kw`` forwards to `iteration_time` (tp_reduced, local_batch_scale,
+    power_speedup, tp_overlap); dp_overlap/reshard_overlap are owned here.
+
+    Returns the `iteration_time` dict plus ``sync`` (full sync time),
+    ``overlap_window`` and ``exposed_comm``; ``total``/``per_gpu_tput`` are
+    recomputed with the overlapped sync. ``dp_exposed``/``reshard_exposed``
+    keep their pre-overlap (fully exposed) values so the sync composition
+    stays visible."""
+    assert 0.0 <= overlappable_fraction <= 1.0, overlappable_fraction
+    assert collective_ratio > 0.0, collective_ratio
+    base = iteration_time(
+        hw, wl, par, dp_overlap=0.0, reshard_overlap=0.0, **kw
+    )
+    sync = (base["dp_exposed"] + base["reshard_exposed"]) * collective_ratio
+    window = overlappable_fraction * (
+        base["compute"] + base["tp_exposed"] + base["pp_bubble"]
+    )
+    exposed = exposed_comm(sync, window)
+    total = base["compute"] + base["tp_exposed"] + base["pp_bubble"] + exposed
+    tokens_per_replica = (
+        wl.minibatch_tokens / par.dp * kw.get("local_batch_scale", 1.0)
+    )
+    tp_eff = kw.get("tp_reduced") or par.tp
+    out = dict(base)
+    out.update(
+        total=total,
+        sync=sync,
+        overlap_window=window,
+        exposed_comm=exposed,
+        per_gpu_tput=tokens_per_replica / total / tp_eff / par.pp,
+    )
+    return out
 
 
 def best_config(

@@ -39,7 +39,6 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import nonuniform as nu
 from repro.core import ntp_train as nt
-from repro.core import reshard as rs
 from repro.optim.base import Optimizer, sgd
 
 STAGE_AXES = ("stage", "data", "model")
@@ -196,6 +195,7 @@ def make_submesh_train_step(
     optimizer: Optional[Optimizer] = None,
     local_batches=None,
     microbatches: int = 1,
+    overlap: bool = False,
 ):
     """The measured twin of `_make_staged_train_step` on a staged mesh.
 
@@ -206,7 +206,15 @@ def make_submesh_train_step(
     axis. pp=2 output matches the emulated step to f32 tolerance
     (tests/dist/session_submesh_pp.py). The returned step carries
     ``step.ticks``, ``step.submesh`` and ``step.handoff_for(seq_len)`` (the
-    cross-stage byte table; ``step.handoff`` binds on first call)."""
+    cross-stage byte table; ``step.handoff`` binds on first call).
+
+    ``overlap=True`` keeps the pipeline schedule and swaps the per-leaf
+    sync for the BUCKETED one (core/overlap, DESIGN.md §2.10): one fused
+    collective per (stage, plan-kind) instead of one per (layer, leaf).
+    The data-axis sync collectives then sit in the same program region as
+    the backward drain ticks, where XLA's scheduler can hide them behind
+    the stages that are still draining (healthy buckets stay bit-identical
+    to the sequential sync; degraded ones are exact to f32 reassociation)."""
     from repro.configs.shapes import layer_stages
 
     validate_staged_mesh(mesh, staged.pp)
@@ -325,43 +333,15 @@ def make_submesh_train_step(
             out_specs=P(), check_vma=False,
         )(stacked, batch)
 
-    def sync_grads(grads):
-        """Stage-local NTP gradient sync — the emulated builder's, verbatim:
-        grads live on the packed per-layer tree (the stacking happened
-        inside the loss and its transpose undid it), so each layer reshards
-        under its OWN stage's plan over the ``data`` axis."""
-        specs = nt._tree_specs(grads)
+    # Stage-local NTP gradient sync (shared body — core/overlap): grads
+    # live on the packed per-layer tree (the stacking happened inside the
+    # loss and its transpose undid it), so each layer reshards under its
+    # OWN stage's plan over the ``data`` axis. ``overlap`` swaps in the
+    # bucketed route: one fused collective per (stage, plan-kind).
+    from repro.core import overlap as ov
 
-        def body(g_local):
-            def sync(path, g):
-                key = nt._path_key(path)
-                if key not in nt.UNIT_KEYS:
-                    return g
-                st = stage_of[_layer_idx(path)]
-                sp = stage_plans[st]
-                wp = sp["attn"] if key in _ATTN_KEYS else sp["mlp"]
-                splan = staged.stages[st]
-                g = g.reshape(g.shape[1:])
-                orig_shape = g.shape
-                if mode is nt.Mode.NTP and not splan.healthy:
-                    g = rs.ntp_sync_gradient(g.reshape(g.shape[0], 1, -1), wp)
-                    g = g.reshape(orig_shape)
-                else:
-                    g = jax.lax.psum(g, "data")
-                return g.reshape((1,) + g.shape)
-
-            return jax.tree_util.tree_map_with_path(sync, g_local)
-
-        return shard_map(
-            body, mesh=mesh, in_specs=(specs,), out_specs=specs,
-            check_vma=False,
-        )(grads)
-
-    def _layer_idx(path):
-        for e in reversed(path):
-            if hasattr(e, "idx"):
-                return e.idx
-        return None
+    sync_grads = ov.make_sync_grads(cfg, staged, mesh, mode=mode,
+                                    bucketed=overlap)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def _step(params, opt_state, batch):
@@ -390,4 +370,8 @@ def make_submesh_train_step(
         cfg, staged, local_batch=local_batch, microbatches=m,
         seq_len=seq_len,
     )
+    step.overlap = overlap
+    step.collectives = sync_grads.collectives
+    step.grads_fn = jax.jit(jax.value_and_grad(global_loss))
+    step.sync_fn = jax.jit(sync_grads)
     return step

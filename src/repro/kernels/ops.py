@@ -15,6 +15,7 @@ import functools
 
 import jax
 
+from repro.kernels import bucket as _bk
 from repro.kernels import flash_attention as _fa
 from repro.kernels import reshard_pack as _rp
 from repro.kernels import rmsnorm as _rn
@@ -82,4 +83,32 @@ def reshard_pack(src, send_idx, *, interpret=None):
     return _reshard_pack(
         src, send_idx,
         interpret=pallas_interpret(interpret, kernel="reshard_pack"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bucket_pack(leaves, *, interpret):
+    return _bk.bucket_pack(leaves, interpret=interpret)
+
+
+def bucket_pack(leaves, *, interpret=None):
+    """Fuse same-row 2-D gradient leaves into one flat bucket
+    (kernels/bucket.py — the overlapped-sync copy engine)."""
+    return _bucket_pack(
+        tuple(leaves),
+        interpret=pallas_interpret(interpret, kernel="bucket_pack"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("widths", "interpret"))
+def _bucket_unpack(flat, *, widths, interpret):
+    return _bk.bucket_unpack(flat, widths, interpret=interpret)
+
+
+def bucket_unpack(flat, widths, *, interpret=None):
+    """Split a packed bucket back into per-leaf arrays (inverse of
+    `bucket_pack`, same static column offsets)."""
+    return _bucket_unpack(
+        flat, widths=tuple(int(w) for w in widths),
+        interpret=pallas_interpret(interpret, kernel="bucket_unpack"),
     )

@@ -60,7 +60,7 @@ def _measure(args):
     cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
                          d_ff=256, unit_rows=64, n_layers=2 * pp, vocab=128)
     kw = dict(local_batch=lb, optimizer=sgd(0.05), key=jax.random.PRNGKey(0),
-              pp=pp, microbatches=mb)
+              pp=pp, microbatches=mb, overlap=args.overlap)
     emu = NTPSession.create(cfg, jax.make_mesh((d, n1), ("data", "model")),
                             **kw)
     sub = NTPSession.create(cfg, make_staged_mesh(pp, d, n1), **kw)
@@ -94,6 +94,10 @@ def _measure(args):
         t_sub, ms = timed(sub, "sub")
 
     analytic = (mb + pp - 1) / mb
+    for sess, name in ((emu, "emu"), (sub, "sub")):
+        s = sess.measure_sync(batch())
+        print(f"  {name} sync probe (overlap {s['overlap']}): "
+              f"{s['sync_s'] * 1e3:.1f} ms, {s['collectives']} collectives")
     print(f"\nper-step median: emulation {t_emu:.1f} ms, "
           f"submesh {t_sub:.1f} ms")
     print(f"bubble factor: measured {t_sub / t_emu:.3f} vs analytic "
@@ -128,6 +132,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8,
                     help="with --measure: per-replica batch")
     ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--overlap", choices=["on", "off"], default="off",
+                    help="with --measure: overlapped bucketed gradient sync "
+                         "(core/overlap, DESIGN.md §2.10) in both sessions")
     args = ap.parse_args()
     if args.telemetry and not args.measure:
         ap.error("--telemetry needs --measure (dry-run has no timed steps)")

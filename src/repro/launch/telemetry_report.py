@@ -8,10 +8,15 @@ recorded events; nothing is re-simulated:
   `train.goodput_unboosted` gauge series the orchestrator records with the
   SAME local-batch arithmetic as `TraceRunner.goodput()` — the folded mean
   matches the runner's own accounting exactly);
-* **time decomposition** — ``compute / bubble / reshard`` fractions of the
-  run, from the `session.step` / `session.transition` span durations and
-  the per-step `train.rel_iter_time` gauges (steps with no recorded
-  slowdown count as rel 1.0);
+* **time decomposition** — ``compute / bubble / reshard / exposed-comm``
+  fractions of the run, from the `session.step` / `session.transition`
+  span durations, the per-step `train.rel_iter_time` gauges (steps with no
+  recorded slowdown count as rel 1.0), and the `train.sync` probe spans'
+  ``exposed_s`` attrs (pre-overlap traces carry no sync spans and report
+  ``exposed_comm_frac = 0.0`` — old streams re-fold unchanged);
+* **sync table** — per overlap mode (`on`/`off`), collective-launch counts
+  and total/exposed sync seconds from the `train.sync` spans that
+  `NTPSession.measure_sync` records (DESIGN.md §2.10);
 * **transition table** — per-kind counts and byte totals from the
   transition spans' attached `TransferStats`;
 * **serve table** — TTFT/TPOT percentile summaries + admission/preemption
@@ -38,8 +43,11 @@ from repro.telemetry import load_jsonl, summarize_hist, write_chrome_trace
 # golden in tests/golden/telemetry_schema.json)
 GOODPUT_KEYS = (
     "steps", "goodput", "goodput_unboosted", "boost_recovered",
-    "compute_frac", "bubble_frac", "reshard_frac",
+    "compute_frac", "bubble_frac", "reshard_frac", "exposed_comm_frac",
 )
+
+# the per-overlap-mode sync row schema (train.sync spans, DESIGN.md §2.10)
+SYNC_SPAN_KEYS = ("count", "collectives", "sync_s", "exposed_s")
 
 
 def _series(events: Iterable[Dict], kind: str, name: str,
@@ -62,16 +70,24 @@ def goodput_table(events: List[Dict]) -> Dict[str, Dict]:
     to the unboosted local-batch rule on the same plans. The time fractions
     split the run's wall clock: ``reshard_frac`` from transition span
     durations, ``bubble_frac`` from the predicted per-step slowdown on the
-    remaining step time, ``compute_frac`` as the rest."""
+    remaining step time, ``exposed_comm_frac`` from the `train.sync` probe
+    spans' ``exposed_s`` attrs (gradient sync left on the critical path —
+    zero when the trace predates the overlap engine), ``compute_frac`` as
+    the rest."""
     step_spans = _series(events, "span", "session.step")
     # only transitions that EXECUTED moved any state; refused/no-op applies
     # are planner overhead, not reshard traffic
     trans_spans = [e for e in _series(events, "span", "session.transition")
                    if e["attrs"].get("changed") is True]
+    sync_spans = _series(events, "span", "train.sync")
     step_s = float(sum(e["dur"] for e in step_spans))
     reshard_s = float(sum(e["dur"] for e in trans_spans))
+    exposed_s = float(sum(e["attrs"].get("exposed_s", 0.0)
+                          for e in sync_spans))
     denom = step_s + reshard_s
     reshard_frac = reshard_s / denom if denom > 0 else 0.0
+    exposed_frac = min(exposed_s / denom, 1.0 - reshard_frac) \
+        if denom > 0 else 0.0
 
     out: Dict[str, Dict] = {}
     policies = sorted({
@@ -96,6 +112,9 @@ def goodput_table(events: List[Dict]) -> Dict[str, Dict]:
         bubble = (float(np.mean([1.0 - 1.0 / max(r, 1.0) for r in rel]))
                   if rel else 0.0)
         bubble_frac = (1.0 - reshard_frac) * bubble
+        # exposed comm comes out of the compute share (it is step time the
+        # backward window failed to hide); never let it push compute < 0
+        ef = min(exposed_frac, 1.0 - reshard_frac - bubble_frac)
         goodput = float(np.mean(g)) if g else 1.0
         goodput_u = float(np.mean(gu)) if gu else goodput
         out[pol] = {
@@ -103,9 +122,10 @@ def goodput_table(events: List[Dict]) -> Dict[str, Dict]:
             "goodput": goodput,
             "goodput_unboosted": goodput_u,
             "boost_recovered": goodput - goodput_u,
-            "compute_frac": 1.0 - reshard_frac - bubble_frac,
+            "compute_frac": 1.0 - reshard_frac - bubble_frac - ef,
             "bubble_frac": bubble_frac,
             "reshard_frac": reshard_frac,
+            "exposed_comm_frac": ef,
         }
     return out
 
@@ -133,6 +153,27 @@ def transition_table(events: List[Dict]) -> Dict[str, Dict]:
             row["bytes_moved"] += int(e["attrs"].get("bytes_moved", 0))
             row["messages"] += int(e["attrs"].get("messages", 0))
             row["seconds"] += float(e["dur"])
+    return out
+
+
+def sync_table(events: List[Dict]) -> Dict[str, Dict]:
+    """Per-overlap-mode gradient-sync rollup from the `train.sync` probe
+    spans (`NTPSession.measure_sync`, DESIGN.md §2.10): probe counts, the
+    static collective-launch count of the compiled sync, and total /
+    exposed sync seconds. Row keys are guarded by ``SYNC_SPAN_KEYS`` in the
+    telemetry schema golden."""
+    out: Dict[str, Dict] = {}
+    for e in _series(events, "span", "train.sync"):
+        mode = e["labels"].get("overlap", "?")
+        row = out.setdefault(mode, {
+            "count": 0, "collectives": 0, "sync_s": 0.0, "exposed_s": 0.0,
+        })
+        row["count"] += 1
+        # static per-step launch count — identical across probes of one mode
+        row["collectives"] = int(e["attrs"].get("collectives",
+                                                row["collectives"]))
+        row["sync_s"] += float(e["attrs"].get("sync_s", e["dur"]))
+        row["exposed_s"] += float(e["attrs"].get("exposed_s", 0.0))
     return out
 
 
@@ -173,6 +214,9 @@ def report(events: List[Dict]) -> Dict:
     tr = transition_table(events)
     if tr:
         doc["transitions"] = tr
+    sy = sync_table(events)
+    if sy:
+        doc["sync"] = sy
     sv = serve_table(events)
     if sv is not None:
         doc["serve"] = sv
@@ -199,6 +243,13 @@ def _print_report(doc: Dict) -> None:
             print(f"  {k:28s} count {row['count']:4d}  "
                   f"bytes {row['bytes_moved']:>12,d}  "
                   f"msgs {row['messages']:5d}  {row['seconds']*1e3:8.1f} ms")
+    if "sync" in doc:
+        print("\ngradient sync (train.sync probes):")
+        for mode, row in sorted(doc["sync"].items()):
+            print(f"  overlap {mode:4s} probes {row['count']:3d}  "
+                  f"collectives {row['collectives']:4d}  "
+                  f"sync {row['sync_s']*1e3:8.1f} ms  "
+                  f"exposed {row['exposed_s']*1e3:8.1f} ms")
     if "serve" in doc:
         sv = doc["serve"]
         print("\nserve:")

@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1,
                     help="1F1B microbatch chunks per step (NTP mode; must "
                          "divide --batch)")
+    ap.add_argument("--overlap", choices=["on", "off"], default="off",
+                    help="overlapped, bucketed gradient sync (core/overlap, "
+                         "DESIGN.md §2.10): hide the DP all-reduce / NTP "
+                         "reshard chain behind backward compute; 'off' is "
+                         "bit-identical to the pre-overlap step")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a GPU failure before this step (NTP mode)")
     ap.add_argument("--fail-replica", type=int, default=1,
@@ -118,6 +123,9 @@ def main() -> None:
             ap.error(f"--pp {args.pp} not in supported ladder {SUPPORTED_PP}")
     if args.fail_stage is not None and args.pp == 1:
         ap.error("--fail-stage needs --pp > 1")
+    if args.overlap == "on" and not args.ntp:
+        ap.error("--overlap needs --ntp (the overlapped bucketed sync is "
+                 "NTP-backend-only)")
     if (args.allocator != "off" or args.spares) and not args.ntp:
         ap.error("--allocator/--spares need --ntp (lifecycle replanning is "
                  "NTP-backend-only)")
@@ -245,12 +253,14 @@ def _run_ntp(args) -> None:
         power_policy=power_policy(policy_name) if policy_name else None,
         pp=args.pp, microbatches=args.microbatches,
         spares=args.spares, allocator=allocator,
+        overlap=args.overlap,
     )
     n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
           + (f"pp={args.pp} stages {session.stage_boundaries}  "
              if args.pp > 1 else "")
           + f"plan {session.plan}"
+          + (f"  overlap {args.overlap}" if args.overlap == "on" else "")
           + (f"  policy {policy_name}" if policy_name else "")
           + (f"  allocator {args.allocator} spares {args.spares}"
              if args.allocator != "off" or args.spares else ""))

@@ -82,6 +82,7 @@ class NTPSession:
         pp: int = 1,                       # pipeline stages (DESIGN.md §2.6)
         microbatches: int = 1,             # 1F1B chunks per step (pp > 1)
         allocator=None,                    # cluster.GreedyAllocator (pp > 1)
+        overlap: bool = False,             # overlapped bucketed sync (§2.10)
     ) -> "NTPSession":
         """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
         and/or ``plan`` seed the failure state (default: pristine).
@@ -114,6 +115,9 @@ class NTPSession:
             )
         self._policy = power_policy
         self._spares = spares
+        from repro.core.overlap import coerce_overlap
+
+        self._overlap = coerce_overlap(overlap)
         self._decision = None
         self.last_transition = None   # TransferStats of the latest repack
         self.last_global_plan = None  # allocator's latest GlobalPlan verdict
@@ -283,6 +287,7 @@ class NTPSession:
         self._last_metrics = {}
         self._policy = None
         self._spares = 0
+        self._overlap = False
         self._pp = 1
         self._microbatches = 1
         self._decision = None
@@ -318,6 +323,12 @@ class NTPSession:
     @property
     def pp(self) -> int:
         return self._pp
+
+    @property
+    def overlap(self) -> bool:
+        """Whether the step runs the overlapped, bucketed gradient sync
+        (core/overlap, DESIGN.md §2.10)."""
+        return self._overlap
 
     @property
     def stage_boundaries(self):
@@ -389,7 +400,8 @@ class NTPSession:
         timing); wall-per-step lives in the orchestrator/bench spans that
         own the `block_until_ready`."""
         tel = telemetry.get()
-        with tel.span("session.step", backend=self._backend, pp=self._pp):
+        with tel.span("session.step", backend=self._backend, pp=self._pp,
+                      overlap="on" if self._overlap else "off"):
             self._params, self._opt, metrics = self._step_fn(
                 self._params, self._opt, batch
             )
@@ -425,6 +437,43 @@ class NTPSession:
             )
         self._last_metrics = metrics
         return metrics
+
+    def measure_sync(self, batch) -> Dict[str, Any]:
+        """Measure the step's gradient sync in ISOLATION (the probe behind
+        `BENCH_train.json`'s overlap rows and `launch/profile.py
+        --measure`): run the step's ``grads_fn`` once to materialize a
+        gradients tree, then execute ``sync_fn`` to completion under a
+        ``train.sync`` telemetry span — phase marks ``issued`` /
+        ``completed``, attrs ``collectives`` (static launch count),
+        ``sync_s`` (blocking wall seconds) and ``exposed_s``. Measured in
+        isolation the sync is fully exposed (``exposed_s == sync_s``); how
+        much of it the overlapped step actually hides is the STEP-level
+        difference bench_hotpath computes from the on/off pair, and
+        `perf_model.exposed_comm` predicts from the overlappable-compute
+        window. Returns the attrs dict. NTP backend only."""
+        self._require_ntp("sync measurement")
+        step = self._step_fn
+        if not hasattr(step, "sync_fn"):
+            raise NotImplementedError(
+                "this step builder carries no sync probe")
+        import time
+
+        tel = telemetry.get()
+        _, grads = step.grads_fn(self._params, batch)
+        jax.block_until_ready(grads)
+        label = "on" if getattr(step, "overlap", False) else "off"
+        with tel.span("train.sync", overlap=label,
+                      backend=self._backend) as sp:
+            sp.mark("issued")
+            t0 = time.perf_counter()
+            out = step.sync_fn(grads)
+            jax.block_until_ready(out)
+            sync_s = time.perf_counter() - t0
+            sp.mark("completed")
+            attrs = {"collectives": int(step.collectives),
+                     "sync_s": sync_s, "exposed_s": sync_s}
+            sp.set(**attrs)
+        return dict(attrs, overlap=label)
 
     # ---------------------------------------------------------------- events
 
@@ -595,6 +644,7 @@ class NTPSession:
                 else self._decision.local_batches
             ),
             microbatches=self._microbatches,
+            overlap=self._overlap,
         )
 
     def _transition(self, old: FailurePlan, new: FailurePlan) -> None:

@@ -1,0 +1,61 @@
+"""Overlapped (bucketed) sync on the measured submesh pipeline (ISSUE 9),
+16 fake CPU devices, pp=2 on a (2 stage, 2 data, 4 model) staged mesh.
+
+On the submesh path overlap only changes HOW the sync is launched — leaves
+sharing a (stage, WeightPlan) ride one fused flat buffer through the same
+reshard -> psum -> reshard chain (kernels/bucket pack/unpack). Column
+concatenation commutes with the row-indexed reshard gathers and the
+elementwise psum, so overlap-on must match overlap-off EXACTLY (same
+values, not just close) at every step of a stage-addressed fail -> repair
+chain, while launching strictly fewer collectives.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_staged_mesh
+from repro.optim import sgd
+from repro.runtime import (
+    FailureEvent, NTPModelConfig, NTPSession, RecoveryEvent,
+)
+
+LB, SEQ, MB, STEPS = 4, 32, 2, 10
+cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
+                     d_ff=256, unit_rows=64, n_layers=4, vocab=128)
+mesh = make_staged_mesh(2, 2, 4)
+
+
+def make(overlap):
+    return NTPSession.create(cfg, mesh, local_batch=LB, optimizer=sgd(0.05),
+                             key=jax.random.PRNGKey(0), pp=2,
+                             microbatches=MB, overlap=overlap)
+
+
+EVENTS = {
+    2: FailureEvent(step=2, stage=1, domain=0),
+    4: FailureEvent(step=4, stage=0, domain=1),
+    6: RecoveryEvent(step=6, stage=1, domain=0),
+    8: RecoveryEvent(step=8, stage=0, domain=1),
+}
+s_off, s_on = make(False), make(True)
+assert not s_off.overlap and s_on.overlap
+rng = np.random.default_rng(0)
+for i in range(STEPS):
+    if i in EVENTS:
+        s_off.apply(EVENTS[i])
+        s_on.apply(EVENTS[i])
+    assert s_on._step_fn.collectives < s_off._step_fn.collectives, (
+        i, s_on._step_fn.collectives, s_off._step_fn.collectives)
+    b = jnp.asarray(rng.integers(0, cfg.vocab, (2 * LB, SEQ + 1)))
+    m_off, m_on = s_off.step(b), s_on.step(b)
+    assert float(m_off["loss"]) == float(m_on["loss"]), (
+        i, float(m_off["loss"]), float(m_on["loss"]))
+    for a, c in zip(jax.tree.leaves(s_off.params),
+                    jax.tree.leaves(s_on.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(c)), i
+assert s_off.plan.healthy and s_on.plan.healthy
+print(f"lockstep off/on exact over {STEPS} steps + {len(EVENTS)} events, "
+      f"collectives {s_off._step_fn.collectives} -> "
+      f"{s_on._step_fn.collectives}")
+print("SESSION_OVERLAP_SUBMESH_PP_OK")

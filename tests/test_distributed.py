@@ -41,6 +41,24 @@ def test_moe_expert_parallel_matches_oracle(run_dist):
 
 
 @pytest.mark.slow
+def test_session_overlap_pp_lifecycle(run_dist):
+    """ISSUE 9 acceptance: the overlapped bucketed sync (core/overlap)
+    matches overlap-off to f32 tolerance AND the dense reference through
+    stage-addressed fail -> repair chains, with strictly fewer collective
+    launches at every plan state."""
+    out = run_dist("session_overlap_pp.py")
+    assert "SESSION_OVERLAP_PP_OK" in out
+
+
+@pytest.mark.slow
+def test_session_overlap_submesh_pp_exact(run_dist):
+    """Bucketing commutes exactly on the measured submesh path: overlap-on
+    equals overlap-off value-for-value through fail -> repair."""
+    out = run_dist("session_overlap_submesh_pp.py", devices=16)
+    assert "SESSION_OVERLAP_SUBMESH_PP_OK" in out
+
+
+@pytest.mark.slow
 def test_session_lifecycle_fail_boost_repair(run_dist):
     """ISSUE 2 acceptance: a scripted fail -> boost -> repair trace replayed
     through NTPSession (via TraceRunner) matches the dense uniform reference

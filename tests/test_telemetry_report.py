@@ -21,8 +21,8 @@ import numpy as np
 import pytest
 
 from repro.launch.telemetry_report import (
-    GOODPUT_KEYS, goodput_table, kernel_table, report, serve_table,
-    transition_table,
+    GOODPUT_KEYS, SYNC_SPAN_KEYS, goodput_table, kernel_table, report,
+    serve_table, sync_table, transition_table,
 )
 from repro.telemetry import JsonlSink, MemorySink, Recorder
 
@@ -105,6 +105,53 @@ def test_goodput_no_transitions():
     row = goodput_table(list(sink.events()))["none"]
     assert row["reshard_frac"] == 0.0 and row["bubble_frac"] == 0.0
     assert row["compute_frac"] == pytest.approx(1.0)
+
+
+def test_sync_table_and_exposed_comm_frac():
+    """`train.sync` probe spans fold into the per-mode sync table and their
+    ``exposed_s`` becomes the goodput rows' ``exposed_comm_frac`` (carved
+    out of compute — the decomposition still sums to 1)."""
+    clock = StreamClock()
+    sink = MemorySink()
+    rec = Recorder(sinks=[sink], clock=clock)
+    for _ in range(2):
+        with rec.span("session.step", backend="ntp"):
+            clock.t += 0.1
+        rec.gauge("train.goodput", 1.0, policy="ntp")
+    with rec.span("train.sync", overlap="off", backend="ntp") as sp:
+        clock.t += 0.04
+        sp.set(collectives=48, sync_s=0.04, exposed_s=0.04)
+    with rec.span("train.sync", overlap="on", backend="ntp") as sp:
+        clock.t += 0.01
+        sp.set(collectives=8, sync_s=0.01, exposed_s=0.002)
+    events = list(sink.events())
+
+    sy = sync_table(events)
+    assert set(sy) == {"off", "on"}
+    for row in sy.values():
+        assert tuple(sorted(row)) == tuple(sorted(SYNC_SPAN_KEYS))
+    assert sy["off"]["collectives"] == 48 and sy["on"]["collectives"] == 8
+    assert sy["on"]["count"] == 1
+    assert sy["on"]["sync_s"] == pytest.approx(0.01)
+    assert sy["on"]["exposed_s"] == pytest.approx(0.002)
+
+    row = goodput_table(events)["ntp"]
+    # 0.042 s exposed over 0.2 s of steps (no transitions)
+    assert row["exposed_comm_frac"] == pytest.approx(0.042 / 0.2)
+    assert (row["compute_frac"] + row["bubble_frac"] + row["reshard_frac"]
+            + row["exposed_comm_frac"] == pytest.approx(1.0))
+    assert "sync" in report(events)
+
+
+def test_pre_overlap_stream_reports_zero_exposed():
+    """Streams recorded before the overlap engine carry no train.sync spans:
+    they must re-fold unchanged with exposed_comm_frac == 0."""
+    _, sink, _ = build_stream()
+    events = list(sink.events())
+    assert sync_table(events) == {}
+    row = goodput_table(events)["ntp_pw"]
+    assert row["exposed_comm_frac"] == 0.0
+    assert "sync" not in report(events)
 
 
 def test_transition_outcome_buckets():

@@ -21,7 +21,7 @@ ACTUAL_PATH = os.path.join(GOLDEN_DIR, "telemetry_schema.actual.json")
 
 
 def compute_schema():
-    from repro.launch.telemetry_report import GOODPUT_KEYS
+    from repro.launch.telemetry_report import GOODPUT_KEYS, SYNC_SPAN_KEYS
     from repro.telemetry import EVENT_KEYS, EVENT_KINDS
 
     bench_path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
@@ -33,6 +33,7 @@ def compute_schema():
         "event_kinds": sorted(EVENT_KINDS),
         "event_keys": {k: sorted(v) for k, v in EVENT_KEYS.items()},
         "goodput_keys": sorted(GOODPUT_KEYS),
+        "train_sync_keys": sorted(SYNC_SPAN_KEYS),
         "bench_telemetry_run_keys": sorted(bench.TELEMETRY_KEYS),
     }
 
