@@ -109,11 +109,20 @@ class GreedyAllocator:
 
         counts0 = [np.asarray(h.failed, dtype=int).copy()
                    for h in health.stages]
-        base_goodput = gm.goodput(counts0)
+        # degradation ledgers ride along with their PHYSICAL domain: a swap
+        # moves a site's straggle/link/sdc state together with its failed
+        # count, and a spare stand-in clears both (the spare is pristine)
+        degs0 = None
+        if any(h.degraded is not None for h in health.stages):
+            degs0 = [list(h.degraded) if h.degraded is not None
+                     else [None] * len(h.failed) for h in health.stages]
+        base_goodput = gm.goodput(counts0, degs0)
         baseline = self._try_pack(counts0, n1)
 
         work = [c.copy() for c in counts0]
-        g_cur = gm.goodput(work)
+        work_degs = (None if degs0 is None
+                     else [list(d) for d in degs0])
+        g_cur = gm.goodput(work, work_degs)
         price_cur = self._price_bytes(current, work, n1)
         pool = spares
         spare_sites: List[Tuple[int, int, int]] = []
@@ -127,10 +136,10 @@ class GreedyAllocator:
         for _ in range(max_rounds):
             best = None
             n_dead = int((gm.effective_tp(work) <= 0).sum())
-            for cand in self._candidates(work, pool):
+            for cand in self._candidates(work, pool, work_degs):
                 considered += 1
-                w2 = self._apply_move(work, cand)
-                g2 = gm.goodput(w2)
+                w2, deg2 = self._apply_move(work, cand, work_degs)
+                g2 = gm.goodput(w2, deg2)
                 dg = g2 - g_cur
                 dead_fixed = n_dead - int((gm.effective_tp(w2) <= 0).sum())
                 price2 = self._price_bytes(current, w2, n1)
@@ -155,11 +164,12 @@ class GreedyAllocator:
                        tuple(-x for x in cand[1]),
                        tuple(-x for x in (cand[2] or (0, 0))))
                 if best is None or key > best[0]:
-                    best = (key, cand, w2, g2, price2, marg, cost_s, gain_s,
-                            rescue)
+                    best = (key, cand, w2, deg2, g2, price2, marg, cost_s,
+                            gain_s, rescue)
             if best is None:
                 break
-            _, cand, w2, g2, price2, marg, cost_s, gain_s, rescue = best
+            (_, cand, w2, deg2, g2, price2, marg, cost_s, gain_s,
+             rescue) = best
             kind, site, other = cand
             if kind == "spare":
                 absorbed = int(work[site[0]][site[1]])
@@ -177,7 +187,7 @@ class GreedyAllocator:
                     rescue=rescue, site=site, other=other,
                     note=f"swap stage {site[0]} domain {site[1]} with "
                          f"stage {other[0]} domain {other[1]}"))
-            work, g_cur, price_cur = w2, g2, price2
+            work, work_degs, g_cur, price_cur = w2, deg2, g2, price2
 
         final = self._pack(work, n1)   # DeadReplicaError if still dead
         actions.extend(self._transition_actions(current, final, work))
@@ -210,15 +220,24 @@ class GreedyAllocator:
     # ------------------------------------------------------------ internals
 
     @staticmethod
-    def _candidates(work, pool):
-        """Deterministic candidate moves for one round: every failed site as
-        a spare target (pool permitting), and for each ordered stage pair
-        the worst site of one against the best site of the other."""
+    def _candidates(work, pool, degs=None):
+        """Deterministic candidate moves for one round: every failed OR
+        degraded site as a spare target (pool permitting), for each ordered
+        stage pair the worst site of one against the best site of the other,
+        and each degraded site against the most/least-failed site of every
+        other stage (pairing a straggler with an already-slow replica or
+        isolating it — `GoodputModel.goodput` decides which pays)."""
         pp = len(work)
+
+        def degraded(s, d):
+            return (degs is not None and degs[s][d] is not None
+                    and not degs[s][d].clear)
+
         if pool > 0:
             for s in range(pp):
-                for dom in np.flatnonzero(work[s] > 0):
-                    yield ("spare", (s, int(dom)), None)
+                for dom in range(len(work[s])):
+                    if work[s][dom] > 0 or degraded(s, dom):
+                        yield ("spare", (s, dom), None)
         for s1 in range(pp):
             if not work[s1].any():
                 continue
@@ -229,17 +248,35 @@ class GreedyAllocator:
                 j = int(np.argmin(work[s2]))
                 if work[s1][i] > work[s2][j]:
                     yield ("swap", (s1, i), (s2, j))
+        if degs is None:
+            return
+        for s1 in range(pp):
+            for dom in range(len(work[s1])):
+                if not degraded(s1, dom):
+                    continue
+                for s2 in range(pp):
+                    if s2 == s1:
+                        continue
+                    for j in (int(np.argmax(work[s2])),
+                              int(np.argmin(work[s2]))):
+                        yield ("swap", (s1, dom), (s2, j))
 
     @staticmethod
-    def _apply_move(work, cand):
+    def _apply_move(work, cand, degs=None):
         kind, site, other = cand
         w2 = [c.copy() for c in work]
+        d2 = None if degs is None else [list(d) for d in degs]
         if kind == "spare":
             w2[site[0]][site[1]] = 0
+            if d2 is not None:
+                d2[site[0]][site[1]] = None   # the stand-in is pristine
         else:
             a, b = w2[site[0]][site[1]], w2[other[0]][other[1]]
             w2[site[0]][site[1]], w2[other[0]][other[1]] = b, a
-        return w2
+            if d2 is not None:
+                da, db = d2[site[0]][site[1]], d2[other[0]][other[1]]
+                d2[site[0]][site[1]], d2[other[0]][other[1]] = db, da
+        return w2, d2
 
     @staticmethod
     def _pack(work, n1) -> StagedPlan:

@@ -61,13 +61,56 @@ class GoodputModel:
         ])
         return self.n1 - packed.max(axis=0)
 
-    def goodput(self, counts: Sequence[np.ndarray]) -> float:
-        """Mean relative replica throughput of the layout (0..1)."""
+    def replica_degradations(self, counts: Sequence[np.ndarray],
+                             degradations=None):
+        """Per-replica merged `DomainDegradation` of a candidate layout, or
+        None when every site is clear (the binary fast path).
+
+        Each stage's ledger follows the SAME most-failed-first packing order
+        `effective_tp` prices (stable descending argsort — deterministic on
+        ties), and 1F1B merges across stages: a replica inherits the worst
+        straggle / weakest link of every domain it spans."""
+        if degradations is None or all(d is None for d in degradations):
+            return None
+        from repro.runtime.events import DomainDegradation
+
+        merged = [DomainDegradation() for _ in counts[0]]
+        clear = True
+        for c, degs in zip(counts, degradations):
+            if degs is None:
+                continue
+            order = np.argsort(-np.asarray(c, dtype=int), kind="stable")
+            for r, dom in enumerate(order):
+                dg = degs[int(dom)]
+                if dg is not None and not dg.clear:
+                    merged[r] = merged[r].merge(dg)
+                    clear = False
+        return None if clear else tuple(merged)
+
+    def goodput(self, counts: Sequence[np.ndarray],
+                degradations=None) -> float:
+        """Mean relative replica throughput of the layout (0..1).
+
+        ``degradations`` (per-stage sequences of Optional `DomainDegradation`
+        aligned with ``counts``) weights each replica by its ledger: a
+        straggling domain drags its replica through `replica_throughput`'s
+        slow_factor, a weak link through bw_frac, and an un-cleared SDC
+        suspicion prices the replica at 0 — quarantined until the clear, so
+        sparing out a suspect domain scores as a full-replica rescue."""
         tps = self.effective_tp(counts)
+        degs = self.replica_degradations(counts, degradations)
+        if degs is None:
+            return float(np.mean([
+                replica_throughput(int(t), self.n1, self.geom, self.method,
+                                   self.power)
+                for t in tps
+            ]))
         return float(np.mean([
+            0.0 if dg.sdc > 0 else
             replica_throughput(int(t), self.n1, self.geom, self.method,
-                               self.power)
-            for t in tps
+                               self.power, slow_factor=dg.slow_factor,
+                               bw_frac=dg.bw_frac)
+            for t, dg in zip(tps, degs)
         ]))
 
     def gain_seconds(self, delta_goodput: float, horizon_steps: int) -> float:

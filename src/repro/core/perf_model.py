@@ -57,6 +57,8 @@ def iteration_time(
     dp_overlap: float = 0.7,
     tp_overlap: float = 0.3,
     reshard_overlap: Optional[float] = None,
+    slow_factor: float = 1.0,
+    link_bw_frac: float = 1.0,
 ) -> Dict[str, float]:
     """Per-iteration time breakdown for ONE DP replica (seconds).
 
@@ -67,7 +69,16 @@ def iteration_time(
     reshard hidden); an explicit fraction exposes ``(1 - reshard_overlap)``
     of it — `overlap_iteration_time` passes 0.0 to start from a fully
     exposed sync before applying its own overlap window.
+    slow_factor: health-state taxonomy (DESIGN.md §2.11) — a straggling
+    domain gates its whole TP group, priced the way the bubble is: an
+    additive ``straggler_exposed = (compute + tp_exposed) · (slow − 1)``
+    term on the busy time. link_bw_frac scales the scale-up bandwidth every
+    intra-domain collective (TP, reshard) sees.
     """
+    assert slow_factor >= 1.0, slow_factor
+    assert 0.0 < link_bw_frac <= 1.0, link_bw_frac
+    # ``* 1.0`` is bit-exact: the healthy path's floats are unchanged
+    hw = replace(hw, scaleup_bw=hw.scaleup_bw * link_bw_frac)
     tp_eff = tp_reduced or par.tp
     tokens_per_replica = wl.minibatch_tokens / par.dp * local_batch_scale
     seqs = max(tokens_per_replica / wl.seq_len, 1e-9)
@@ -108,7 +119,16 @@ def iteration_time(
         else:
             t_reshard_exposed = (1.0 - reshard_overlap) * t_reshard
 
-    total = t_comp + t_tp_exposed + t_pp + t_dp_exposed + t_reshard_exposed
+    # ---- straggler gate (taxonomy §2.11): priced like the bubble — an
+    # additive multiplier on the busy time (the slow domain stretches every
+    # microbatch's compute and collectives; 0.0 exactly when healthy)
+    t_straggle = (
+        (t_comp + t_tp_exposed) * (slow_factor - 1.0)
+        if slow_factor != 1.0 else 0.0
+    )
+
+    total = (t_comp + t_tp_exposed + t_pp + t_dp_exposed + t_reshard_exposed
+             + t_straggle)
     return {
         "total": total,
         "compute": t_comp,
@@ -116,6 +136,7 @@ def iteration_time(
         "pp_bubble": t_pp,
         "dp_exposed": t_dp_exposed,
         "reshard_exposed": t_reshard_exposed,
+        "straggler_exposed": t_straggle,
         "microbatches": m,
         "per_gpu_tput": tokens_per_replica / total / tp_eff / par.pp,
     }
@@ -193,7 +214,8 @@ def overlap_iteration_time(
         base["compute"] + base["tp_exposed"] + base["pp_bubble"]
     )
     exposed = exposed_comm(sync, window)
-    total = base["compute"] + base["tp_exposed"] + base["pp_bubble"] + exposed
+    total = (base["compute"] + base["tp_exposed"] + base["pp_bubble"]
+             + base["straggler_exposed"] + exposed)
     tokens_per_replica = (
         wl.minibatch_tokens / par.dp * kw.get("local_batch_scale", 1.0)
     )

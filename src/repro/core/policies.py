@@ -22,19 +22,45 @@ class WorkloadGeometry:
     n_heads: int = 128
     local_batch: int = 8
     mlp_flops_share: float = 2 / 3   # d_ff = 4d ⇒ MLP ≈ 2/3 of layer FLOPs
+    tp_comm_share: float = 0.15      # exposed TP-collective share of an iter
 
 
-def stage_slowdown(tp_red: int, tp_full: int, geom: WorkloadGeometry) -> float:
+def degradation_slowdown(slow_factor: float, bw_frac: float,
+                         geom: WorkloadGeometry) -> float:
+    """Iteration-time multiplier of a PARTIALLY-degraded domain at full TP
+    (DESIGN.md §2.11): a straggler slows the compute share ``slow_factor``×
+    (the slowest GPU gates the whole TP group), a degraded link scales the
+    exposed TP-collective share by 1/bw_frac. Exactly 1.0 when healthy —
+    the binary path never pays a float blend."""
+    if slow_factor == 1.0 and bw_frac == 1.0:
+        return 1.0
+    return float(
+        (1.0 - geom.tp_comm_share) * slow_factor
+        + geom.tp_comm_share / bw_frac
+    )
+
+
+def stage_slowdown(tp_red: int, tp_full: int, geom: WorkloadGeometry, *,
+                   slow_factor: float = 1.0, bw_frac: float = 1.0) -> float:
     """Iteration-time multiplier of a TP-reduced stage at equal batch.
     MLP work redistributes evenly (128-row units, k ≫ tp — §3.1: "the
     imbalance is typically very small"); attention is quantized at head
     granularity ("Attention usually has O(10) heads creating potential for
-    substantially more imbalance"). Blend by FLOP share."""
+    substantially more imbalance"). Blend by FLOP share.
+
+    ``slow_factor``/``bw_frac`` fold the domain's degradation ledger in
+    (`degradation_slowdown`): a straggling or link-degraded stage is priced
+    as its TP slowdown × its degradation multiplier — the health-state
+    taxonomy rides the same NTP degrade math as GPU absence."""
     if tp_red <= 0:
         return np.inf
     even = tp_full / tp_red
     heads = np.ceil(geom.n_heads / tp_red) / (geom.n_heads / tp_full)
-    return float(geom.mlp_flops_share * even + (1 - geom.mlp_flops_share) * heads)
+    base = float(
+        geom.mlp_flops_share * even + (1 - geom.mlp_flops_share) * heads
+    )
+    dm = degradation_slowdown(slow_factor, bw_frac, geom)
+    return base if dm == 1.0 else base * dm
 
 
 def staged_rel_iter_times(
@@ -46,6 +72,8 @@ def staged_rel_iter_times(
     local_batch: int,
     boosts=None,
     power: PowerModel = PowerModel(),
+    slow_factors=None,
+    bw_fracs=None,
 ):
     """Per-STAGE predicted relative iteration time of a DP×PP×TP job
     (DESIGN.md §2.6): ``stage_tp[d][s]`` is replica d's surviving TP in
@@ -58,20 +86,34 @@ def staged_rel_iter_times(
     relative iteration time is ``max_s rel_s`` — the slowest stage gates the
     pipeline, exactly `perf_model.staged_iteration_time`'s reduction — and
     equals `PowerDecision.rel_iter_time` computed on the plan's effective
-    (min-over-stages) TP."""
+    (min-over-stages) TP.
+
+    ``slow_factors``/``bw_fracs`` are per-REPLICA degradation factors
+    (`StagedHealth.replica_degradations`, already merged across stages —
+    1F1B runs every microbatch through every stage, so a straggler anywhere
+    gates the replica in every stage)."""
     d_axis = len(stage_tp)
     pp = len(stage_tp[0])
     if boosts is None:
         boosts = (1.0,) * d_axis
+    if slow_factors is None:
+        slow_factors = (1.0,) * d_axis
+    if bw_fracs is None:
+        bw_fracs = (1.0,) * d_axis
     rels = []
     for s in range(pp):
         r_s = 0.0
         for d in range(d_axis):
             tp = stage_tp[d][s]
-            if tp == tp_full:
+            degraded = slow_factors[d] != 1.0 or bw_fracs[d] != 1.0
+            if tp == tp_full and not degraded:
                 eff = 1.0
             else:
-                eff = stage_slowdown(tp, tp_full, geom) / power.speedup(boosts[d])
+                slow = stage_slowdown(
+                    tp, tp_full, geom,
+                    slow_factor=slow_factors[d], bw_frac=bw_fracs[d],
+                )
+                eff = slow / power.speedup(boosts[d])
             r_s = max(r_s, eff * local_batches[d] / local_batch)
         rels.append(float(r_s))
     return tuple(rels)
@@ -92,16 +134,22 @@ def replica_throughput(
     geom: WorkloadGeometry,
     method: str,
     power: PowerModel,
+    *,
+    slow_factor: float = 1.0,
+    bw_frac: float = 1.0,
 ) -> float:
     """Relative samples/iteration of one DP replica whose weakest stage runs
     at tp_red (1.0 = healthy). NTP: shrink local batch to not straggle.
     NTP-PW: boost power to keep full batch; fall back to batch shrink past
-    the boost cap."""
+    the boost cap. ``slow_factor``/``bw_frac`` price the replica's
+    degradation ledger (DESIGN.md §2.11) on top of its TP reduction — a
+    straggling full-TP replica is degraded too."""
     if tp_red <= 0:
         return 0.0
-    if tp_red == tp_full:
+    if tp_red == tp_full and slow_factor == 1.0 and bw_frac == 1.0:
         return 1.0
-    slow = stage_slowdown(tp_red, tp_full, geom)
+    slow = stage_slowdown(tp_red, tp_full, geom,
+                          slow_factor=slow_factor, bw_frac=bw_frac)
     if method == "ntp":
         bs = int(np.floor(geom.local_batch / slow))
         return bs / geom.local_batch

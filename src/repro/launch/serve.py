@@ -51,6 +51,15 @@ def main() -> None:
                          "default cluster: hardware repairs take 72-120 "
                          "ticks, so much hotter rates drown the replica)")
     ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--trace-mix", default=None, metavar="KIND=RATE[,...]",
+                    help="mix degradation kinds into the sampled trace: "
+                         "comma list of straggler=R, link=R, sdc=R onset "
+                         "rates as multiples of the binary failure rate "
+                         "(e.g. straggler=0.5,sdc=0.1); needs --trace")
+    ap.add_argument("--quarantine", choices=["on", "off"], default="on",
+                    help="SDC policy (default on): drain the suspect "
+                         "replica (in-flight requests finish, no new "
+                         "admits) until the clear; off = reprice only")
     ap.add_argument("--ticks-per-hour", type=float, default=1.0,
                     help="serving wall ticks per simulated trace hour")
     ap.add_argument("--max-ticks", type=int, default=5000)
@@ -68,6 +77,20 @@ def main() -> None:
                          "JSONL; fold it offline with python -m "
                          "repro.launch.telemetry_report OUT.jsonl")
     args = ap.parse_args()
+    trace_mix_kwargs = {}
+    if args.trace_mix is not None:
+        if args.trace is None:
+            ap.error("--trace-mix needs --trace (the mix rates scale the "
+                     "same sampled trace)")
+        from repro.core.failure_model import parse_trace_mix
+
+        try:
+            trace_mix_kwargs = parse_trace_mix(args.trace_mix)
+        except ValueError as e:
+            ap.error(f"--trace-mix: {e}")
+    if args.quarantine == "off" and args.trace is None:
+        ap.error("--quarantine shapes the trace-driven SDC response; it "
+                 "needs --trace")
     if args.pallas_compile:
         import os
 
@@ -82,7 +105,7 @@ def main() -> None:
 
     from repro.configs import get_arch, reduced
     from repro.core.failure_model import FailureTraceConfig
-    from repro.runtime import RecoveryEvent, schedule_from_trace
+    from repro.runtime import event_kind, schedule_from_trace
     from repro.serve import Request, Router, ServeSession
 
     cfg = get_arch(args.arch)
@@ -93,7 +116,7 @@ def main() -> None:
         cfg, replicas=args.replicas, n1=args.tp, slots=args.slots,
         max_len=args.max_len, prefill_len=args.prefill_len,
         policy=args.policy, key=jax.random.PRNGKey(args.seed),
-        use_kernel=args.use_kernel,
+        use_kernel=args.use_kernel, quarantine=args.quarantine == "on",
     )
     router = Router(session)
     n_par = sum(p.size for p in jax.tree.leaves(session.params))
@@ -107,14 +130,16 @@ def main() -> None:
             n_gpus=args.replicas * args.tp, domain_size=args.tp,
             days=args.max_ticks / args.ticks_per_hour / 24.0,
             rate_multiplier=args.trace, seed=args.trace_seed,
+            **trace_mix_kwargs,
         )
         schedule = schedule_from_trace(
             trace_cfg, steps=args.max_ticks, steps_per_hour=args.ticks_per_hour
         )
-        n_fail = sum(1 for s in schedule
-                     if not isinstance(s.event, RecoveryEvent))
-        print(f"trace: {len(schedule)} events ({n_fail} failures, "
-              f"{len(schedule) - n_fail} repairs)")
+        from collections import Counter
+
+        kinds = Counter(event_kind(s.event) for s in schedule)
+        print(f"trace: {len(schedule)} events "
+              f"({', '.join(f'{k}={n}' for k, n in sorted(kinds.items()))})")
 
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(
@@ -137,9 +162,8 @@ def main() -> None:
     while tick < args.max_ticks:
         while schedule and schedule[0].step <= tick:
             ev = schedule.pop(0).event
-            kind = "repair " if isinstance(ev, RecoveryEvent) else "failure"
             router.apply(ev)
-            print(f"*** tick {tick}: {kind} domain {ev.domain} -> "
+            print(f"*** tick {tick}: {event_kind(ev)} domain {ev.domain} -> "
                   f"tp {session.replica_tp} "
                   f"speeds {[round(e.rel_speed, 3) for e in session.engines]}")
         while next_req < len(reqs) and arrivals[next_req] <= tick:

@@ -17,6 +17,12 @@ recorded events; nothing is re-simulated:
 * **sync table** — per overlap mode (`on`/`off`), collective-launch counts
   and total/exposed sync seconds from the `train.sync` spans that
   `NTPSession.measure_sync` records (DESIGN.md §2.10);
+* **lifecycle-event table** — per-kind event totals (§2.11 taxonomy:
+  failure/repair plus straggler/link/sdc onsets and clears) from the
+  `orchestrator.events` counter, with SDC rollback executions from the
+  transition spans; the goodput rows carry the matching
+  ``degradation_loss`` slice (goodput lost to the degradation ledger
+  beyond GPU absence);
 * **transition table** — per-kind counts and byte totals from the
   transition spans' attached `TransferStats`;
 * **serve table** — TTFT/TPOT percentile summaries + admission/preemption
@@ -43,7 +49,8 @@ from repro.telemetry import load_jsonl, summarize_hist, write_chrome_trace
 # golden in tests/golden/telemetry_schema.json)
 GOODPUT_KEYS = (
     "steps", "goodput", "goodput_unboosted", "boost_recovered",
-    "compute_frac", "bubble_frac", "reshard_frac", "exposed_comm_frac",
+    "degradation_loss", "compute_frac", "bubble_frac", "reshard_frac",
+    "exposed_comm_frac",
 )
 
 # the per-overlap-mode sync row schema (train.sync spans, DESIGN.md §2.10)
@@ -117,16 +124,43 @@ def goodput_table(events: List[Dict]) -> Dict[str, Dict]:
         ef = min(exposed_frac, 1.0 - reshard_frac - bubble_frac)
         goodput = float(np.mean(g)) if g else 1.0
         goodput_u = float(np.mean(gu)) if gu else goodput
+        # degradation-attributed loss (§2.11): per-step goodput the ledger
+        # cost beyond binary TP reductions — straggle/link repricing and
+        # quarantined replicas. Old streams carry no such gauges and fold
+        # to 0.0 (no degradation observed).
+        dl = [e["value"] for e in
+              _series(events, "gauge", "train.goodput_degradation_loss",
+                      {"policy": pol})]
         out[pol] = {
             "steps": len(g),
             "goodput": goodput,
             "goodput_unboosted": goodput_u,
             "boost_recovered": goodput - goodput_u,
+            "degradation_loss": float(np.mean(dl)) if dl else 0.0,
             "compute_frac": 1.0 - reshard_frac - bubble_frac - ef,
             "bubble_frac": bubble_frac,
             "reshard_frac": reshard_frac,
             "exposed_comm_frac": ef,
         }
+    return out
+
+
+def events_table(events: List[Dict]) -> Dict[str, int]:
+    """Per-kind lifecycle event totals from the orchestrator's
+    ``orchestrator.events`` counter — the §2.11 taxonomy (failure/repair
+    plus straggler/link/sdc onsets and clears), with SDC rollback
+    executions folded in from the ``session.transition`` spans' rollback
+    attr. Binary-era streams fold to failure/repair rows only."""
+    out: Dict[str, int] = {}
+    for e in _series(events, "counter", "orchestrator.events"):
+        kind = e["labels"].get("kind", "?")
+        out[kind] = out.get(kind, 0) + int(e["value"])
+    rollbacks = sum(
+        1 for e in _series(events, "span", "session.transition")
+        if e["attrs"].get("rollback") is True
+    )
+    if rollbacks:
+        out["sdc_rollback"] = rollbacks
     return out
 
 
@@ -211,6 +245,9 @@ def report(events: List[Dict]) -> Dict:
     gp = goodput_table(events)
     if gp:
         doc["goodput"] = gp
+    le = events_table(events)
+    if le:
+        doc["lifecycle_events"] = le
     tr = transition_table(events)
     if tr:
         doc["transitions"] = tr
@@ -237,6 +274,10 @@ def _print_report(doc: Dict) -> None:
                 else f"{row[k]:18.4f}" for k in GOODPUT_KEYS
             )
             print(f"{pol:10s}{cells}")
+    if "lifecycle_events" in doc:
+        print("\nlifecycle events:")
+        for kind, n in sorted(doc["lifecycle_events"].items()):
+            print(f"  {kind:18s} {n:6d}")
     if "transitions" in doc:
         print("\ntransitions:")
         for k, row in sorted(doc["transitions"].items()):

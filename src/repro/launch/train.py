@@ -56,6 +56,15 @@ def main() -> None:
                          "see events in a short run)")
     ap.add_argument("--trace-seed", type=int, default=0,
                     help="trace sampler seed (default 0)")
+    ap.add_argument("--trace-mix", default=None, metavar="KIND=RATE[,...]",
+                    help="mix degradation kinds into the sampled trace: "
+                         "comma list of straggler=R, link=R, sdc=R onset "
+                         "rates as multiples of the binary failure rate "
+                         "(e.g. straggler=0.5,sdc=0.1); needs --trace")
+    ap.add_argument("--quarantine", choices=["on", "off"], default="on",
+                    help="SDC policy (default on): quarantine the suspect "
+                         "replica and roll back to the canonical snapshot; "
+                         "off = ledger the suspicion and keep training")
     ap.add_argument("--steps-per-hour", type=float, default=1.0,
                     help="training steps per simulated trace hour")
     ap.add_argument("--power-policy", choices=["ntp", "ntp_pw"], default=None,
@@ -113,6 +122,20 @@ def main() -> None:
                  "is NTP-backend-only)")
     if args.trace is not None and args.fail_at is not None:
         ap.error("--trace and --fail-at are mutually exclusive")
+    args.trace_mix_kwargs = {}
+    if args.trace_mix is not None:
+        if args.trace is None:
+            ap.error("--trace-mix needs --trace (the mix rates scale the "
+                     "same sampled trace)")
+        from repro.core.failure_model import parse_trace_mix
+
+        try:
+            args.trace_mix_kwargs = parse_trace_mix(args.trace_mix)
+        except ValueError as e:
+            ap.error(f"--trace-mix: {e}")
+    if args.quarantine == "off" and not args.ntp:
+        ap.error("--quarantine is the NTP SDC rollback policy; it needs "
+                 "--ntp")
     if args.pp != 1 or args.microbatches != 1:
         if not args.ntp:
             ap.error("--pp/--microbatches need --ntp (stage-partitioned "
@@ -253,7 +276,7 @@ def _run_ntp(args) -> None:
         power_policy=power_policy(policy_name) if policy_name else None,
         pp=args.pp, microbatches=args.microbatches,
         spares=args.spares, allocator=allocator,
-        overlap=args.overlap,
+        overlap=args.overlap, quarantine=args.quarantine == "on",
     )
     n_par = sum(p.size for p in jax.tree.leaves(session.canonical_params()))
     print(f"ntp prototype: {n_par/1e6:.1f}M params  mesh data=2 model={n1}  "
@@ -309,7 +332,7 @@ def _run_ntp_trace(args, session, pipe) -> None:
     import jax.numpy as jnp
 
     from repro.core.failure_model import FailureTraceConfig
-    from repro.runtime import RecoveryEvent, TraceRunner, schedule_from_trace
+    from repro.runtime import TraceRunner, event_kind, schedule_from_trace
 
     d, n1 = session.plan.d, session.plan.n1
     pp = session.pp
@@ -317,19 +340,22 @@ def _run_ntp_trace(args, session, pipe) -> None:
         n_gpus=d * pp * n1, domain_size=n1,
         days=args.steps / args.steps_per_hour / 24.0,
         rate_multiplier=args.trace, seed=args.trace_seed,
+        **args.trace_mix_kwargs,
     )
     schedule = schedule_from_trace(
         trace_cfg, steps=args.steps, steps_per_hour=args.steps_per_hour,
         pp=pp,
     )
-    n_fail = sum(1 for s in schedule if not isinstance(s.event, RecoveryEvent))
-    print(f"trace: {len(schedule)} events ({n_fail} failures, "
-          f"{len(schedule) - n_fail} repairs) over {args.steps} steps")
+    from collections import Counter
+
+    kinds = Counter(event_kind(s.event) for s in schedule)
+    print(f"trace: {len(schedule)} events over {args.steps} steps "
+          f"({', '.join(f'{k}={n}' for k, n in sorted(kinds.items()))})")
 
     t0 = time.time()
 
     def on_event(ev, plan):
-        kind = "repair " if isinstance(ev, RecoveryEvent) else "failure"
+        kind = event_kind(ev)
         site = (f"stage {ev.stage} domain {ev.domain}"
                 if ev.stage is not None else f"domain {ev.domain}")
         print(f"*** step {ev.step}: {kind} {site} -> plan {plan}  "
@@ -353,7 +379,10 @@ def _run_ntp_trace(args, session, pipe) -> None:
               f"gnorm {h['grad_norm']:.3f}  tp {h['replica_tp']}{extra}  "
               f"({time.time() - t0:.1f}s)", flush=True)
     s = runner.summary()
-    print(f"lifecycle: {s['failures']} failures, {s['repairs']} repairs, "
+    by_kind = ", ".join(f"{k}={v}" for k, v in sorted(
+        s["events_by_kind"].items()))
+    roll = f", rollbacks {s['rollbacks']}" if s.get("rollbacks") else ""
+    print(f"lifecycle: {by_kind or 'no events'}{roll}, "
           f"goodput {s['goodput']:.3f}, final plan {s['final_plan']}")
     if args.ckpt:
         session.save(args.ckpt)

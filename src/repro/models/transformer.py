@@ -187,9 +187,10 @@ def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype
         c = rglru_mod.init_rglru_cache(cfg, batch, dtype)
     else:
         raise ValueError(kind)
-    if cfg.encoder is not None and kind in ATTN_KINDS:
-        # enc-dec attention blocks cross-attend: bank their encoder K/V
-        # (recurrent kinds carry no cross module — nothing to bank)
+    if cfg.encoder is not None:
+        # EVERY enc-dec decoder block cross-attends (attention, SSD and
+        # rgLRU alike — block_init gives them all a cross module): bank the
+        # encoder K/V next to the mixer's own state
         c = dict(c, **attn_mod.init_cross_kv_cache(cfg, batch, dtype))
     return c
 

@@ -93,10 +93,11 @@ def _kind_state_specs(cfg: ArchConfig, kind: str) -> Dict[str, UnitSpec]:
         }
     else:
         raise ValueError(f"no state units for block kind {kind!r}")
-    if cfg.encoder is not None and kind in ATTN_KINDS:
-        # enc-dec: attention decoder blocks also bank the encoder K/V at
-        # prefill (ek/ev, (..., Tenc, kvh, hd)) — its heads reshard exactly
-        # like self-attention KV heads, as their own unit family
+    if cfg.encoder is not None:
+        # enc-dec: EVERY decoder block (attention, SSD, rgLRU) banks the
+        # encoder K/V at prefill (ek/ev, (..., Tenc, kvh, hd)) — its heads
+        # reshard exactly like self-attention KV heads, as their own unit
+        # family
         ekv = UnitSpec("enc_kv_head", cfg.n_kv_heads, axis=-2)
         specs = dict(specs, ek=ekv, ev=ekv)
     return specs

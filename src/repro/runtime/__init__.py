@@ -4,9 +4,12 @@ the trace-driven lifecycle orchestrator (DESIGN.md §2.4)."""
 from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged  # noqa: F401
 from repro.core.ntp_train import Mode, NTPModelConfig  # noqa: F401
 from repro.runtime.events import (  # noqa: F401
-    ClusterHealth, DeadReplicaError, FailureEvent, LifecycleEvent,
-    RecoveryEvent, StagedHealth, plan_from_health, resolve_serving_domain,
-    staged_plan_from_health,
+    CLEAR_DEGRADATION, DEGRADATION_EVENTS, EVENT_KIND_NAMES, ClusterHealth,
+    DeadReplicaError, DomainDegradation, FailureEvent, HealthEvent,
+    HealthState, LifecycleEvent, LinkDegradeEvent, LinkRepairEvent,
+    RecoveryEvent, SdcClearEvent, SdcSuspectEvent, StagedHealth,
+    StragglerClearEvent, StragglerEvent, event_kind, inverse,
+    plan_from_health, resolve_serving_domain, staged_plan_from_health,
 )
 from repro.runtime.orchestrator import (  # noqa: F401
     PowerDecision, PowerPolicy, ScheduledEvent, TraceRunner, power_policy,

@@ -1,6 +1,6 @@
-"""Typed failure/recovery events and cluster health, and the bridge from the
-resource manager's packing (`ReplicaAssignment`) into the nonuniform-TP
-`FailurePlan` (DESIGN.md §2.1).
+"""Typed health events and cluster health, and the bridge from the resource
+manager's packing (`ReplicaAssignment`) into the nonuniform-TP `FailurePlan`
+(DESIGN.md §2.1, §2.11).
 
 The paper's restart flow (§3.3): a GPU fails somewhere in a scale-up domain;
 on restart the resource manager packs partially-failed domains into the
@@ -10,11 +10,29 @@ TP. Here that flow is data: a `FailureEvent` updates `ClusterHealth`, and
 step builder and reshard tables consume. `RecoveryEvent` is the inverse — a
 repaired GPU lowers a domain's failed count and the next packing raises the
 affected replica's TP back toward full (DESIGN.md §2.4 lifecycle).
+
+Production fleets fail *partially* long before they fail outright (ByteDance
+infra paper, PAPERS.md), so the ledger is a health-STATE machine, not a
+binary fail/repair counter (DESIGN.md §2.11): each domain carries a
+`DomainDegradation` — a multiset of straggler slow factors, a multiset of
+link bandwidth fractions, and an SDC-suspicion counter — updated by the
+degradation half of the `HealthEvent` taxonomy (`StragglerEvent`,
+`LinkDegradeEvent`, `SdcSuspectEvent` and their per-kind inverses via
+`inverse()`). Multiset semantics make every inverse EXACT: a clear event
+removes one occurrence of the value its degrade event pushed (effective slow
+factor = max of the multiset, effective bandwidth = min), so float-valued
+severities round-trip bit-identically without dividing floats. Degradation
+is orthogonal to packing — failed counts alone drive `pack_replicas`; the
+policies (PowerPolicy / GoodputModel / serve retarget) consume the per-
+replica degradation view. A health with no degradations normalizes its
+``degraded`` field back to ``None`` so binary fail/repair traces replay
+bit-identically through the refactored core.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import List, Optional, Tuple, Union
+import enum
+from dataclasses import dataclass, fields, replace
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -22,6 +40,24 @@ from repro.core.nonuniform import FailurePlan, StagedPlan
 from repro.core.resource_manager import (
     ReplicaAssignment, apply_spares, pack_replicas,
 )
+
+
+class HealthState(enum.Enum):
+    """Dominant health label of one scale-up domain (DESIGN.md §2.11).
+
+    Per-GPU absence is tracked by the failed COUNT (a domain with some GPUs
+    down but survivors computing still labels by its dominant *degradation*,
+    or HEALTHY — reduced TP is the NTP normal, not a state of its own);
+    FAILED means the whole domain is gone. Priority when several conditions
+    coexist: FAILED > SDC_SUSPECT > STRAGGLER > LINK_DEGRADED > HEALTHY —
+    the order in which the policies act on them (quarantine beats slowdown
+    pricing beats comm repricing)."""
+
+    HEALTHY = "healthy"
+    FAILED = "failed"
+    STRAGGLER = "straggler"
+    LINK_DEGRADED = "link_degraded"
+    SDC_SUSPECT = "sdc_suspect"
 
 
 class DeadReplicaError(RuntimeError):
@@ -75,21 +111,242 @@ class RecoveryEvent(_ClusterEvent):
     repairs of a clamped trace."""
 
 
-LifecycleEvent = Union[FailureEvent, RecoveryEvent]
+@dataclass(frozen=True)
+class StragglerEvent(_ClusterEvent):
+    """The site's domain is DETECTED slow: its compute runs ``slowdown``×
+    slower than spec (thermal throttle, sick HBM, a crashed SM — ByteDance
+    taxonomy). The domain keeps its GPUs (no repack); the power policy
+    prices it like a TP reduction and the allocator may evict it."""
+
+    slowdown: float = 2.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not self.slowdown > 1.0:
+            raise ValueError(
+                f"slowdown must be > 1.0 (a {self.slowdown}× straggler is "
+                "not a straggler)"
+            )
+
+
+@dataclass(frozen=True)
+class StragglerClearEvent(_ClusterEvent):
+    """Inverse of `StragglerEvent`: removes ONE occurrence of ``slowdown``
+    from the site's straggle multiset (clearing a value that was never
+    pushed is absorbed, like surplus repairs)."""
+
+    slowdown: float = 2.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not self.slowdown > 1.0:
+            raise ValueError(f"slowdown must be > 1.0, got {self.slowdown}")
+
+
+@dataclass(frozen=True)
+class LinkDegradeEvent(_ClusterEvent):
+    """The site's scale-up interconnect is running at ``bw_frac`` of spec
+    (lane drop, flapping NVLink/NIC). Comm-bound work slows by 1/bw_frac;
+    the effective slow factor blends by the workload's comm share."""
+
+    bw_frac: float = 0.5
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 < self.bw_frac < 1.0:
+            raise ValueError(
+                f"bw_frac must be in (0, 1), got {self.bw_frac}"
+            )
+
+
+@dataclass(frozen=True)
+class LinkRepairEvent(_ClusterEvent):
+    """Inverse of `LinkDegradeEvent`: removes one ``bw_frac`` occurrence
+    from the site's link multiset (absorbing when absent)."""
+
+    bw_frac: float = 0.5
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 < self.bw_frac < 1.0:
+            raise ValueError(f"bw_frac must be in (0, 1), got {self.bw_frac}")
+
+
+@dataclass(frozen=True)
+class SdcSuspectEvent(_ClusterEvent):
+    """Silent-data-corruption suspicion raised against the site (mismatched
+    checksums, NaN watchdog, duplicate-compute divergence). Counts, does not
+    fail: the replica owning the domain is QUARANTINED (batch 0) and rolled
+    back to the canonical checkpoint by the session policy."""
+
+
+@dataclass(frozen=True)
+class SdcClearEvent(_ClusterEvent):
+    """Inverse of `SdcSuspectEvent`: one suspicion retracted (floor 0)."""
+
+
+#: The full taxonomy. `LifecycleEvent` remains as the historical alias —
+#: every consumer annotated against it accepts the whole state machine.
+HealthEvent = Union[
+    FailureEvent, RecoveryEvent,
+    StragglerEvent, StragglerClearEvent,
+    LinkDegradeEvent, LinkRepairEvent,
+    SdcSuspectEvent, SdcClearEvent,
+]
+LifecycleEvent = HealthEvent
+
+#: Events that touch the degradation ledger (not the failed counts).
+DEGRADATION_EVENTS = (
+    StragglerEvent, StragglerClearEvent, LinkDegradeEvent, LinkRepairEvent,
+    SdcSuspectEvent, SdcClearEvent,
+)
+
+_INVERSE_KIND = {
+    FailureEvent: RecoveryEvent, RecoveryEvent: FailureEvent,
+    StragglerEvent: StragglerClearEvent, StragglerClearEvent: StragglerEvent,
+    LinkDegradeEvent: LinkRepairEvent, LinkRepairEvent: LinkDegradeEvent,
+    SdcSuspectEvent: SdcClearEvent, SdcClearEvent: SdcSuspectEvent,
+}
+
+_EVENT_KIND = {
+    FailureEvent: "failure", RecoveryEvent: "repair",
+    StragglerEvent: "straggler", StragglerClearEvent: "straggler_clear",
+    LinkDegradeEvent: "link_degrade", LinkRepairEvent: "link_repair",
+    SdcSuspectEvent: "sdc_suspect", SdcClearEvent: "sdc_clear",
+}
+
+#: Canonical kind strings, degrade/clear pairs adjacent — the vocabulary
+#: telemetry counters and the trace sampler share.
+EVENT_KIND_NAMES = tuple(_EVENT_KIND.values())
+
+
+def event_kind(event: HealthEvent) -> str:
+    """Canonical kind string of ``event`` (telemetry/report vocabulary;
+    binary events keep their historical "failure"/"repair" names)."""
+    return _EVENT_KIND[type(event)]
+
+
+def inverse(event: HealthEvent) -> HealthEvent:
+    """The event that exactly undoes ``event`` at the same site: fail↔repair
+    (same ``n_gpus``), straggle↔clear and degrade↔repair (same severity
+    value — multiset semantics make the round trip exact), suspect↔clear.
+    ``apply(e) ∘ apply(inverse(e))`` is the identity on any health where
+    ``inverse(e)`` applies without saturating (the property suite's oracle).
+    """
+    cls = _INVERSE_KIND[type(event)]
+    return cls(**{f.name: getattr(event, f.name) for f in fields(event)})
+
+
+def _push(values: Tuple[float, ...], v: float) -> Tuple[float, ...]:
+    return tuple(sorted(values + (float(v),)))
+
+
+def _remove_one(values: Tuple[float, ...], v: float) -> Tuple[float, ...]:
+    """Remove ONE occurrence of ``v`` (bit-equal float — the clear event
+    carries the exact value its degrade pushed); absorb when absent."""
+    out = list(values)
+    try:
+        out.remove(float(v))
+    except ValueError:
+        pass
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class DomainDegradation:
+    """Partial-health ledger of ONE scale-up domain (DESIGN.md §2.11).
+
+    Multisets, not scalars: concurrent degradations stack (two independent
+    stragglers in one domain), and each clear removes exactly the value its
+    degrade event pushed — so per-kind inverses are exact for float-valued
+    severities. Effective factors are worst-of: ``slow_factor`` is the max
+    straggle (the slowest GPU gates the TP group), ``bw_frac`` the min link
+    fraction (the weakest lane gates the collective)."""
+
+    straggle: Tuple[float, ...] = ()   # sorted slow factors, each > 1
+    link: Tuple[float, ...] = ()       # sorted bandwidth fractions, each < 1
+    sdc: int = 0                       # outstanding corruption suspicions
+
+    def __post_init__(self):
+        assert self.straggle == tuple(sorted(self.straggle)), self.straggle
+        assert self.link == tuple(sorted(self.link)), self.link
+        assert all(s > 1.0 for s in self.straggle), self.straggle
+        assert all(0.0 < b < 1.0 for b in self.link), self.link
+        assert self.sdc >= 0, self.sdc
+
+    @property
+    def clear(self) -> bool:
+        return not self.straggle and not self.link and self.sdc == 0
+
+    @property
+    def slow_factor(self) -> float:
+        """Compute slowdown vs spec (1.0 = full speed)."""
+        return self.straggle[-1] if self.straggle else 1.0
+
+    @property
+    def bw_frac(self) -> float:
+        """Scale-up interconnect bandwidth vs spec (1.0 = full)."""
+        return self.link[0] if self.link else 1.0
+
+    def merge(self, other: "DomainDegradation") -> "DomainDegradation":
+        """Worst-of union — the degradation a REPLICA sees across the
+        domains (and stages) it is packed onto."""
+        return DomainDegradation(
+            straggle=tuple(sorted(self.straggle + other.straggle)),
+            link=tuple(sorted(self.link + other.link)),
+            sdc=self.sdc + other.sdc,
+        )
+
+    def apply(self, event: HealthEvent) -> "DomainDegradation":
+        if isinstance(event, StragglerEvent):
+            return replace(self, straggle=_push(self.straggle, event.slowdown))
+        if isinstance(event, StragglerClearEvent):
+            return replace(
+                self, straggle=_remove_one(self.straggle, event.slowdown)
+            )
+        if isinstance(event, LinkDegradeEvent):
+            return replace(self, link=_push(self.link, event.bw_frac))
+        if isinstance(event, LinkRepairEvent):
+            return replace(self, link=_remove_one(self.link, event.bw_frac))
+        if isinstance(event, SdcSuspectEvent):
+            return replace(self, sdc=self.sdc + 1)
+        if isinstance(event, SdcClearEvent):
+            return replace(self, sdc=max(0, self.sdc - 1))
+        raise TypeError(f"not a degradation event: {type(event).__name__}")
+
+
+#: The all-clear degradation (shared constant: `DomainDegradation` is frozen).
+CLEAR_DEGRADATION = DomainDegradation()
 
 
 @dataclass(frozen=True)
 class ClusterHealth:
-    """Failed-GPU counts per physical scale-up domain."""
+    """Failed-GPU counts per physical scale-up domain, plus the per-domain
+    degradation ledger of the health-state machine (DESIGN.md §2.11).
+
+    ``degraded`` is ``None`` when NO domain carries any degradation — the
+    normalized all-clear — so binary fail/repair histories produce exactly
+    the pre-taxonomy value (equality, hash, replay all bit-identical).
+    When present it is one ``Optional[DomainDegradation]`` per domain with
+    all-clear entries normalized to ``None``. Packing (`assignments`) reads
+    only the failed counts: a straggling domain keeps its GPUs and its
+    replica; the *policies* consume `replica_degradations()`."""
 
     domain_size: int
     failed: Tuple[int, ...]
     domains_per_replica: int = 1
+    degraded: Optional[Tuple[Optional[DomainDegradation], ...]] = None
 
     def __post_init__(self):
         assert self.domain_size >= 1
         assert all(0 <= f <= self.domain_size for f in self.failed)
         assert len(self.failed) % self.domains_per_replica == 0
+        if self.degraded is not None:
+            assert len(self.degraded) == len(self.failed)
+            assert any(d is not None for d in self.degraded), (
+                "all-clear degradation must normalize to degraded=None"
+            )
+            assert all(d is None or not d.clear for d in self.degraded)
 
     @classmethod
     def pristine(cls, n_domains: int, domain_size: int,
@@ -111,7 +368,46 @@ class ClusterHealth:
 
     @property
     def healthy(self) -> bool:
-        return all(f == 0 for f in self.failed)
+        return all(f == 0 for f in self.failed) and self.degraded is None
+
+    def degradation(self, domain: int) -> DomainDegradation:
+        """The domain's degradation (the shared all-clear when none)."""
+        if self.degraded is None or self.degraded[domain] is None:
+            return CLEAR_DEGRADATION
+        return self.degraded[domain]
+
+    def domain_state(self, domain: int) -> HealthState:
+        """Dominant `HealthState` label of ``domain`` (priority per the
+        enum's docstring)."""
+        if self.failed[domain] >= self.domain_size:
+            return HealthState.FAILED
+        d = self.degradation(domain)
+        if d.sdc > 0:
+            return HealthState.SDC_SUSPECT
+        if d.straggle:
+            return HealthState.STRAGGLER
+        if d.link:
+            return HealthState.LINK_DEGRADED
+        return HealthState.HEALTHY
+
+    def domain_states(self) -> Tuple[HealthState, ...]:
+        return tuple(self.domain_state(g) for g in range(self.n_domains))
+
+    def replica_degradations(self) -> Tuple[DomainDegradation, ...]:
+        """Per-REPLICA degradation under the CURRENT packing: worst-of merge
+        over the domains each replica is packed onto. This is the view the
+        power policy, the serve retarget, and the allocator's goodput model
+        consume (a straggler anywhere in the replica gates its whole TP×PP
+        group, same reduction as the min-TP rule)."""
+        if self.degraded is None:
+            return (CLEAR_DEGRADATION,) * self.n_replicas
+        out = []
+        for a in self.assignments():
+            d = CLEAR_DEGRADATION
+            for g in a.domain_ids:
+                d = d.merge(self.degradation(int(g)))
+            out.append(d)
+        return tuple(out)
 
     def assignments(self) -> List[ReplicaAssignment]:
         """Current packing: most-failed domains into the lowest replicas."""
@@ -144,8 +440,21 @@ class ClusterHealth:
 
     def apply(self, event: LifecycleEvent) -> "ClusterHealth":
         """Health after ``event`` (site per `resolve_domain`). Failures
-        saturate at the domain size; repairs saturate at fully healthy."""
+        saturate at the domain size; repairs saturate at fully healthy.
+        Degradation events fold into the site's `DomainDegradation`
+        (clears absorb when the value is absent, mirroring surplus
+        repairs); an all-clear ledger normalizes back to ``None``."""
         domain = self.resolve_domain(event)
+        if isinstance(event, DEGRADATION_EVENTS):
+            entries = (
+                list(self.degraded) if self.degraded is not None
+                else [None] * self.n_domains
+            )
+            d = (entries[domain] or CLEAR_DEGRADATION).apply(event)
+            entries[domain] = None if d.clear else d
+            if all(e is None for e in entries):
+                return replace(self, degraded=None)
+            return replace(self, degraded=tuple(entries))
         failed = list(self.failed)
         if isinstance(event, RecoveryEvent):
             failed[domain] = max(0, failed[domain] - event.n_gpus)
@@ -171,8 +480,9 @@ def resolve_serving_domain(event: LifecycleEvent, n_domains: int) -> LifecycleEv
             "item — ROADMAP)"
         )
     if event.domain is None:
-        event = type(event)(step=event.step, domain=event.replica,
-                            n_gpus=event.n_gpus)
+        # replace() (not re-construction) so kind-specific severity fields
+        # (slowdown, bw_frac) survive the re-addressing
+        event = replace(event, domain=event.replica, replica=None)
     if not 0 <= event.domain < n_domains:
         kind = type(event).__name__
         raise ValueError(
@@ -228,6 +538,19 @@ class StagedHealth:
     @property
     def healthy(self) -> bool:
         return all(h.healthy for h in self.stages)
+
+    def replica_degradations(self) -> Tuple[DomainDegradation, ...]:
+        """Per-replica worst-of merge ACROSS stages: 1F1B runs every
+        microbatch through every stage, so a straggler in any stage gates
+        the replica — the degradation analogue of the min-over-stages TP."""
+        per_stage = [h.replica_degradations() for h in self.stages]
+        out = []
+        for r in range(self.n_replicas):
+            d = CLEAR_DEGRADATION
+            for s in range(self.pp):
+                d = d.merge(per_stage[s][r])
+            out.append(d)
+        return tuple(out)
 
     def _unstaged(self, event: LifecycleEvent) -> LifecycleEvent:
         return replace(event, stage=None)

@@ -34,7 +34,9 @@ from repro.core.policies import (
     WorkloadGeometry, boosted_operating_point, stage_slowdown,
 )
 from repro.core.power import PowerModel
-from repro.runtime.events import FailureEvent, LifecycleEvent, RecoveryEvent
+from repro.runtime.events import (
+    FailureEvent, LifecycleEvent, RecoveryEvent, SdcSuspectEvent, event_kind,
+)
 
 POLICY_NAMES = ("ntp", "ntp_pw")
 
@@ -72,34 +74,61 @@ class PowerPolicy:
             raise ValueError(f"policy {self.name!r} not in {POLICY_NAMES}")
 
     def decide(self, plan: FailurePlan, *, local_batch: int,
-               geom: Optional[WorkloadGeometry] = None) -> PowerDecision:
+               geom: Optional[WorkloadGeometry] = None,
+               degradations=None) -> PowerDecision:
+        """Per-replica operating points for ``plan``. ``degradations`` is
+        the optional per-replica `DomainDegradation` view
+        (`ClusterHealth.replica_degradations` /
+        `StagedHealth.replica_degradations`): stragglers and degraded links
+        ride the SAME NTP degrade math as GPU absence — the slow factor
+        multiplies the stage slowdown, NTP sheds batch to not straggle,
+        NTP-PW boosts the degraded domain's rack first (DESIGN.md §2.11). A
+        replica with an open SDC suspicion is QUARANTINED: batch 0, no
+        boost — the session rolls it back and it rejoins on the clear."""
         geom = geom or self.geom or WorkloadGeometry()
         geom = replace(geom, local_batch=local_batch)
         n1 = plan.n1
         ntp_lb = plan.local_batch_fraction(local_batch)
         boosts, lbs, rels = [], [], []
         for r, t in enumerate(plan.replica_tp):
-            if t == n1:
+            deg = degradations[r] if degradations is not None else None
+            if deg is not None and deg.sdc > 0:
+                # quarantined: contributes no samples and gates nothing
+                boosts.append(1.0)
+                lbs.append(0)
+                rels.append(0.0)
+                continue
+            sf = deg.slow_factor if deg is not None else 1.0
+            bw = deg.bw_frac if deg is not None else 1.0
+            if t == n1 and sf == 1.0 and bw == 1.0:
                 boosts.append(1.0)
                 lbs.append(local_batch)
                 rels.append(1.0)
                 continue
-            slow = stage_slowdown(t, n1, geom)
+            slow = stage_slowdown(t, n1, geom, slow_factor=sf, bw_frac=bw)
+            # the un-boosted share: ∝-TP packing for pure GPU absence, the
+            # full slowdown floor once degradation compounds it
+            base_bs = (int(ntp_lb[r]) if sf == 1.0 and bw == 1.0
+                       else min(int(ntp_lb[r]),
+                                int(np.floor(local_batch / slow))))
             if self.name == "ntp_pw":
                 # shared Table-1 operating point (core/policies.py); shed
                 # batch only past the rack cap, and never below the
-                # un-boosted ∝-TP share
+                # un-boosted share
                 p, eff = boosted_operating_point(slow, self.model)
                 bs = int(np.clip(np.floor(local_batch / eff),
-                                 max(1, int(ntp_lb[r])), local_batch))
+                                 max(1, base_bs), local_batch))
             else:
                 p = 1.0
                 eff = slow
-                bs = int(ntp_lb[r])
+                bs = base_bs
             boosts.append(float(p))
             lbs.append(bs)
             rels.append(eff * bs / local_batch)
-        method = "uniform" if plan.healthy else self.name
+        degraded = degradations is not None and any(
+            not d.clear for d in degradations
+        )
+        method = "uniform" if plan.healthy and not degraded else self.name
         return PowerDecision(
             method=method, boost=tuple(boosts), local_batches=tuple(lbs),
             rel_iter_time=float(max(rels)),
@@ -137,7 +166,22 @@ def schedule_from_trace(
     With ``pp > 1`` the trace's global domain ids follow the replica-major
     numbering of `StagedHealth` (domain ``g`` → stage ``g % pp``, in-stage
     domain ``g // pp``) and events carry an explicit ``stage=`` so the
-    session degrades ONLY the stage whose domain was hit."""
+    session degrades ONLY the stage whose domain was hit.
+
+    A MIXED trace (``cfg.straggler_rate_mult`` etc. — DESIGN.md §2.11) maps
+    each degradation interval to its typed onset/clear event pair carrying
+    the sampled severity: straggler → `StragglerEvent(slowdown)` /
+    `StragglerClearEvent`, link → `LinkDegradeEvent(bw_frac)` /
+    `LinkRepairEvent`, sdc → `SdcSuspectEvent` / `SdcClearEvent`. Binary
+    traces take the identical code path with kind 0 everywhere."""
+    from repro.core.failure_model import (
+        KIND_LINK, KIND_SDC, KIND_STRAGGLER,
+    )
+    from repro.runtime.events import (
+        LinkDegradeEvent, LinkRepairEvent, SdcClearEvent, SdcSuspectEvent,
+        StragglerClearEvent, StragglerEvent,
+    )
+
     ev = simulate_events(cfg)
     out: List[ScheduledEvent] = []
     for i in range(ev.n_events):
@@ -150,13 +194,32 @@ def schedule_from_trace(
             {"domain": dom} if pp == 1
             else {"domain": dom // pp, "stage": dom % pp}
         )
-        out.append(ScheduledEvent(s0, FailureEvent(step=s0, **addr)))
+        kind = int(ev.kind[i]) if ev.kind is not None else 0
+        if kind == KIND_STRAGGLER:
+            sev = {"slowdown": float(ev.severity[i])}
+            onset, clear = StragglerEvent, StragglerClearEvent
+        elif kind == KIND_LINK:
+            sev = {"bw_frac": float(ev.severity[i])}
+            onset, clear = LinkDegradeEvent, LinkRepairEvent
+        elif kind == KIND_SDC:
+            sev = {}
+            onset, clear = SdcSuspectEvent, SdcClearEvent
+        else:
+            sev = {}
+            onset, clear = FailureEvent, RecoveryEvent
+        out.append(ScheduledEvent(s0, onset(step=s0, **addr, **sev)))
         if s1 < steps:
-            out.append(ScheduledEvent(s1, RecoveryEvent(step=s1, **addr)))
-    # repairs before failures at the same step: a same-step repair can make
-    # an otherwise replica-killing failure legal (and never the reverse)
-    return sorted(out,
-                  key=lambda e: (e.step, not isinstance(e.event, RecoveryEvent)))
+            out.append(ScheduledEvent(s1, clear(step=s1, **addr, **sev)))
+    # clears/repairs before onsets at the same step: a same-step repair can
+    # make an otherwise replica-killing failure legal (and never the reverse)
+    return sorted(
+        out,
+        key=lambda e: (e.step, not isinstance(
+            e.event,
+            (RecoveryEvent, StragglerClearEvent, LinkRepairEvent,
+             SdcClearEvent),
+        )),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +278,14 @@ class TraceRunner:
         self.drain_every = max(1, drain_every)
         self._undrained: List[Dict] = []
         self._repair_debt: Dict[int, int] = {}  # domain -> GPUs never failed
+        self._ref_snapshot = None
+        has_sdc = any(
+            isinstance(e.event, SdcSuspectEvent) for e in self.schedule
+        )
+        if has_sdc and getattr(session, "quarantine", False):
+            # arm the quarantine rollback target before any step runs —
+            # without a snapshot an SdcSuspectEvent only zeroes the batch
+            session.snapshot()
         if verify:
             if session.opt_step != 0:
                 raise ValueError("verify=True needs a fresh (step-0) session")
@@ -223,6 +294,10 @@ class TraceRunner:
             )
             self._ref_params = session.canonical_params()
             self._ref_opt = session.optimizer.init(self._ref_params)
+            # the dense reference rolls back to the SAME restore point the
+            # session does (trees are replaced functionally per step, so
+            # holding the references pins step-0 state)
+            self._ref_snapshot = (self._ref_params, self._ref_opt)
 
     # ------------------------------------------------------------- internals
 
@@ -258,12 +333,13 @@ class TraceRunner:
         from repro.runtime.events import DeadReplicaError
 
         applied = []
+        tel = telemetry.get()
         while self.schedule and self.schedule[0].step <= step:
             ev = self.schedule.pop(0).event
-            with telemetry.get().span(
-                "orchestrator.event",
-                kind="repair" if isinstance(ev, RecoveryEvent) else "failure",
-            ) as sp:
+            kind = event_kind(ev)
+            if tel.enabled:
+                tel.counter("orchestrator.events", kind=kind)
+            with tel.span("orchestrator.event", kind=kind) as sp:
                 sp.set(step=step, replica=getattr(ev, "replica", None),
                        domain=getattr(ev, "domain", None),
                        stage=getattr(ev, "stage", None))
@@ -322,11 +398,23 @@ class TraceRunner:
         sp.mark("execute")
         rec = {
             "step": step,
-            "kind": "repair" if isinstance(ev, RecoveryEvent) else "failure",
+            "kind": event_kind(ev),
             "event": ev,
             "old_plan": old_plan,
             "new_plan": new_plan,
         }
+        if getattr(self.session, "last_rollback", False):
+            # the session rolled back to its snapshot (SDC quarantine);
+            # mirror the same restore point onto the dense reference so the
+            # f32 equivalence survives the discarded updates
+            rec["rollback"] = True
+            sp.set(rollback=True)
+            if self.verify:
+                self._ref_params, self._ref_opt = self._ref_snapshot
+                rec["canonical_err"] = self._check_canonical(
+                    f"step {step} (sdc quarantine rollback)"
+                )
+                sp.mark("verified")
         gp = getattr(self.session, "last_global_plan", None)
         if gp is not None:
             # allocator-driven session: keep the global verdict (spare
@@ -370,6 +458,8 @@ class TraceRunner:
             }
             if getattr(self.session.plan, "pp", 1) > 1:
                 rec["stage_tp"] = self.session.plan.stage_tp
+            if getattr(self.session, "quarantined", ()):
+                rec["quarantined"] = self.session.quarantined
             for k in ("power_boost", "rel_iter_time", "stage_rel_iter_time",
                       "policy"):
                 if k in metrics:
@@ -386,6 +476,14 @@ class TraceRunner:
                     self.session.local_batch)
                 tel.gauge("train.goodput_unboosted",
                           sum(int(b) for b in base) / full, policy=policy)
+                # goodput lost to DEGRADATION (straggle/link shed +
+                # quarantine) beyond what GPU absence alone implies — the
+                # taxonomy-attributed slice telemetry_report folds (§2.11)
+                deg_loss = max(
+                    0, sum(int(b) for b in base) - sum(rec["local_batches"])
+                ) / full
+                tel.gauge("train.goodput_degradation_loss", deg_loss,
+                          policy=policy)
             if self.verify:
                 self._drain()  # the dense-reference compare needs host values
                 rl = self._ref_step(batch)
@@ -438,16 +536,24 @@ class TraceRunner:
         return float(np.mean([sum(h["local_batches"]) / full for h in self.history]))
 
     def summary(self) -> Dict:
-        n_fail = sum(1 for t in self.transitions if t["kind"] == "failure")
-        n_rep = sum(1 for t in self.transitions if t["kind"] == "repair")
+        by_kind: Dict[str, int] = {}
+        for t in self.transitions:
+            by_kind[t["kind"]] = by_kind.get(t["kind"], 0) + 1
         return {
             "steps": len(self.history),
-            "failures": n_fail,
-            "repairs": n_rep,
-            "rejected": sum(1 for t in self.transitions
-                            if t["kind"] == "rejected"),
-            "absorbed_repairs": sum(1 for t in self.transitions
-                                    if t["kind"] == "absorbed"),
+            "failures": by_kind.get("failure", 0),
+            "repairs": by_kind.get("repair", 0),
+            "rejected": by_kind.get("rejected", 0),
+            "absorbed_repairs": by_kind.get("absorbed", 0),
+            # the full taxonomy histogram (EVENT_KIND_NAMES vocabulary);
+            # binary traces show only failure/repair here
+            "events_by_kind": {
+                k: v for k, v in by_kind.items()
+                if k not in ("rejected", "absorbed")
+            },
+            "rollbacks": sum(
+                1 for t in self.transitions if t.get("rollback")
+            ),
             "goodput": self.goodput(),
             "final_plan": self.session.plan,
         }

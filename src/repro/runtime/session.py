@@ -31,6 +31,14 @@ It runs in BOTH directions: a `FailureEvent` lowers a replica's TP, a
 `PowerPolicy` (runtime/orchestrator.py) is consulted on every transition to
 pick per-replica power boost + usable batch (NTP vs NTP-PW) and annotate
 step metrics with the boost level and predicted relative iteration time.
+
+The full health-state taxonomy (DESIGN.md §2.11) rides the same `apply()`
+path: `StragglerEvent`/`LinkDegradeEvent` leave the TP plan alone but
+reprice the policy decision (batch shrink / boost) through the degradation
+ledger; `SdcSuspectEvent` quarantines the replica (batch 0) and — when a
+`snapshot()` restore point exists — rolls params+optimizer back to it
+(`rollback()`, flagged in ``session.last_rollback``); each `*Clear`/
+`*Repair` inverse unwinds its onset exactly.
 """
 from __future__ import annotations
 
@@ -46,8 +54,9 @@ from repro.core.nonuniform import FailurePlan, StagedPlan, as_staged
 from repro.core.ntp_train import Mode, NTPModelConfig
 from repro.optim import AdamWConfig, Optimizer, adamw
 from repro.runtime.events import (
-    ClusterHealth, FailureEvent, LifecycleEvent, StagedHealth,
-    plan_from_health, staged_plan_from_health,
+    DEGRADATION_EVENTS, ClusterHealth, FailureEvent, LifecycleEvent,
+    SdcSuspectEvent, StagedHealth, event_kind, plan_from_health,
+    staged_plan_from_health,
 )
 
 
@@ -83,6 +92,7 @@ class NTPSession:
         microbatches: int = 1,             # 1F1B chunks per step (pp > 1)
         allocator=None,                    # cluster.GreedyAllocator (pp > 1)
         overlap: bool = False,             # overlapped bucketed sync (§2.10)
+        quarantine: bool = True,           # SDC → batch 0 + rollback (§2.11)
     ) -> "NTPSession":
         """NTP-prototype session on a (data=D, model=N1) mesh. ``health``
         and/or ``plan`` seed the failure state (default: pristine).
@@ -119,8 +129,12 @@ class NTPSession:
 
         self._overlap = coerce_overlap(overlap)
         self._decision = None
+        self._quarantine = quarantine
+        self._quarantined = ()
+        self._snapshot = None
         self.last_transition = None   # TransferStats of the latest repack
         self.last_global_plan = None  # allocator's latest GlobalPlan verdict
+        self.last_rollback = False    # latest apply() rolled back to snapshot
         d, n1 = mesh.shape["data"], mesh.shape["model"]
         if "stage" in getattr(mesh, "axis_names", ()):
             # measured submesh PP (core/pp_submesh, DESIGN.md §2.8): one
@@ -293,8 +307,12 @@ class NTPSession:
         self._decision = None
         self._stage_rel = None
         self._allocator = None
+        self._quarantine = False
+        self._quarantined = ()
+        self._snapshot = None
         self.last_transition = None
         self.last_global_plan = None
+        self.last_rollback = False
         return self
 
     # ------------------------------------------------------------- introspect
@@ -354,13 +372,30 @@ class NTPSession:
     @property
     def local_batches(self):
         """Per-replica usable samples under the current plan (the power
-        policy's decision, or the mode's default rule)."""
+        policy's decision, or the mode's default rule; quarantined replicas
+        contribute 0 — DESIGN.md §2.11)."""
         self._require_ntp("local batch accounting")
         if self._decision is not None:
             return list(self._decision.local_batches)
-        return list(
+        lbs = list(
             nt.default_local_batches(self._plan, self._mode, self._local_batch)
         )
+        for r in self._quarantined:
+            lbs[r] = 0
+        return lbs
+
+    @property
+    def quarantine(self) -> bool:
+        """Whether SDC suspicions quarantine their replica and roll back to
+        the latest `snapshot()` (DESIGN.md §2.11). Off: SDC events are
+        recorded but priced as healthy."""
+        return self._quarantine
+
+    @property
+    def quarantined(self):
+        """Replica indices currently quarantined by an open SDC suspicion
+        (empty when quarantine is off or no suspicion is open)."""
+        return tuple(self._quarantined)
 
     @property
     def power_decision(self):
@@ -497,12 +532,12 @@ class NTPSession:
         exactly (the Perfetto trace carries the same numbers the tests
         assert against)."""
         self._require_ntp("lifecycle replanning")
-        from repro.runtime.events import RecoveryEvent
 
         tel = telemetry.get()
+        self.last_rollback = False
         with tel.span(
             "session.transition",
-            kind="repair" if isinstance(event, RecoveryEvent) else "failure",
+            kind=event_kind(event),
             pp=self._pp,
         ) as sp:
             new_health = self._health.apply(event)
@@ -514,6 +549,25 @@ class NTPSession:
             self._events.append(event)
             self._health = new_health
             if new_plan == self._plan:
+                if isinstance(event, DEGRADATION_EVENTS):
+                    # the TP plan is untouched (degradation never removes a
+                    # GPU) but the decision surface moved: batches shrink on
+                    # straggle/link, SDC quarantines, boosts re-aim
+                    before = tuple(self.local_batches)
+                    old_mode = self._mode
+                    if self._mode is Mode.UNIFORM and not new_health.healthy:
+                        self._mode = Mode.NTP
+                    self._decide()
+                    if (isinstance(event, SdcSuspectEvent)
+                            and self._quarantine
+                            and self._snapshot is not None):
+                        self.rollback()
+                    if (self._mode is not old_mode
+                            or tuple(self.local_batches) != before):
+                        self._build_step()
+                    sp.set(changed=False, degraded=True,
+                           rollback=self.last_rollback)
+                    return self._plan
                 sp.set(changed=False)
                 return self._plan
 
@@ -532,6 +586,9 @@ class NTPSession:
             if self._mode is Mode.UNIFORM and not new_plan.healthy:
                 self._mode = Mode.NTP  # uniform degrades into NTP, not death
             self._decide()
+            if (isinstance(event, SdcSuspectEvent) and self._quarantine
+                    and self._snapshot is not None):
+                self.rollback()
             self._build_step()
             return new_plan
 
@@ -561,6 +618,38 @@ class NTPSession:
         self._params = nt.pack_params(self._cfg, tree["params"], self._plan)
         self._opt = self._pack_opt(tree["opt"])
         return step if step is not None else self.opt_step
+
+    def snapshot(self) -> None:
+        """Capture an in-memory canonical restore point — params AND
+        optimizer state in the same layout `save` writes, minus the file.
+        `rollback()` repacks it into whatever plan is live at rollback time,
+        so the snapshot survives any number of fail/repair transitions in
+        between (DESIGN.md §2.11: the quarantine rollback target)."""
+        self._require_ntp("SDC rollback snapshots")
+        self._snapshot = {
+            "params": self.canonical_params(),
+            "opt": self._canonical_opt(),
+        }
+
+    def rollback(self) -> int:
+        """Restore the latest `snapshot()` into the CURRENT plan's packing —
+        the checkpoint-free analogue of `restore`, used when an SDC
+        suspicion quarantines a replica and its recent updates are
+        untrusted. Returns the restored optimizer step. `apply()` invokes
+        this automatically on `SdcSuspectEvent` when quarantine is on and a
+        snapshot exists; ``session.last_rollback`` records that it fired."""
+        self._require_ntp("SDC rollback snapshots")
+        if self._snapshot is None:
+            raise RuntimeError(
+                "no restore point: call session.snapshot() before relying "
+                "on SDC rollback"
+            )
+        self._params = nt.pack_params(
+            self._cfg, self._snapshot["params"], self._plan
+        )
+        self._opt = self._pack_opt(self._snapshot["opt"])
+        self.last_rollback = True
+        return self.opt_step
 
     # ---------------------------------------------------------------- private
 
@@ -595,15 +684,42 @@ class NTPSession:
             return gp.staged_plan
         return staged_plan_from_health(health, spares=self._spares)
 
+    def _replica_degradations(self):
+        """Per-replica merged degradation ledgers of the current health, or
+        None when the health carries none — the binary fail/repair path then
+        passes ``degradations=None`` everywhere and every decision stays
+        bit-identical to the pre-taxonomy sessions. SDC entries are masked
+        out when quarantine is off (the operator opted out of trusting the
+        detector), so only straggle/link pricing remains."""
+        h = self._health
+        if isinstance(h, StagedHealth):
+            if all(st.degraded is None for st in h.stages):
+                return None
+        elif h.degraded is None:
+            return None
+        degs = h.replica_degradations()
+        if not self._quarantine and any(d.sdc for d in degs):
+            from dataclasses import replace
+
+            degs = tuple(replace(d, sdc=0) for d in degs)
+        return degs
+
     def _decide(self) -> None:
         """Consult the PowerPolicy (if any) for the current plan. Geometry is
         derived from the live model: attention quantizes at kv-group (unit)
         granularity. A staged plan decides on its `effective` (slowest-stage)
         reduction and additionally predicts per-stage relative iteration
-        times for the step metrics."""
+        times for the step metrics. The health's degradation ledgers ride
+        along (§2.11): stragglers/links reprice the slowdown, open SDC
+        suspicions quarantine their replica (batch 0)."""
         from repro.core.policies import WorkloadGeometry
 
         self._stage_rel = None
+        degs = self._replica_degradations()
+        self._quarantined = (
+            tuple(r for r, dg in enumerate(degs) if dg.sdc > 0)
+            if degs is not None else ()
+        )
         eff_plan = self._plan.effective if self._pp > 1 else self._plan
         geom = (self._policy.geom if self._policy is not None else None) or \
             WorkloadGeometry(
@@ -613,7 +729,8 @@ class NTPSession:
             self._decision = None
         else:
             self._decision = self._policy.decide(
-                eff_plan, local_batch=self._local_batch, geom=geom
+                eff_plan, local_batch=self._local_batch, geom=geom,
+                degradations=degs,
             )
         if self._pp > 1:
             from repro.core.policies import staged_rel_iter_times
@@ -625,24 +742,36 @@ class NTPSession:
                 power = self._policy.model
             else:
                 boosts = None
-                lbs = tuple(int(b) for b in nt.default_local_batches(
+                lbs = [int(b) for b in nt.default_local_batches(
                     eff_plan, self._mode, self._local_batch
-                ))
+                )]
+                for r in self._quarantined:
+                    lbs[r] = 0
+                lbs = tuple(lbs)
                 power = PowerModel()
+            if degs is not None:
+                slow_factors = tuple(dg.slow_factor for dg in degs)
+                bw_fracs = tuple(dg.bw_frac for dg in degs)
+            else:
+                slow_factors = bw_fracs = None
             self._stage_rel = staged_rel_iter_times(
                 self._plan.stage_tp, self._plan.n1, geom,
                 local_batches=lbs, local_batch=self._local_batch,
                 boosts=boosts, power=power,
+                slow_factors=slow_factors, bw_fracs=bw_fracs,
             )
 
     def _build_step(self) -> None:
+        if self._decision is not None:
+            lbs = self._decision.local_batches
+        elif self._quarantined:
+            lbs = tuple(self.local_batches)
+        else:
+            lbs = None  # the builder's default rule — binary path unchanged
         self._step_fn = nt.make_ntp_train_step(
             self._cfg, self._plan, self._mesh, mode=self._mode,
             local_batch=self._local_batch, optimizer=self._optimizer,
-            local_batches=(
-                None if self._decision is None
-                else self._decision.local_batches
-            ),
+            local_batches=lbs,
             microbatches=self._microbatches,
             overlap=self._overlap,
         )

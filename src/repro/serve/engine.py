@@ -56,17 +56,12 @@ def validate_serve_cfg(cfg: ArchConfig) -> set:
             f"serve engine supports kinds {DECODER_KINDS}; "
             f"{cfg.arch_id} has kinds {sorted(kinds)}"
         )
-    if cfg.encoder is not None and kinds & set(RECURRENT_KINDS):
-        # attention-only enc-dec (whisper) serves through failover: the
-        # encoder K/V banked at prefill (ek/ev, its own enc_kv_head
-        # partition unit) reshards with the rest of the cache. Recurrent
-        # enc-dec would need the cross bank threaded through the
-        # token-by-token recurrent prefill — open item.
-        raise ValueError(
-            f"enc-dec serving is attention-only for now; {cfg.arch_id} "
-            f"mixes recurrent kinds {sorted(kinds & set(RECURRENT_KINDS))} "
-            "with cross-attention"
-        )
+    # enc-dec serves through failover for EVERY decoder kind: the encoder
+    # K/V banked at the first prefill call (ek/ev, its own enc_kv_head
+    # partition unit) reshards with the rest of the cache; recurrent
+    # configs bank it on the length-1 prefill that seeds the
+    # token-by-token teacher-forced admit, and every later decode step
+    # reads the bank (models/attention.attn_apply).
     return kinds
 
 
@@ -179,6 +174,7 @@ class ServeEngine:
             self._unit_resolver(path)
         self.last_reshard = {}
         self.dead = False
+        self.draining = False                # SDC quarantine: no new admits
         self.rel_speed = 1.0                 # tokens per wall tick (<= 1)
         self.power_boost = 1.0
         self._credit = 0.0
@@ -221,7 +217,8 @@ class ServeEngine:
         return max(1, (self.slots * self._tp) // self.n1)
 
     def can_admit(self) -> bool:
-        return (not self.dead) and self.n_active < self.capacity
+        return ((not self.dead) and (not self.draining)
+                and self.n_active < self.capacity)
 
     @property
     def in_flight(self) -> List[Request]:
@@ -267,9 +264,12 @@ class ServeEngine:
             # recurrent state accumulates over EVERY prefilled position, so
             # pad tokens are not inert — feed the prompt token-by-token
             # (prefill of length 1, then teacher-forced decode): exactly the
-            # recurrent update semantics, with length-stable jit programs
+            # recurrent update semantics, with length-stable jit programs.
+            # The length-1 prefill also banks the encoder K/V (enc-dec):
+            # the teacher-forced decode steps then read the bank.
             logits, cache1 = self._prefill(
-                self.params, jnp.asarray(toks[:1][None]), cache1
+                self.params, jnp.asarray(toks[:1][None]), cache1,
+                enc_input=enc,
             )
             last_logits, pos = logits[0, 0], 1
             for t in toks[1:]:

@@ -191,16 +191,33 @@ def replica_serve_speed(
     *,
     geom: WorkloadGeometry = SERVE_GEOM,
     power: PowerModel = PowerModel(),
+    slow_factor: float = 1.0,
+    bw_frac: float = 1.0,
 ) -> Tuple[float, float]:
     """(relative decode rate, power boost) of one serving replica whose
-    weakest scale-up domain has ``tp`` of ``n1`` GPUs surviving."""
+    weakest scale-up domain has ``tp`` of ``n1`` GPUs surviving.
+
+    ``slow_factor``/``bw_frac`` fold the domain's degradation ledger in
+    (DESIGN.md §2.11). A degraded-but-complete replica is SLOWED, never
+    dropped — even under the ``drop`` policy, which only reforms on actual
+    GPU loss (there is nothing to reform when all GPUs are present);
+    ``ntp_pw`` boosts the degradation away up to the rack cap."""
     if tp <= 0:
         return 0.0, 1.0
+    from repro.core.policies import degradation_slowdown
+
     if tp >= n1:
-        return 1.0, 1.0
+        dm = degradation_slowdown(slow_factor, bw_frac, geom)
+        if dm == 1.0:
+            return 1.0, 1.0
+        if method == "ntp_pw":
+            p, eff = boosted_operating_point(dm, power)
+            return 1.0 / eff, p
+        return 1.0 / dm, 1.0
     if method == "drop":
         return 0.0, 1.0
-    slow = stage_slowdown(tp, n1, geom)
+    slow = stage_slowdown(tp, n1, geom,
+                          slow_factor=slow_factor, bw_frac=bw_frac)
     if method == "ntp":
         return 1.0 / slow, 1.0
     if method == "ntp_pw":
@@ -259,8 +276,10 @@ def serving_goodput_trace(
     out: Dict[str, Dict[str, List[float]]] = {
         m: {"goodput": [], "slo_attainment": []} for m in methods
     }
-    for t in times:
-        counts = ev.failed_counts_at(t, n_dom, trace_cfg.domain_size)
+    # one arrival-sorted scan over the whole trace instead of an
+    # O(events) rescan per sample — bit-identical counts (§2.11)
+    all_counts = ev.failed_counts_scan(times, n_dom, trace_cfg.domain_size)
+    for counts in all_counts:
         for m in methods:
             g, a = _cluster_point(
                 counts, spec, m, slo_slowdown=slo_slowdown, geom=geom,

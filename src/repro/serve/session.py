@@ -69,6 +69,7 @@ class ServeSession:
         params=None,
         key=None,
         use_kernel: bool = False,
+        quarantine: bool = True,
     ) -> "ServeSession":
         if policy not in SERVE_POLICIES:
             raise ValueError(f"policy {policy!r} not in {SERVE_POLICIES}")
@@ -110,6 +111,7 @@ class ServeSession:
         ]
         self._events: List[LifecycleEvent] = []
         self._repair_debt: Dict[int, int] = {}   # domain -> clamp surplus
+        self._quarantine = quarantine
         self.transitions: List[Dict] = []
         return self
 
@@ -126,6 +128,11 @@ class ServeSession:
     @property
     def policy(self) -> str:
         return self._policy
+
+    @property
+    def quarantine(self) -> bool:
+        """Whether an open SDC suspicion drains its replica (§2.11)."""
+        return self._quarantine
 
     @property
     def health(self) -> ClusterHealth:
@@ -155,13 +162,17 @@ class ServeSession:
 
     # ---------------------------------------------------------------- events
 
-    def _operating_point(self, tp: int) -> Tuple[int, float, float]:
+    def _operating_point(self, tp: int, deg=None) -> Tuple[int, float, float]:
         """(engine_tp, rel_speed, power_boost) the policy assigns to a
         replica whose domain has ``tp`` surviving GPUs — the SAME ladder and
         FLOP blend the analytic model pins (`router.replica_serve_speed`);
-        only the head count is the live model's."""
+        only the head count is the live model's. ``deg`` is the domain's
+        `DomainDegradation` ledger (§2.11): stragglers / degraded links slow
+        the replica instead of dropping it."""
         speed, boost = replica_serve_speed(
-            tp, self._n1, self._policy, geom=self._geom, power=self._power
+            tp, self._n1, self._policy, geom=self._geom, power=self._power,
+            slow_factor=deg.slow_factor if deg is not None else 1.0,
+            bw_frac=deg.bw_frac if deg is not None else 1.0,
         )
         if speed == 0.0:  # tp 0, or drop policy with any failure: dead
             return 0, 0.0, 1.0
@@ -177,13 +188,24 @@ class ServeSession:
         clamped trace are absorbed against it (the serving twin of
         `orchestrator.TraceRunner`'s debt) — otherwise a fully-dead replica
         would revive while its trace still has every GPU down, inflating
-        live goodput relative to the analytic replay of the same trace."""
-        from repro.runtime.events import RecoveryEvent, resolve_serving_domain
+        live goodput relative to the analytic replay of the same trace.
+
+        Degradation events (§2.11) DRAIN-THEN-RETARGET instead of dropping:
+        the replica's TP (and with it cache layout + slot pool) never
+        changes, so nothing is preempted — its decode rate is repriced
+        through the degradation ledger, and an open SDC suspicion puts the
+        engine in ``draining`` (in-flight requests finish, no new admits,
+        the router routes around it) until the clear."""
+        from repro.runtime.events import (
+            DEGRADATION_EVENTS, RecoveryEvent, resolve_serving_domain,
+        )
 
         # domain-pinned addressing (replica= aliases domain 1:1) is
         # validated/normalized ONCE, in runtime.events
         event = resolve_serving_domain(event, self._health.n_domains)
         dom = event.domain
+        if isinstance(event, DEGRADATION_EVENTS):
+            return self._apply_degradation(event, dom)
         if isinstance(event, RecoveryEvent):
             debt = self._repair_debt.get(dom, 0)
             absorbed = min(debt, event.n_gpus)
@@ -207,16 +229,21 @@ class ServeSession:
         old_tp = self.replica_tp
         self._health = self._health.apply(event)
         self._events.append(event)
+        degs = self._health.replica_degradations()
         preempted: List[Request] = []
         tel = telemetry.get()
+        from repro.runtime.events import event_kind
+
         with tel.span(
             "serve.transition",
-            kind="repair" if isinstance(event, RecoveryEvent) else "failure",
+            kind=event_kind(event),
             policy=self._policy,
         ) as sp:
             reshard_bytes = 0
             for r, engine in enumerate(self.engines):
-                tp, speed, boost = self._operating_point(self.replica_tp[r])
+                tp, speed, boost = self._operating_point(
+                    self.replica_tp[r], degs[r]
+                )
                 if tp == engine.tp and not (engine.dead and tp > 0):
                     engine.rel_speed, engine.power_boost = speed, boost
                     continue
@@ -241,6 +268,49 @@ class ServeSession:
                               engine.rel_speed * engine.capacity,
                               replica=str(r))
         return preempted
+
+    def _apply_degradation(self, event, dom: int) -> List[Request]:
+        """Drain-then-retarget (§2.11): the TP plan, cache layout and slot
+        pool are untouched (degradation never removes a GPU), so NOTHING is
+        preempted — every live engine's decode rate is repriced through the
+        updated ledger, and an open SDC suspicion flips the engine to
+        ``draining`` until its clear. Returns [] (the `apply` contract's
+        preempted list — always empty here)."""
+        from repro.runtime.events import event_kind
+
+        self._health = self._health.apply(event)
+        self._events.append(event)
+        degs = self._health.replica_degradations()
+        tel = telemetry.get()
+        with tel.span(
+            "serve.transition", kind=event_kind(event), policy=self._policy,
+        ) as sp:
+            for r, engine in enumerate(self.engines):
+                if engine.dead:
+                    continue
+                _, speed, boost = self._operating_point(
+                    self.replica_tp[r], degs[r]
+                )
+                draining = self._quarantine and degs[r].sdc > 0
+                changed = (speed != engine.rel_speed
+                           or boost != engine.power_boost
+                           or draining != engine.draining)
+                engine.rel_speed, engine.power_boost = speed, boost
+                engine.draining = draining
+                if changed:
+                    self.transitions.append({
+                        "event": event, "replica": r, "kind": "retarget",
+                        "tp_from": engine.tp, "tp_to": engine.tp,
+                        "preempted": 0, "power_boost": boost,
+                        "rel_speed": speed, "draining": draining,
+                    })
+            sp.set(domain=dom, preempted=0)
+            if tel.enabled:
+                for r, engine in enumerate(self.engines):
+                    tel.gauge("serve.replica_rate",
+                              engine.rel_speed * engine.capacity,
+                              replica=str(r))
+        return []
 
     # ------------------------------------------------------------------ run
 

@@ -1,0 +1,132 @@
+"""Mixed health-state taxonomy lifecycle under test (ISSUE 10 acceptance):
+a scripted straggler -> link-degrade -> SDC-quarantine -> clear trace replayed
+through a live NTPSession must match the dense uniform reference to f32
+exactness at EVERY step — including the quarantine ROLLBACK, where the
+session discards its updates and repacks the canonical snapshot while the
+runner mirrors the same restore point onto the reference. 8 fake CPU devices.
+
+Phase 1: NTP policy with SGD (exact math) — stragglers and degraded links
+shed batch via the §2.11 degrade pricing, the SDC suspicion zeroes replica
+1's batch and rolls back to step 0, and each clear/repair unwinds exactly.
+Phase 2: NTP-PW with AdamW — boosts ride the degradation ledger and the
+moments survive the rollback.
+Phase 3: quarantine OFF — the same SDC event is recorded but prices as
+healthy (no batch change, no rollback).
+"""
+import numpy as np
+
+import jax
+
+from repro.core.power import PowerModel
+from repro.optim import AdamWConfig, adamw, sgd
+from repro.runtime import (
+    LinkDegradeEvent, LinkRepairEvent, NTPModelConfig, NTPSession,
+    PowerPolicy, ScheduledEvent, SdcClearEvent, SdcSuspectEvent,
+    StragglerClearEvent, StragglerEvent, TraceRunner,
+)
+
+LB, SEQ, STEPS = 4, 32, 15
+cfg = NTPModelConfig(d_model=64, n_kv_groups=4, q_per_kv=2, head_dim=16,
+                     d_ff=256, unit_rows=64, n_layers=2, vocab=128)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+
+def mixed_schedule():
+    return [
+        # replica 0 straggles 2.0x: degrade multiplier 0.85*2 + 0.15 = 1.85
+        ScheduledEvent(2, StragglerEvent(step=2, replica=0, slowdown=2.0)),
+        # replica 1's scale-up link at half bandwidth: 0.85 + 0.15/0.5 = 1.15
+        ScheduledEvent(5, LinkDegradeEvent(step=5, replica=1, bw_frac=0.5)),
+        # straggler clears — exact inverse, replica 0 back to full batch
+        ScheduledEvent(7, StragglerClearEvent(step=7, replica=0, slowdown=2.0)),
+        # SDC suspicion on replica 1: quarantine (batch 0) + rollback
+        ScheduledEvent(9, SdcSuspectEvent(step=9, replica=1)),
+        # suspicion clears — replica 1 rejoins, still link-degraded
+        ScheduledEvent(11, SdcClearEvent(step=11, replica=1)),
+        # link repaired — pristine again
+        ScheduledEvent(13, LinkRepairEvent(step=13, replica=1, bw_frac=0.5)),
+    ]
+
+
+def run_phase(name, optimizer, policy, expect_batches, atol=1e-4):
+    session = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=optimizer,
+                                key=jax.random.PRNGKey(0), power_policy=policy)
+    rng = np.random.default_rng(0)
+
+    def batch(i):
+        import jax.numpy as jnp
+        return jnp.asarray(rng.integers(0, cfg.vocab, (2 * LB, SEQ + 1)))
+
+    runner = TraceRunner(session, mixed_schedule(), verify=True, atol=atol)
+    hist = runner.run(batch, STEPS)
+
+    seen = {h["step"]: tuple(h["local_batches"]) for h in hist}
+    for step, want in expect_batches.items():
+        assert seen[step] == want, (name, step, seen[step], want)
+    # degradation never touches the TP plan — only failures do
+    assert all(h["replica_tp"] == (4, 4) for h in hist)
+    assert seen[9][1] == 0 and 9 in {
+        h["step"] for h in hist if h.get("quarantined")
+    }, "SDC suspicion must quarantine replica 1"
+    s = runner.summary()
+    assert s["rollbacks"] == 1, s
+    assert s["events_by_kind"] == {
+        "straggler": 1, "straggler_clear": 1, "link_degrade": 1,
+        "link_repair": 1, "sdc_suspect": 1, "sdc_clear": 1,
+    }, s["events_by_kind"]
+    assert s["failures"] == 0 and s["repairs"] == 0, s
+    assert session.plan.healthy and session.health.healthy
+    errs = [t["canonical_err"] for t in runner.transitions
+            if "canonical_err" in t]
+    assert errs, "the rollback must be canonically verified"
+    assert all(e < runner.param_atol for e in errs), errs
+    print(f"{name}: {len(hist)} steps, kinds "
+          f"{[(t['step'], t['kind']) for t in runner.transitions]}, "
+          f"rollbacks {s['rollbacks']}, goodput {runner.goodput():.3f}")
+    return runner
+
+
+# phase 1 — NTP policy, SGD: straggler 1.85x -> floor(4/1.85)=2 samples,
+# link 1.15x -> 3 samples, quarantine zeroes, clears restore exactly
+run_phase(
+    "phase1/sgd+ntp", sgd(0.05), PowerPolicy(name="ntp"),
+    expect_batches={0: (4, 4), 2: (2, 4), 5: (2, 3), 7: (4, 3),
+                    9: (4, 0), 11: (4, 3), 13: (4, 4)},
+)
+
+# phase 2 — NTP-PW with a 2.5x-boost rack and AdamW: the boost absorbs the
+# 1.15x link slowdown entirely (full batch kept); quarantine still wins
+pw = PowerPolicy(name="ntp_pw", model=PowerModel(max_boost=2.5))
+runner = run_phase(
+    "phase2/adamw+ntp_pw", adamw(AdamWConfig(lr=1e-2)), pw,
+    expect_batches={0: (4, 4), 9: (4, 0), 13: (4, 4)},
+)
+boosted = [h for h in runner.history
+           if tuple(h["local_batches"]) not in ((4, 4), (4, 0))
+           or (2 <= h["step"] < 13 and h["step"] not in (9, 10))]
+assert any(h["power_boost"] > 1.0 for h in runner.history
+           if 2 <= h["step"] < 13), "NTP-PW must boost degraded steps"
+
+# phase 3 — quarantine OFF: the SDC suspicion is ledger-only
+session = NTPSession.create(cfg, mesh, local_batch=LB, optimizer=sgd(0.05),
+                            key=jax.random.PRNGKey(0),
+                            power_policy=PowerPolicy(name="ntp"),
+                            quarantine=False)
+rng = np.random.default_rng(0)
+runner3 = TraceRunner(
+    session,
+    [ScheduledEvent(2, SdcSuspectEvent(step=2, replica=1)),
+     ScheduledEvent(5, SdcClearEvent(step=5, replica=1))],
+    verify=True, atol=1e-4,
+)
+import jax.numpy as jnp
+hist3 = runner3.run(
+    lambda i: jnp.asarray(rng.integers(0, cfg.vocab, (2 * LB, SEQ + 1))),
+    8,
+)
+assert all(tuple(h["local_batches"]) == (4, 4) for h in hist3), hist3
+assert runner3.summary()["rollbacks"] == 0
+assert not session.quarantine and session.quarantined == ()
+print("phase3/quarantine-off: ledger-only SDC, no rollback, full batches")
+
+print("SESSION_MIXED_LIFECYCLE_OK")

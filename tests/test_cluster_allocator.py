@@ -240,6 +240,60 @@ def test_allocator_requires_staged_health():
 
 
 # ---------------------------------------------------------------------------
+# degradation-weighted scoring (§2.11)
+
+def test_goodput_degradation_weighting():
+    """The ledger weights the score: stragglers/weak links drag their
+    replica through replica_throughput's degradation kwargs, an SDC suspect
+    prices its replica at 0, and a None/all-clear ledger is the binary
+    path bit-identically."""
+    from repro.core.policies import WorkloadGeometry, replica_throughput
+    from repro.core.power import PowerModel
+    from repro.runtime.events import DomainDegradation
+
+    gm = GoodputModel(n1=4)
+    counts = [np.array([0, 1]), np.array([0, 0])]
+    base = gm.goodput(counts)
+    assert gm.goodput(counts, None) == base
+    clear = [[None, None], [DomainDegradation(), None]]
+    assert gm.goodput(counts, clear) == base
+
+    slow = [[None, None], [DomainDegradation(straggle=(2.0,)), None]]
+    assert gm.goodput(counts, slow) < base
+    # attach the weak link to the HEALTHY domain (stage-0 packing is most-
+    # failed-first, so domain 0 pairs with the full-TP replica 1): a
+    # degraded full-TP replica is priced below 1.0
+    weak = [[DomainDegradation(link=(0.5,)), None], [None, None]]
+    assert gm.goodput(counts, weak) < base
+
+    # stage-0 packing order is most-failed-first: domain 1 (1 failed) pairs
+    # with replica 0, so a suspicion on domain 0 quarantines replica 1
+    sdc = [[DomainDegradation(sdc=1), None], [None, None]]
+    wounded = replica_throughput(3, 4, WorkloadGeometry(), "ntp",
+                                 PowerModel())
+    assert gm.goodput(counts, sdc) == pytest.approx(wounded / 2)
+
+
+def test_straggler_domain_spared_out():
+    """A zero-failure straggler domain still drags its replica; with a
+    spare in the pool the allocator evicts it outright (the stand-in is
+    pristine, so the ledger clears with the counts) and the plan prices
+    back to 1.0."""
+    from repro.runtime.events import DomainDegradation
+
+    deg = DomainDegradation(straggle=(2.0,))
+    h = StagedHealth((
+        ClusterHealth(4, (0, 0), degraded=(deg, None)),
+        ClusterHealth(4, (0, 0)),
+    ))
+    gp = GreedyAllocator(AllocatorConfig(horizon_steps=1000)).plan(
+        h, spares=1)
+    assert gp.spare_sites == ((0, 0, 0),), gp.summary()
+    assert gp.baseline_goodput < 1.0
+    assert gp.goodput == 1.0
+
+
+# ---------------------------------------------------------------------------
 # cost model: exact against the executed ledger
 
 def _cost_cfg():

@@ -66,3 +66,13 @@ def test_session_lifecycle_fail_boost_repair(run_dist):
     TP to full — with both plain-NTP/SGD and NTP-PW/AdamW policies."""
     out = run_dist("session_lifecycle.py")
     assert "SESSION_LIFECYCLE_OK" in out
+
+
+@pytest.mark.slow
+def test_session_mixed_lifecycle_taxonomy(run_dist):
+    """ISSUE 10 acceptance: a mixed straggler + link + SDC trace replayed
+    through NTPSession matches the dense reference to f32 exactness end to
+    end — including through the SDC quarantine -> canonical rollback — with
+    sgd/ntp, adamw/ntp_pw, and quarantine=off (ledger-only) phases."""
+    out = run_dist("session_mixed_lifecycle.py")
+    assert "SESSION_MIXED_LIFECYCLE_OK" in out

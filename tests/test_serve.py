@@ -185,12 +185,9 @@ def test_encdec_failover_token_equivalence():
         assert got[rid] == want[rid], (rid, got[rid], want[rid])
 
 
-def test_encdec_requires_enc_input_and_rejects_recurrent():
+def test_encdec_requires_enc_input():
     """enc-dec admission validates Request.enc_input (present + right shape,
-    message naming (enc_seq, d_model)); recurrent enc-dec stacks are still
-    rejected at engine construction with an actionable error."""
-    import dataclasses
-
+    message naming (enc_seq, d_model))."""
     from repro.configs.base import EncoderSpec
 
     cfg = _cfg(kvh=2, arch_id="serve-test-encdec2", use_rope=False,
@@ -206,12 +203,83 @@ def test_encdec_requires_enc_input_and_rejects_recurrent():
         eng.admit(Request(rid=1, prompt=np.ones(4, np.int32), max_new=2,
                           enc_input=np.zeros((8, 64), np.float32)))
 
-    cfg_rec = dataclasses.replace(
-        CFG_SSM, arch_id="serve-test-encdec-ssm",
-        encoder=EncoderSpec(n_layers=2, enc_seq=16))
-    with pytest.raises(ValueError, match="attention-only"):
-        ServeSession.create(cfg_rec, replicas=1, n1=N1, slots=2, max_len=64,
-                            prefill_len=16, key=jax.random.PRNGKey(0))
+
+def test_encdec_recurrent_failover_token_equivalence():
+    """Recurrent encoder-decoder (ISSUE 10 satellite): the cross-attention
+    K/V bank is filled on the length-1 prefill that seeds the token-by-token
+    recurrent admit, read by every teacher-forced and decode step, and
+    resharded through fail→repair with the recurrent state — greedy streams
+    must match an uninterrupted run through TP 4→3→2 and back."""
+    from repro.configs.base import EncoderSpec
+
+    cfg = ArchConfig(
+        arch_id="serve-test-encdec-rec", family="hybrid", citation="test",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128, layer_pattern=("ssm", "rglru"),
+        ssm=SSMSpec(d_state=16, head_dim=16, expand=2, d_conv=4, chunk=16),
+        rglru=RGLRUSpec(d_conv=4, block_width=16), use_rope=False,
+        tie_embeddings=True, encoder=EncoderSpec(n_layers=2, enc_seq=16),
+    )
+
+    def enc_reqs(n, rng):
+        reqs = _requests(n, rng)
+        for r in reqs:
+            r.enc_input = rng.standard_normal(
+                (cfg.encoder.enc_seq, cfg.d_model)).astype(np.float32) * 0.1
+        return reqs
+
+    events = [
+        (2, FailureEvent(domain=0)),
+        (7, FailureEvent(domain=0)),
+        (16, RecoveryEvent(domain=0)),
+        (20, RecoveryEvent(domain=0)),
+    ]
+    _, faulty = _run(cfg, events, enc_reqs(6, np.random.default_rng(3)))
+    _, ref = _run(cfg, [], enc_reqs(6, np.random.default_rng(3)))
+    got = {r.rid: list(r.generated) for r in faulty.completed}
+    want = {r.rid: list(r.generated) for r in ref.completed}
+    assert set(got) == set(want) and len(got) == 6
+    for rid in want:
+        assert got[rid] == want[rid], (rid, got[rid], want[rid])
+
+
+def test_degradation_drain_then_retarget():
+    """§2.11 serving: straggler/link events reprice a replica IN PLACE —
+    same TP, same cache, nothing preempted — and an SDC suspicion drains it
+    (in-flight finishes, no new admits) until the clear. A degraded-but-
+    complete replica is slowed, never dropped, even under ``drop``."""
+    from repro.runtime import (
+        LinkDegradeEvent, LinkRepairEvent, SdcClearEvent, SdcSuspectEvent,
+        StragglerClearEvent, StragglerEvent,
+    )
+
+    session = ServeSession.create(
+        CFG_FULL, replicas=2, n1=N1, slots=2, max_len=64, prefill_len=16,
+        policy="ntp", key=jax.random.PRNGKey(0))
+    e0, e1 = session.engines
+    pre = session.apply(StragglerEvent(replica=0, slowdown=2.0))
+    assert pre == [] and e0.tp == N1 and not e0.dead
+    assert 0.0 < e0.rel_speed < 1.0 and e1.rel_speed == 1.0
+    assert session.transitions[-1]["kind"] == "retarget"
+    slowed = e0.rel_speed
+    pre = session.apply(LinkDegradeEvent(replica=0, bw_frac=0.5))
+    assert pre == [] and e0.rel_speed < slowed  # compounding degradation
+    session.apply(StragglerClearEvent(replica=0, slowdown=2.0))
+    session.apply(LinkRepairEvent(replica=0, bw_frac=0.5))
+    assert e0.rel_speed == 1.0  # exact per-kind inverses
+    session.apply(SdcSuspectEvent(replica=0))
+    assert e0.draining and not e0.can_admit() and e1.can_admit()
+    assert not e0.dead and e0.rel_speed > 0.0  # drains, doesn't die
+    session.apply(SdcClearEvent(replica=0))
+    assert not e0.draining and e0.can_admit()
+    assert session.health.healthy
+
+    drop = ServeSession.create(
+        CFG_FULL, replicas=1, n1=N1, slots=2, max_len=64, prefill_len=16,
+        policy="drop", key=jax.random.PRNGKey(0))
+    drop.apply(StragglerEvent(replica=0, slowdown=2.0))
+    assert not drop.engines[0].dead
+    assert 0.0 < drop.engines[0].rel_speed < 1.0
 
 
 def test_tokens_match_raw_dense_model():

@@ -1,0 +1,273 @@
+"""Health-state taxonomy properties (ISSUE 10 satellite, DESIGN.md §2.11).
+
+Host-side — the taxonomy algebra is pure python/numpy. Three contracts:
+
+* **per-kind inverse identity** — ``apply(e) ∘ apply(inverse(e))`` restores
+  the exact `ClusterHealth`, for every event kind, from pristine AND from
+  already-degraded bases (multiset semantics make float severities exact);
+* **twin-model equivalence** — random mixed-kind interleavings folded
+  through `ClusterHealth.apply` match a naive per-domain dict twin field
+  for field (failed counts, straggle/link multisets, effective factors,
+  suspicion counters) after EVERY event;
+* **rollback bit-exactness** — the session's SDC response (pack the
+  canonical snapshot into the CURRENT plan) restores canonical content
+  bit-exactly on every replica, including across a plan change between
+  snapshot and rollback.
+
+Deterministic seeded sweeps ALWAYS run; hypothesis (dev extra) fuzzes the
+same properties when installed. The live-session trajectory — quarantine,
+rollback against the dense reference, policy repricing — runs in
+tests/dist/session_mixed_lifecycle.py.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import ntp_train as nt
+from repro.runtime import (
+    ClusterHealth, FailureEvent, LinkDegradeEvent, LinkRepairEvent,
+    RecoveryEvent, SdcClearEvent, SdcSuspectEvent, StragglerClearEvent,
+    StragglerEvent, event_kind, inverse, plan_from_health,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # dev extra absent: the sweep still runs
+    HAVE_HYPOTHESIS = False
+
+D, N1 = 2, 4
+
+
+def _tiny_cfg():
+    return nt.NTPModelConfig(d_model=32, n_kv_groups=4, q_per_kv=1,
+                             head_dim=16, d_ff=128, unit_rows=32,
+                             n_layers=1, vocab=64)
+
+
+# ---------------------------------------------------------------------------
+# per-kind inverse identity
+
+EVERY_KIND = [
+    FailureEvent(domain=0),
+    StragglerEvent(domain=0, slowdown=1.7),
+    LinkDegradeEvent(domain=0, bw_frac=0.55),
+    SdcSuspectEvent(domain=0),
+]
+
+BASES = [
+    (),                                          # pristine
+    (FailureEvent(domain=1),),                   # binary damage elsewhere
+    (StragglerEvent(domain=0, slowdown=2.5),     # stacked on the SAME site
+     LinkDegradeEvent(domain=0, bw_frac=0.3),
+     SdcSuspectEvent(domain=1)),
+]
+
+
+@pytest.mark.parametrize("ev", EVERY_KIND, ids=event_kind)
+@pytest.mark.parametrize("base", BASES, ids=["pristine", "failed", "degraded"])
+def test_apply_inverse_is_identity_per_kind(ev, base):
+    h0 = ClusterHealth.pristine(D, N1)
+    for b in base:
+        h0 = h0.apply(b)
+    h1 = h0.apply(ev).apply(inverse(ev))
+    assert h1 == h0, (ev, h0, h1)
+
+
+def test_inverse_round_trips_every_kind():
+    for ev in EVERY_KIND:
+        assert inverse(inverse(ev)) == ev
+
+
+# ---------------------------------------------------------------------------
+# twin-model equivalence: ClusterHealth.apply vs a naive per-domain dict
+
+def _naive_pristine():
+    return [{"failed": 0, "straggle": [], "link": [], "sdc": 0}
+            for _ in range(D)]
+
+
+def _draw_event(rng, naive):
+    """One random VALID event: clears only retract severities actually
+    outstanding in the twin (the clear carries the exact value its degrade
+    pushed — the runtime's contract), repairs only touch failed sites.
+    Mutates the twin; returns the runtime event."""
+    d = int(rng.integers(0, D))
+    nd = naive[d]
+    choices = ["fail", "straggler", "link", "sdc"]
+    if nd["failed"] > 0:
+        choices.append("repair")
+    if nd["straggle"]:
+        choices.append("straggler_clear")
+    if nd["link"]:
+        choices.append("link_repair")
+    if nd["sdc"] > 0:
+        choices.append("sdc_clear")
+    c = choices[int(rng.integers(0, len(choices)))]
+    if c == "fail":
+        if nd["failed"] >= N1:
+            return None
+        nd["failed"] += 1
+        return FailureEvent(domain=d)
+    if c == "repair":
+        nd["failed"] -= 1
+        return RecoveryEvent(domain=d)
+    if c == "straggler":
+        s = float(np.round(1.0 + rng.uniform(0.05, 3.0), 3))
+        nd["straggle"].append(s)
+        return StragglerEvent(domain=d, slowdown=s)
+    if c == "straggler_clear":
+        s = nd["straggle"].pop(int(rng.integers(0, len(nd["straggle"]))))
+        return StragglerClearEvent(domain=d, slowdown=s)
+    if c == "link":
+        b = float(np.round(rng.uniform(0.05, 0.95), 3))
+        nd["link"].append(b)
+        return LinkDegradeEvent(domain=d, bw_frac=b)
+    if c == "link_repair":
+        b = nd["link"].pop(int(rng.integers(0, len(nd["link"]))))
+        return LinkRepairEvent(domain=d, bw_frac=b)
+    if c == "sdc":
+        nd["sdc"] += 1
+        return SdcSuspectEvent(domain=d)
+    nd["sdc"] -= 1
+    return SdcClearEvent(domain=d)
+
+
+def _assert_twins_match(h, naive):
+    for d, nd in enumerate(naive):
+        dg = None if h.degraded is None else h.degraded[d]
+        assert h.failed[d] == nd["failed"], (d, h, nd)
+        straggle = () if dg is None else dg.straggle
+        link = () if dg is None else dg.link
+        sdc = 0 if dg is None else dg.sdc
+        assert list(straggle) == sorted(nd["straggle"]), (d, h, nd)
+        assert list(link) == sorted(nd["link"]), (d, h, nd)
+        assert sdc == nd["sdc"], (d, h, nd)
+        # effective factors are worst-of
+        slow = dg.slow_factor if dg is not None else 1.0
+        bw = dg.bw_frac if dg is not None else 1.0
+        assert slow == (max(nd["straggle"]) if nd["straggle"] else 1.0)
+        assert bw == (min(nd["link"]) if nd["link"] else 1.0)
+    if all(nd["failed"] == 0 and not nd["straggle"] and not nd["link"]
+           and nd["sdc"] == 0 for nd in naive):
+        # all-clear must normalize back to the BINARY representation
+        assert h == ClusterHealth.pristine(D, N1), h
+        assert h.degraded is None, h
+
+
+def test_random_mixed_interleavings_match_naive_twin():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        h = ClusterHealth.pristine(D, N1)
+        naive = _naive_pristine()
+        for _ in range(60):
+            ev = _draw_event(rng, naive)
+            if ev is None:
+                continue
+            h = h.apply(ev)
+            _assert_twins_match(h, naive)
+
+
+def test_unwinding_every_degradation_restores_pristine():
+    """Apply a random mixed burst, then clear it all in a DIFFERENT order:
+    the health must come back bit-identical to pristine (degraded=None, the
+    binary fast path re-engages)."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        h = ClusterHealth.pristine(D, N1)
+        applied = []
+        for _ in range(16):
+            d = int(rng.integers(0, D))
+            k = int(rng.integers(0, 3))
+            if k == 0:
+                ev = StragglerEvent(
+                    domain=d,
+                    slowdown=float(np.round(1.0 + rng.uniform(0.05, 2.0), 3)))
+            elif k == 1:
+                ev = LinkDegradeEvent(
+                    domain=d,
+                    bw_frac=float(np.round(rng.uniform(0.05, 0.95), 3)))
+            else:
+                ev = SdcSuspectEvent(domain=d)
+            h = h.apply(ev)
+            applied.append(ev)
+        order = rng.permutation(len(applied))
+        for i in order:
+            h = h.apply(inverse(applied[int(i)]))
+        assert h == ClusterHealth.pristine(D, N1), h
+        assert h.degraded is None
+
+
+# ---------------------------------------------------------------------------
+# SDC rollback: pack the snapshot into the CURRENT plan, bit-exact
+
+def test_sdc_rollback_restores_canonical_bit_exact():
+    """`NTPSession.rollback` = `pack_params(snapshot, current_plan)`. Pack
+    canonical weights, take the snapshot, corrupt the packed buffers
+    (simulated SDC), move through a plan change, roll back: every replica
+    must recover canonical content bit-exactly."""
+    cfg = _tiny_cfg()
+    canon = nt.init_canonical(cfg, jax.random.PRNGKey(0))
+    plan0 = plan_from_health(ClusterHealth.pristine(D, N1))
+    packed = nt.pack_params(cfg, canon, plan0)
+    snapshot = jax.tree.map(lambda x: np.asarray(x).copy(), canon)
+
+    # corruption strikes, then a failure repacks the (corrupt) buffers
+    packed = jax.tree.map(lambda x: x + 1.0, packed)
+    h1 = ClusterHealth.pristine(D, N1).apply(FailureEvent(domain=0))
+    plan1 = plan_from_health(h1)
+    packed = nt.repack_params(cfg, packed, plan0, plan1)
+
+    rolled = nt.pack_params(cfg, snapshot, plan1)
+    for r in range(plan1.d):
+        back = nt.unpack_params(cfg, rolled, plan1, replica=r)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(canon)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"replica {r} not bit-exact after rollback")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz (dev extra): same properties, arbitrary interleavings
+
+if HAVE_HYPOTHESIS:
+    SEVERITY = st.floats(1.05, 4.0, allow_nan=False).map(
+        lambda s: float(np.float32(s)))
+    BW = st.floats(0.05, 0.95, allow_nan=False).map(
+        lambda b: float(np.float32(min(b, 0.95))))
+    ANY_EVENT = st.one_of(
+        st.builds(lambda d: FailureEvent(domain=d), st.integers(0, D - 1)),
+        st.builds(lambda d, s: StragglerEvent(domain=d, slowdown=s),
+                  st.integers(0, D - 1), SEVERITY),
+        st.builds(lambda d, b: LinkDegradeEvent(domain=d, bw_frac=b),
+                  st.integers(0, D - 1), BW),
+        st.builds(lambda d: SdcSuspectEvent(domain=d),
+                  st.integers(0, D - 1)),
+    )
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(ANY_EVENT, max_size=12), ANY_EVENT)
+    def test_hypothesis_inverse_identity(base, ev):
+        h0 = ClusterHealth.pristine(D, N1)
+        for b in base:
+            if isinstance(b, FailureEvent) and h0.failed[b.domain] >= N1:
+                continue
+            h0 = h0.apply(b)
+        if isinstance(ev, FailureEvent) and h0.failed[ev.domain] >= N1:
+            return
+        assert h0.apply(ev).apply(inverse(ev)) == h0
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(ANY_EVENT, max_size=16))
+    def test_hypothesis_unwind_restores_pristine(events):
+        h = ClusterHealth.pristine(D, N1)
+        applied = []
+        for ev in events:
+            if isinstance(ev, FailureEvent) and h.failed[ev.domain] >= N1:
+                continue
+            h = h.apply(ev)
+            applied.append(ev)
+        for ev in reversed(applied):
+            h = h.apply(inverse(ev))
+        assert h == ClusterHealth.pristine(D, N1)
+        assert h.degraded is None

@@ -21,8 +21,8 @@ import numpy as np
 import pytest
 
 from repro.launch.telemetry_report import (
-    GOODPUT_KEYS, SYNC_SPAN_KEYS, goodput_table, kernel_table, report,
-    serve_table, sync_table, transition_table,
+    GOODPUT_KEYS, SYNC_SPAN_KEYS, events_table, goodput_table, kernel_table,
+    report, serve_table, sync_table, transition_table,
 )
 from repro.telemetry import JsonlSink, MemorySink, Recorder
 
@@ -105,6 +105,39 @@ def test_goodput_no_transitions():
     row = goodput_table(list(sink.events()))["none"]
     assert row["reshard_frac"] == 0.0 and row["bubble_frac"] == 0.0
     assert row["compute_frac"] == pytest.approx(1.0)
+
+
+def test_lifecycle_events_and_degradation_fold():
+    """§2.11: per-kind totals fold from the `orchestrator.events` counter
+    (SDC rollbacks from the transition spans' rollback attr), and the
+    goodput rows carry the mean per-step degradation_loss slice. A
+    binary-era stream folds to zero loss and no lifecycle table."""
+    clock = StreamClock()
+    sink = MemorySink()
+    rec = Recorder(sinks=[sink], clock=clock)
+    for kind, n in (("failure", 2), ("straggler", 3), ("sdc_suspect", 1)):
+        for _ in range(n):
+            rec.counter("orchestrator.events", kind=kind)
+    with rec.span("session.transition", kind="sdc_suspect") as sp:
+        clock.t += 0.01
+        sp.set(changed=False, degraded=True, rollback=True)
+    for loss in (0.0, 0.25, 0.25):
+        with rec.span("session.step"):
+            clock.t += 0.1
+        rec.gauge("train.goodput", 1.0 - loss, policy="ntp")
+        rec.gauge("train.goodput_degradation_loss", loss, policy="ntp")
+    events = list(sink.events())
+    assert events_table(events) == {
+        "failure": 2, "straggler": 3, "sdc_suspect": 1, "sdc_rollback": 1,
+    }
+    row = goodput_table(events)["ntp"]
+    assert row["degradation_loss"] == pytest.approx(np.mean([0.0, 0.25, 0.25]))
+    assert report(events)["lifecycle_events"] == events_table(events)
+
+    _, sink2, _ = build_stream()
+    binary = list(sink2.events())
+    assert "lifecycle_events" not in report(binary)
+    assert goodput_table(binary)["ntp_pw"]["degradation_loss"] == 0.0
 
 
 def test_sync_table_and_exposed_comm_frac():
